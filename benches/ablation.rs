@@ -1,0 +1,74 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//!
+//! 1. partitioner choice (block / greedy / bisect) → O_MPI, O_DLB, edge cut
+//! 2. BFS level reordering on/off → matrix bandwidth, DLB feasibility
+//! 3. s_m recursion cap → group count and window size under tight C
+//!
+//! Run: `cargo bench --bench ablation`
+
+use dlb_mpk::distsim::DistMatrix;
+use dlb_mpk::graph::levels::bfs_reorder;
+use dlb_mpk::matrix::{gen, rcm};
+use dlb_mpk::mpk::dlb::{self, DlbOptions};
+use dlb_mpk::mpk::overheads;
+use dlb_mpk::partition::{partition, Method, PartitionStats};
+use dlb_mpk::race::group_levels;
+use dlb_mpk::util::rng::Rng;
+
+fn main() {
+    let fast = std::env::var("DLB_BENCH_FAST").is_ok();
+    let scale = if fast { 0.05 } else { 0.4 };
+
+    // --- 1. partitioner ablation
+    let e = gen::suite().into_iter().find(|e| e.name == "Serena-s").unwrap();
+    let a = (e.build)(scale);
+    println!("# Ablation 1: partitioner choice (Serena-s, {} rows, 8 ranks, p_m = 4)", a.n_rows());
+    println!("{:<8} {:>10} {:>9} {:>9} {:>9} {:>9}", "method", "edgecut", "rows_imb", "nnz_imb", "O_MPI", "O_DLB");
+    for m in [Method::Block, Method::GreedyGrow, Method::RecursiveBisect] {
+        let p = partition(&a, 8, m);
+        let st = PartitionStats::compute(&a, &p);
+        let d = DistMatrix::build(&a, &p);
+        let o_dlb = overheads::dlb_overhead(&d, 4, &DlbOptions { cache_bytes: 8 << 20, s_m: 50 });
+        println!(
+            "{:<8} {:>10} {:>9.3} {:>9.3} {:>9.4} {:>9.4}",
+            format!("{m:?}").chars().take(8).collect::<String>(),
+            st.edgecut, st.row_imbalance, st.nnz_imbalance, d.mpi_overhead(), o_dlb
+        );
+    }
+
+    // --- 2. reordering ablation: shuffled matrix vs BFS vs RCM+BFS
+    println!("\n# Ablation 2: reordering (shuffled stencil 128x128)");
+    let base = gen::stencil_2d_5pt(128, 128);
+    let mut perm: Vec<usize> = (0..base.n_rows()).collect();
+    Rng::new(9).shuffle(&mut perm);
+    let shuffled = base.permute_symmetric(&perm);
+    let (bfs_b, lv) = bfs_reorder(&shuffled, 0);
+    let (rcm_b, _) = rcm::rcm_reorder(&shuffled);
+    let (rcm_bfs, lv2) = bfs_reorder(&rcm_b, 0);
+    println!("{:<14} {:>10} {:>8}", "ordering", "bandwidth", "levels");
+    println!("{:<14} {:>10} {:>8}", "shuffled", shuffled.bandwidth(), "-");
+    println!("{:<14} {:>10} {:>8}", "BFS", bfs_b.bandwidth(), lv.n_levels());
+    println!("{:<14} {:>10} {:>8}", "RCM", rcm_b.bandwidth(), "-");
+    println!("{:<14} {:>10} {:>8}", "RCM+BFS", rcm_bfs.bandwidth(), lv2.n_levels());
+
+    // --- 3. s_m recursion cap under a tight budget
+    println!("\n# Ablation 3: s_m recursion cap (tight C = 256 KiB, p_m = 4)");
+    let (b, lv) = bfs_reorder(&gen::stencil_2d_5pt(256, 256), 0);
+    println!("{:<6} {:>8} {:>14}", "s_m", "groups", "max_window_B");
+    for s_m in [1usize, 2, 8, 50, 200] {
+        let g = group_levels(&b, &lv, 4, 256 << 10, s_m);
+        println!("{:<6} {:>8} {:>14}", s_m, g.n_groups(), g.max_window_bytes(5));
+    }
+
+    // --- 4. DLB preprocessing amortization
+    println!("\n# Ablation 4: preprocess vs per-(p,C) plan cost");
+    let part = partition(&a, 4, Method::RecursiveBisect);
+    let d = DistMatrix::build(&a, &part);
+    let t0 = std::time::Instant::now();
+    let pre = dlb::preprocess(&d);
+    let t_pre = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let _p = dlb::plan_from_pre(&pre, 8, &DlbOptions { cache_bytes: 8 << 20, s_m: 50 });
+    let t_plan = t1.elapsed().as_secs_f64();
+    println!("preprocess (BFS+permute): {t_pre:.3}s; plan_from_pre (group+schedule): {t_plan:.4}s");
+}

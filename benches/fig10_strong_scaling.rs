@@ -1,0 +1,84 @@
+//! Figure 10 reproduction: strong scaling of DLB-MPK — performance, parallel
+//! efficiency, and the two overheads (O_MPI, O_DLB) as functions of the
+//! rank count, for a Lynx-like (good structure) and an nlpkkt-like (bad
+//! structure) matrix at p ∈ {4, 6}.
+//!
+//! Multi-rank timing = max-rank measured compute + α-β comm model
+//! (DESIGN.md §Substitutions). Expected shape: O_MPI constant in p, O_DLB
+//! grows with p and ranks; nlpkkt's worse structure costs more.
+//!
+//! Run: `cargo bench --bench fig10_strong_scaling`
+
+use dlb_mpk::distsim::costmodel::halo_traffic;
+use dlb_mpk::distsim::{CommCostModel, DistMatrix};
+use dlb_mpk::matrix::gen;
+use dlb_mpk::mpk::dlb::{self, DlbOptions};
+use dlb_mpk::mpk::{overheads, NativeBackend};
+use dlb_mpk::partition::{partition, Method};
+use dlb_mpk::perf::{median_time, roofline};
+
+fn main() {
+    let fast = std::env::var("DLB_BENCH_FAST").is_ok();
+    let reps = if fast { 1 } else { 3 };
+    let matrices: Vec<(&str, dlb_mpk::matrix::CsrMatrix)> = if fast {
+        vec![
+            ("Lynx-s", gen::stencil_3d_7pt(96, 32, 32)),
+            ("nlpkkt-s", gen::stencil_3d_27pt(24, 24, 24)),
+        ]
+    } else {
+        vec![
+            ("Lynx-s", gen::stencil_3d_7pt(640, 40, 40)),
+            ("nlpkkt-s", gen::stencil_3d_27pt(56, 56, 56)),
+        ]
+    };
+    let ranks: Vec<usize> = if fast { vec![1, 2, 4] } else { vec![1, 2, 4, 8, 16, 32] };
+    let model = CommCostModel::default();
+
+    for (name, a) in &matrices {
+        println!(
+            "\n# Figure 10: strong scaling, {name} ({} rows, {} MiB CRS)",
+            a.n_rows(),
+            a.crs_bytes() >> 20
+        );
+        for &p_m in &[4usize, 6] {
+            println!("\n## p_m = {p_m}");
+            println!(
+                "{:>5} {:>9} {:>9} {:>10} {:>10} {:>8}",
+                "ranks", "O_MPI", "O_DLB", "Gflop/s", "T_model_s", "eff"
+            );
+            let mut t1 = 0.0;
+            for &np in &ranks {
+                let part = partition(a, np, Method::RecursiveBisect);
+                let dist = DistMatrix::build(a, &part);
+                let opts = DlbOptions { cache_bytes: 8 << 20, s_m: 50 };
+                let plan = dlb::plan(&dist, p_m, &opts);
+                let o_dlb = overheads::dlb_overhead_from_plan(&plan);
+                let x = vec![1.0; a.n_rows()];
+                let mut flops = 0usize;
+                let t_seq = median_time(reps, || {
+                    let r = dlb::execute(&plan, &x, &mut NativeBackend);
+                    flops = r.flop_nnz;
+                });
+                // critical-path compute: busiest rank's nnz share of the
+                // sequential wall time
+                let max_nnz = plan.dist.ranks.iter().map(|r| r.a.nnz()).max().unwrap() as f64;
+                let t_comp = t_seq.median_s * max_nnz / a.nnz() as f64;
+                let t_comm = p_m as f64 * model.round_time(&halo_traffic(&plan.dist.ranks));
+                let t_model = t_comp + t_comm;
+                if np == 1 {
+                    t1 = t_model;
+                }
+                println!(
+                    "{np:>5} {:>9.4} {:>9.4} {:>10.2} {:>10.4} {:>8.2}",
+                    dist.mpi_overhead(),
+                    o_dlb,
+                    roofline::gflops(flops, t_model),
+                    t_model,
+                    t1 / (np as f64 * t_model)
+                );
+            }
+        }
+    }
+    println!("\n(paper Fig. 10: ε ≥ 1 intra-node from added cache; O_MPI identical");
+    println!(" for p = 4 and 6; O_DLB larger at p = 6; nlpkkt structure worse)");
+}

@@ -1,0 +1,72 @@
+//! Figure 12 reproduction: weak scaling of Chebyshev time propagation with
+//! TRAD vs DLB-MPK on the Anderson ladder (Table 5), ~constant matrix bytes
+//! per domain.
+//!
+//! Reported per domain count: per-domain performance (Gflop/s) of both
+//! engines, DLB speedup, and the two overheads. Expected shape (paper §7):
+//! speedup sustained as domains grow (paper: 2–4×).
+//!
+//! Run: `cargo bench --bench fig12_weak_scaling`
+
+use dlb_mpk::apps::chebyshev::{wave_packet, ChebyshevConfig, ChebyshevPropagator, Engine};
+use dlb_mpk::distsim::DistMatrix;
+use dlb_mpk::matrix::anderson::{anderson, weak_scaling_configs};
+use dlb_mpk::mpk::dlb::DlbOptions;
+use dlb_mpk::mpk::{overheads, NativeBackend};
+use dlb_mpk::partition::{partition, Method};
+use dlb_mpk::perf::median_time;
+use std::f64::consts::FRAC_PI_2;
+
+fn main() {
+    let fast = std::env::var("DLB_BENCH_FAST").is_ok();
+    let base_l = if fast { 24 } else { 160 };
+    let domains: Vec<usize> = if fast { vec![1, 2] } else { vec![1, 2, 4] };
+    let reps = if fast { 1 } else { 3 };
+    let p_m = 8;
+    let cfgs = weak_scaling_configs(base_l, &domains, 1.0, 7);
+
+    println!("# Figure 12: weak scaling, Chebyshev + Anderson (base L = {base_l}, p_m = {p_m})");
+    println!(
+        "{:>7} {:>10} {:>8} {:>11} {:>11} {:>8} {:>8} {:>8}",
+        "domains", "rows", "MiB/dom", "T_trad_s", "T_dlb_s", "speedup", "O_MPI", "O_DLB"
+    );
+    let mut speedups = Vec::new();
+    for (d, cfg) in domains.iter().zip(&cfgs) {
+        let h = anderson(cfg);
+        let part = partition(&h, *d, Method::RecursiveBisect);
+        let dist = DistMatrix::build(&h, &part);
+        let o_mpi = dist.mpi_overhead();
+        let o_dlb = overheads::dlb_overhead(&dist, p_m, &DlbOptions { cache_bytes: 8 << 20, s_m: 50 });
+        let psi0 = wave_packet(cfg, base_l as f64 / 6.0, [FRAC_PI_2, 0.0, 0.0]);
+
+        let mut times = [0.0f64; 2];
+        for (i, engine) in [Engine::Trad, Engine::Dlb].into_iter().enumerate() {
+            let ccfg = ChebyshevConfig {
+                dt: 0.5,
+                p_m,
+                engine,
+                dlb: DlbOptions { cache_bytes: 8 << 20, s_m: 50 },
+            };
+            let mut prop = ChebyshevPropagator::new(&h, &dist, ccfg);
+            let t = median_time(reps, || {
+                let _ = prop.step(&psi0, &mut NativeBackend);
+            });
+            times[i] = t.median_s;
+        }
+        let speedup = times[0] / times[1];
+        speedups.push(speedup);
+        println!(
+            "{:>7} {:>10} {:>8} {:>11.4} {:>11.4} {:>8.2} {:>8.4} {:>8.4}",
+            d,
+            h.n_rows(),
+            (h.crs_bytes() >> 20) / d,
+            times[0],
+            times[1],
+            speedup,
+            o_mpi,
+            o_dlb
+        );
+    }
+    let geo = (speedups.iter().map(|s| s.ln()).sum::<f64>() / speedups.len() as f64).exp();
+    println!("\ngeomean speedup {geo:.2}x (paper: 2.8× at 1–2 domains, 2–4× multi-node)");
+}

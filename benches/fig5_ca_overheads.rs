@@ -1,0 +1,46 @@
+//! Figure 5 reproduction: CA-MPK overheads vs power for a Serena-like
+//! matrix partitioned over 10 and 15 ranks.
+//!
+//! Left subplot:  additional halo elements relative to N_r.
+//! Right subplot: recomputed elements relative to N_nz.
+//! Both must grow with p and with the rank count; DLB's corresponding
+//! overheads are zero by construction (printed for contrast).
+//!
+//! Run: `cargo bench --bench fig5_ca_overheads`
+
+use dlb_mpk::distsim::DistMatrix;
+use dlb_mpk::matrix::gen;
+use dlb_mpk::mpk::ca::ca_plan;
+use dlb_mpk::partition::{partition, Method};
+
+fn main() {
+    let fast = std::env::var("DLB_BENCH_FAST").is_ok();
+    let scale = if fast { 0.05 } else { 0.4 };
+    let entry = gen::suite().into_iter().find(|e| e.name == "Serena-s").unwrap();
+    let a = (entry.build)(scale);
+    println!(
+        "# Figure 5: CA-MPK overheads, Serena-s ({} rows, {} nnz), METIS-substitute partitioner",
+        a.n_rows(),
+        a.nnz()
+    );
+    let powers: Vec<usize> = (1..=12).collect();
+    for np in [10usize, 15] {
+        let part = partition(&a, np, Method::RecursiveBisect);
+        let dist = DistMatrix::build(&a, &part);
+        println!("\n## {np} ranks (TRAD/DLB halo = {} elements, O_MPI = {:.4})", dist.total_halo(), dist.mpi_overhead());
+        println!("{:>4} {:>16} {:>14} {:>16} {:>14}", "p", "extra_halo", "Δhalo/N_r", "redundant_nnz", "redo/N_nz");
+        for &p in &powers {
+            let plan = ca_plan(&a, &dist, p);
+            let ov = &plan.overheads;
+            println!(
+                "{:>4} {:>16} {:>14.4} {:>16} {:>14.4}",
+                p,
+                ov.extra_halo,
+                ov.rel_extra_halo(a.n_rows()),
+                ov.redundant_nnz,
+                ov.rel_redundant(a.nnz())
+            );
+        }
+    }
+    println!("\n(DLB-MPK: extra halo = 0, redundant = 0 for every p — paper §5)");
+}

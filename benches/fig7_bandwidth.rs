@@ -1,0 +1,43 @@
+//! Figure 7 reproduction: load-only bandwidth vs. working-set size — the
+//! likwid-bench `load` analogue that locates this host's cache plateaus.
+//!
+//! Output: one row per working-set size, plus estimated cache / memory
+//! bandwidths and the residual-caching boundary used to interpret Fig. 9.
+//!
+//! Run: `cargo bench --bench fig7_bandwidth`  (DLB_BENCH_FAST=1 for CI)
+
+use dlb_mpk::perf::bandwidth::load_bandwidth;
+
+fn main() {
+    let fast = std::env::var("DLB_BENCH_FAST").is_ok();
+    let max = if fast { 256usize << 20 } else { 1usize << 30 };
+    println!("# Figure 7: load-only bandwidth ladder (this host)");
+    println!("{:>14} {:>10}", "bytes", "GB/s");
+    let mut points = Vec::new();
+    let mut b = 32usize << 10;
+    while b <= max {
+        let p = load_bandwidth(b, if b > 64 << 20 { 0.25 } else { 0.1 });
+        println!("{:>14} {:>10.2}", p.bytes, p.gb_per_s);
+        points.push(p);
+        b *= 2;
+    }
+    // cache bandwidth: max over small sets; memory: min over large sets
+    let cache_bw = points.iter().map(|p| p.gb_per_s).fold(f64::MIN, f64::max);
+    let mem_bw = points
+        .iter()
+        .rev()
+        .take(2)
+        .map(|p| p.gb_per_s)
+        .fold(f64::INFINITY, f64::min);
+    // residual-cache boundary: largest size still well above memory speed
+    let boundary = points
+        .iter()
+        .filter(|p| p.gb_per_s >= 1.5 * mem_bw)
+        .map(|p| p.bytes)
+        .max()
+        .unwrap_or(max);
+    println!("\ncache-plateau bandwidth ≈ {cache_bw:.1} GB/s");
+    println!("memory bandwidth        ≈ {mem_bw:.1} GB/s");
+    println!("residual-cache boundary ≈ {} MiB", boundary >> 20);
+    println!("(paper Fig. 7: ICL 452/180, SPR 826/241, MIL 2642/179 GB/s L3/mem)");
+}

@@ -1,0 +1,72 @@
+//! Figure 8 reproduction: parameter study scanning the power p and the
+//! cache budget C for DLB-MPK on an ML_Geer-like matrix.
+//!
+//! Expected shape (paper §6.2): a ridge of good performance at moderate
+//! (p, C); degradation for C beyond the physical cache share; p = 1 flat in
+//! C (no reuse to block for).
+//!
+//! Run: `cargo bench --bench fig8_param_study`
+
+use dlb_mpk::distsim::DistMatrix;
+use dlb_mpk::matrix::gen;
+use dlb_mpk::mpk::dlb::{self, DlbOptions};
+use dlb_mpk::mpk::NativeBackend;
+use dlb_mpk::partition::{partition, Method};
+use dlb_mpk::perf::{median_time, roofline};
+
+fn main() {
+    let fast = std::env::var("DLB_BENCH_FAST").is_ok();
+    let entry = gen::suite().into_iter().find(|e| e.name == "ML_Geer-s").unwrap();
+    // in-memory size on this host (see fig9 notes): ~340 MiB
+    let scale = if fast { 0.1 } else { entry.scale_for_bytes(340 << 20) };
+    let a = (entry.build)(scale);
+    println!(
+        "# Figure 8: p × C parameter study, ML_Geer-s ({} rows, {} MiB CRS)",
+        a.n_rows(),
+        a.crs_bytes() >> 20
+    );
+    // one rank per "ccNUMA domain"; this host has one domain
+    let part = partition(&a, 1, Method::Block);
+    let dist = DistMatrix::build(&a, &part);
+    let x = vec![1.0; a.n_rows()];
+    let reps = if fast { 1 } else { 3 };
+
+    let p_values: Vec<usize> = if fast { vec![1, 2, 4] } else { vec![1, 2, 3, 4, 5, 6, 7, 8, 10] };
+    let c_values_mib: Vec<usize> = if fast { vec![4, 16] } else { vec![2, 4, 8, 16, 32, 64] };
+    let pre = dlb::preprocess(&dist);
+    let mut ws = dlb_mpk::mpk::dlb::Workspace::default();
+
+    print!("{:>4}", "p\\C");
+    for c in &c_values_mib {
+        print!(" {:>9}", format!("{c}MiB"));
+    }
+    println!("   (Gflop/s per SpMV)");
+    let mut best = (0.0f64, 0usize, 0usize);
+    for &p in &p_values {
+        print!("{:>4}", p);
+        for &c in &c_values_mib {
+            let opts = DlbOptions { cache_bytes: c << 20, s_m: 50 };
+            let plan = dlb::plan_from_pre(&pre, p, &opts);
+            let mut flops = 0usize;
+            let t = median_time(reps, || {
+                let r = dlb::execute_recurrence_with(
+                    &plan, &x, None, dlb_mpk::mpk::dlb::Recurrence::Power,
+                    &mut NativeBackend, &mut ws,
+                );
+                flops = r.flop_nnz;
+            });
+            let gf = roofline::gflops(flops, t.median_s);
+            if gf > best.0 {
+                best = (gf, p, c);
+            }
+            print!(" {:>9.2}", gf);
+        }
+        println!();
+    }
+    println!(
+        "\nbest: {:.2} Gflop/s at p = {}, C = {} MiB (paper ICL: optimum at p = 7, C = 50 MiB)",
+        best.0, best.1, best.2
+    );
+    let roof = roofline::spmv_roofline_gflops(7.8, a.nnzr());
+    println!("memory roofline (Eq. 4, b_s = 7.8 GB/s): {roof:.2} Gflop/s");
+}

@@ -1,0 +1,76 @@
+//! Kernel microbenchmarks: native SpMV rate vs the Eq.-4 roofline, the halo
+//! exchange, and DLB plan construction cost — the per-layer numbers behind
+//! EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --bench kernels`
+
+use dlb_mpk::distsim::{exchange_halo, CommStats, DistMatrix};
+use dlb_mpk::matrix::gen;
+use dlb_mpk::mpk::dlb::{self, DlbOptions};
+use dlb_mpk::partition::{partition, Method};
+use dlb_mpk::perf::{median_time, roofline};
+
+fn main() {
+    let fast = std::env::var("DLB_BENCH_FAST").is_ok();
+    let scale = if fast { 0.1 } else { 1.0 };
+    let reps = if fast { 2 } else { 5 };
+
+    // --- SpMV rate vs roofline, one cache-resident + one in-memory matrix
+    println!("# kernel: native CRS SpMV vs roofline (mem bw 7.8 GB/s)");
+    println!("{:<22} {:>8} {:>9} {:>9} {:>6}", "matrix", "MiB", "Gflop/s", "roofline", "frac");
+    for (name, a) in [
+        ("stencil3d 7pt (small)", gen::stencil_3d_7pt(48, 48, 48)),
+        ("banded nnzr=46", gen::random_banded_sym((160_000 as f64 * scale) as usize * 8, 46, 2000, 5)),
+    ] {
+        let x = vec![1.0; a.n_rows()];
+        let mut y = vec![0.0; a.n_rows()];
+        let t = median_time(reps, || a.spmv(&x, &mut y));
+        let gf = roofline::gflops(a.nnz(), t.median_s);
+        let roof = roofline::spmv_roofline_gflops(7.8, a.nnzr());
+        println!(
+            "{:<22} {:>8} {:>9.2} {:>9.2} {:>6.2}",
+            name,
+            a.crs_bytes() >> 20,
+            gf,
+            roof,
+            gf / roof
+        );
+    }
+
+    // --- halo exchange throughput
+    println!("\n# kernel: halo exchange (simulated MPI copy path)");
+    let a = gen::stencil_3d_7pt(96, 48, 48);
+    let part = partition(&a, 8, Method::RecursiveBisect);
+    let dist = DistMatrix::build(&a, &part);
+    let mut xs = dist.scatter(&vec![1.0; a.n_rows()]);
+    let mut stats = CommStats::default();
+    let t = median_time(reps * 10, || {
+        exchange_halo(&dist.ranks, &mut xs, &mut stats);
+    });
+    let bytes_per_round = dist.total_halo() * 8;
+    println!(
+        "{} ranks, {} halo B/round: {:.1} µs/round ({:.2} GB/s)",
+        dist.n_ranks(),
+        bytes_per_round,
+        t.median_s * 1e6,
+        bytes_per_round as f64 / t.median_s / 1e9
+    );
+
+    // --- DLB plan construction (preprocessing cost, amortized in practice)
+    println!("\n# kernel: DLB plan construction");
+    let t = median_time(reps.min(3), || {
+        let _ = dlb::plan(&dist, 6, &DlbOptions { cache_bytes: 8 << 20, s_m: 50 });
+    });
+    println!(
+        "plan({} rows, 8 ranks, p_m=6): {:.3}s ({:.1}x one TRAD p_m=6 run)",
+        a.n_rows(),
+        t.median_s,
+        {
+            let x = vec![1.0; a.n_rows()];
+            let tt = median_time(reps.min(3), || {
+                let _ = dlb_mpk::mpk::trad_mpk(&dist, &x, 6, &mut dlb_mpk::mpk::NativeBackend);
+            });
+            t.median_s / tt.median_s
+        }
+    );
+}

@@ -1,0 +1,33 @@
+//! Table 4 reproduction: the benchmark-matrix suite — synthetic analogues of
+//! the paper's SuiteSparse/Lynx selection (DESIGN.md §Substitutions), with
+//! the paper's N_nzr for comparison.
+//!
+//! Run: `cargo bench --bench tab4_suite`  (DLB_BENCH_FAST=1 shrinks scale)
+
+use dlb_mpk::matrix::gen::suite;
+use dlb_mpk::util::mib;
+
+fn main() {
+    let fast = std::env::var("DLB_BENCH_FAST").is_ok();
+    let scale = if fast { 0.05 } else { 1.0 };
+    println!("# Table 4 (synthetic analogues, scale {scale})");
+    println!(
+        "{:<16} {:>10} {:>12} {:>7} {:>11} {:>9} {:>10}",
+        "matrix", "N_r", "N_nz", "N_nzr", "paper_nzr", "CRS MiB", "bandwidth"
+    );
+    for e in suite() {
+        let a = (e.build)(scale);
+        println!(
+            "{:<16} {:>10} {:>12} {:>7.1} {:>11.1} {:>9} {:>10}",
+            e.name,
+            a.n_rows(),
+            a.nnz(),
+            a.nnzr(),
+            e.paper_nnzr,
+            mib(a.crs_bytes()),
+            a.bandwidth(),
+        );
+    }
+    println!("\n(paper sizes 423 MiB – 22.6 GiB on cluster nodes; scaled to this");
+    println!(" host so the suite straddles its ~32 MiB effective LLC share)");
+}

@@ -1,0 +1,34 @@
+//! Table 5 reproduction: the Anderson weak-scaling matrix ladder
+//! (per-domain CRS size held constant by doubling one dimension per step,
+//! innermost x last).
+//!
+//! Run: `cargo bench --bench tab5_anderson`
+
+use dlb_mpk::matrix::anderson::{anderson, weak_scaling_configs};
+use dlb_mpk::util::mib;
+
+fn main() {
+    let fast = std::env::var("DLB_BENCH_FAST").is_ok();
+    let base_l = if fast { 16 } else { 40 };
+    let domains: Vec<usize> = if fast { vec![1, 2, 4] } else { vec![1, 2, 4, 8, 16] };
+    let cfgs = weak_scaling_configs(base_l, &domains, 1.0, 42);
+    println!("# Table 5 (Anderson ladder, base L = {base_l}; paper base L = 160)");
+    println!(
+        "{:>8} {:>16} {:>12} {:>14} {:>7} {:>9} {:>12}",
+        "domains", "(Lx,Ly,Lz)", "N_r", "N_nz", "N_nzr", "CRS MiB", "MiB/domain"
+    );
+    for (d, cfg) in domains.iter().zip(&cfgs) {
+        let a = anderson(cfg);
+        println!(
+            "{:>8} {:>16} {:>12} {:>14} {:>7.1} {:>9} {:>12}",
+            d,
+            format!("({},{},{})", cfg.lx, cfg.ly, cfg.lz),
+            a.n_rows(),
+            a.nnz(),
+            a.nnzr(),
+            mib(a.crs_bytes()),
+            mib(a.crs_bytes()) / d,
+        );
+    }
+    println!("\n(paper: 342 MiB per ccNUMA domain held constant up to 64 domains)");
+}

@@ -1,0 +1,148 @@
+"""AOT exporter: lower the Layer-2 graphs to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); rust loads the text via
+``HloModuleProto::from_text_file``.  HLO text — NOT ``.serialize()`` — is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids that
+the crate's xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+Every artifact is recorded in ``artifacts/manifest.json`` with its operand
+shapes/dtypes so the rust runtime can validate inputs before execution.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts            # default set
+    python -m compile.aot --out-dir ../artifacts \
+        --spmv rows=512,width=9,xlen=640                    # extra variant
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+F64 = jnp.float64
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO module -> XlaComputation -> HLO text (id-safe round trip)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_spmv(rows: int, width: int, xlen: int, panel_rows: int):
+    return jax.jit(
+        lambda v, c, x: model.spmv(v, c, x, panel_rows=panel_rows)
+    ).lower(_spec((rows, width), F64), _spec((rows, width), I32), _spec((xlen,), F64))
+
+
+def lower_mpk(rows: int, width: int, p_m: int, panel_rows: int):
+    return jax.jit(
+        lambda v, c, x: model.mpk(v, c, x, p_m=p_m, panel_rows=panel_rows)
+    ).lower(_spec((rows, width), F64), _spec((rows, width), I32), _spec((rows,), F64))
+
+
+def lower_cheb_step(rows: int, width: int, xlen: int, panel_rows: int):
+    vec = _spec((xlen,), F64)
+    return jax.jit(
+        lambda v, c, a, b, p, q: model.chebyshev_step(v, c, a, b, p, q, panel_rows=panel_rows)
+    ).lower(_spec((rows, width), F64), _spec((rows, width), I32), vec, vec, vec, vec)
+
+
+def lower_axpby(n: int):
+    s = _spec((), F64)
+    vec = _spec((n,), F64)
+    return jax.jit(model.vec_axpby).lower(s, s, vec, vec)
+
+
+def _panel(rows: int) -> int:
+    """Largest power-of-two panel <= 256 dividing rows."""
+    p = 256
+    while p > 1 and rows % p != 0:
+        p //= 2
+    return p
+
+
+def default_artifacts():
+    """(name, builder) pairs for the stock artifact set.
+
+    * demo_*      — 64x64 2D 5-point stencil (quickstart / integration tests)
+    * and32_*     — 32^3 Anderson lattice, ELL width 7 (Fig. 11 E2E driver)
+    """
+    arts = []
+    # Quickstart demo: whole-matrix SpMV + local MPK on a 4096-row chunk.
+    arts.append(("demo_spmv_4096x5", lambda: lower_spmv(4096, 5, 4096, 256),
+                 dict(kind="spmv", rows=4096, width=5, xlen=4096)))
+    arts.append(("demo_mpk_p4_4096x5", lambda: lower_mpk(4096, 5, 4, 256),
+                 dict(kind="mpk", rows=4096, width=5, xlen=4096, p_m=4)))
+    # Anderson 32^3 lattice for the end-to-end Chebyshev driver.
+    n = 32 * 32 * 32
+    arts.append((f"and32_spmv_{n}x7", lambda: lower_spmv(n, 7, n, 256),
+                 dict(kind="spmv", rows=n, width=7, xlen=n)))
+    arts.append((f"and32_cheb_{n}x7", lambda: lower_cheb_step(n, 7, n, 256),
+                 dict(kind="cheb_step", rows=n, width=7, xlen=n)))
+    arts.append((f"axpby_{n}", lambda: lower_axpby(n),
+                 dict(kind="axpby", xlen=n)))
+    return arts
+
+
+def parse_kv(spec: str) -> dict:
+    return {k: int(v) for k, v in (item.split("=") for item in spec.split(","))}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--spmv", action="append", default=[],
+                    help="extra spmv artifact: rows=R,width=W,xlen=N")
+    ap.add_argument("--cheb", action="append", default=[],
+                    help="extra cheb_step artifact: rows=R,width=W,xlen=N")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    arts = default_artifacts()
+    for spec in args.spmv:
+        kv = parse_kv(spec)
+        r, w, n = kv["rows"], kv["width"], kv["xlen"]
+        arts.append((f"spmv_{r}x{w}_x{n}",
+                     lambda r=r, w=w, n=n: lower_spmv(r, w, n, _panel(r)),
+                     dict(kind="spmv", rows=r, width=w, xlen=n)))
+    for spec in args.cheb:
+        kv = parse_kv(spec)
+        r, w, n = kv["rows"], kv["width"], kv["xlen"]
+        arts.append((f"cheb_{r}x{w}_x{n}",
+                     lambda r=r, w=w, n=n: lower_cheb_step(r, w, n, _panel(r)),
+                     dict(kind="cheb_step", rows=r, width=w, xlen=n)))
+
+    manifest = {}
+    for name, build, meta in arts:
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = to_hlo_text(build())
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = dict(meta, file=f"{name}.hlo.txt", chars=len(text))
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out_dir}/manifest.json ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Layer-1 Pallas kernel: fused z = a*x + b*y (the MPK/Chebyshev vector op).
+
+Scalars ``a``/``b`` arrive as rank-0 operands so one AOT artifact serves every
+coefficient (Bessel weights change every Chebyshev term; re-lowering per
+coefficient would defeat AOT).  The grid streams tile-sized slabs; on real
+hardware this is a pure VPU stream kernel, here ``interpret=True``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 1024
+
+
+def _axpby_kernel(a_ref, b_ref, x_ref, y_ref, z_ref):
+    z_ref[...] = a_ref[0] * x_ref[...] + b_ref[0] * y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def axpby(a, b, x, y, *, tile: int = DEFAULT_TILE):
+    """z = a*x + b*y elementwise; ``len(x)`` must be divisible by ``tile``."""
+    (n,) = x.shape
+    if n % tile != 0:
+        raise ValueError(f"n={n} not divisible by tile={tile}")
+    a = jnp.asarray(a, x.dtype).reshape((1,))
+    b = jnp.asarray(b, x.dtype).reshape((1,))
+    return pl.pallas_call(
+        _axpby_kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(a, b, x, y)

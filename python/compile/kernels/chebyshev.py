@@ -1,0 +1,47 @@
+"""Layer-1/2 fused Chebyshev recurrence step (paper Eq. 6).
+
+One step of the Chebyshev time-propagation recurrence for a *real* sparse
+Hamiltonian H acting on a complex state carried as (re, im) planes:
+
+    v_{k+1} = 2 * (H @ v_k) - v_{k-1}
+
+Both component SpMVs reuse the Pallas ELL row-panel kernel; the 2*h - v_prev
+combine is a fused axpby.  Lowered as ONE HLO module so XLA fuses the
+gather/multiply/reduce with the update, and the rust hot loop makes a single
+PJRT call per recurrence step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .axpby import axpby
+from .spmv_ell import spmv_ell
+
+
+@functools.partial(jax.jit, static_argnames=("panel_rows",))
+def cheb_step(vals, cols, v_re, v_im, vprev_re, vprev_im, *, panel_rows: int = 256):
+    """Returns (vnext_re, vnext_im) = 2*H@v - vprev on both planes.
+
+    ``v_*`` may carry a halo tail (len N >= R); the recurrence only updates
+    the R local rows, so ``vprev_*`` is sliced to match the SpMV output.
+    """
+    h_re = spmv_ell(vals, cols, v_re, panel_rows=panel_rows)
+    h_im = spmv_ell(vals, cols, v_im, panel_rows=panel_rows)
+    rows = vals.shape[0]
+    two = vals.dtype.type(2.0)
+    neg1 = vals.dtype.type(-1.0)
+    tile = _pick_tile(rows)
+    vnext_re = axpby(two, neg1, h_re, vprev_re[:rows], tile=tile)
+    vnext_im = axpby(two, neg1, h_im, vprev_im[:rows], tile=tile)
+    return vnext_re, vnext_im
+
+
+def _pick_tile(n: int) -> int:
+    """Largest power-of-two tile <= 1024 dividing n (n is pre-padded)."""
+    t = 1024
+    while t > 1 and n % t != 0:
+        t //= 2
+    return t

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the build-time correctness bar).
+
+These are deliberately boring: no Pallas, no tiling, just the textbook
+definition of each operation.  pytest asserts the Pallas kernels (and the
+lowered HLO artifacts, transitively) match these to tight tolerances.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spmv_ell_ref(vals, cols, x):
+    """y[r] = sum_w vals[r, w] * x[cols[r, w]] — padded-ELL SpMV."""
+    return jnp.sum(vals * x[cols], axis=1)
+
+
+def axpby_ref(a, b, x, y):
+    return a * x + b * y
+
+
+def cheb_step_ref(vals, cols, v_re, v_im, vprev_re, vprev_im):
+    """(2*H@v - vprev) on both complex planes (vprev sliced to local rows)."""
+    rows = vals.shape[0]
+    h_re = spmv_ell_ref(vals, cols, v_re)
+    h_im = spmv_ell_ref(vals, cols, v_im)
+    return 2.0 * h_re - vprev_re[:rows], 2.0 * h_im - vprev_im[:rows]
+
+
+def csr_to_ell(rowptr, colidx, values, n_cols=None):
+    """Reference CRS→padded-ELL conversion (mirrors rust matrix::ell).
+
+    Returns (vals[R, W], cols[R, W]) with W = max row length, padded with
+    (0.0, 0).  Used by tests to cross-check the rust converter's contract.
+    """
+    import numpy as np
+
+    rowptr = np.asarray(rowptr)
+    n_rows = len(rowptr) - 1
+    lens = rowptr[1:] - rowptr[:-1]
+    width = int(lens.max()) if n_rows else 0
+    vals = np.zeros((n_rows, max(width, 1)), dtype=np.float64)
+    cols = np.zeros((n_rows, max(width, 1)), dtype=np.int32)
+    for r in range(n_rows):
+        lo, hi = rowptr[r], rowptr[r + 1]
+        vals[r, : hi - lo] = values[lo:hi]
+        cols[r, : hi - lo] = colidx[lo:hi]
+    return vals, cols

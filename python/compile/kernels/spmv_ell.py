@@ -1,0 +1,67 @@
+"""Layer-1 Pallas kernel: row-panel SpMV over a padded ELL matrix chunk.
+
+The MPK hot spot is the sparse matrix-vector product ``y[r] = sum_j A[r,j] x[j]``.
+For the AOT path the matrix chunk is stored in padded ELLPACK layout:
+
+* ``vals  : f64[R, W]`` — non-zero values, rows padded with ``0.0``
+* ``cols  : i32[R, W]`` — column indices, rows padded with ``0``
+  (padding is harmless: ``0.0 * x[0] == 0.0``)
+* ``x     : f64[N]``    — the (local + halo) right-hand-side vector
+
+The Pallas grid walks row panels of ``TR`` rows.  On a real TPU the panel of
+``vals``/``cols`` streams HBM→VMEM via the BlockSpec index map while ``x``
+stays resident (memory space ANY); the gather + multiply + row-reduce runs on
+the VPU.  ``interpret=True`` is mandatory on this CPU testbed — real TPU
+lowering would emit a Mosaic custom-call that the CPU PJRT plugin cannot run.
+
+Hardware adaptation note (DESIGN.md §Hardware-Adaptation): the paper's
+AVX-512 CRS inner loop becomes a dense (TR, W) panel contraction, which is
+the TPU-friendly way to express short-row SpMV (ELL width W plays the role
+of the SIMD-friendly inner dimension).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default row-panel height. 256 rows x ELL width 7 in f64 is a ~14 KiB
+# panel — comfortably VMEM-sized with double buffering on real hardware.
+DEFAULT_PANEL_ROWS = 256
+
+
+def _spmv_ell_kernel(x_ref, vals_ref, cols_ref, y_ref):
+    """One row panel: gather x at cols, multiply by vals, reduce rows."""
+    vals = vals_ref[...]  # (TR, W)
+    cols = cols_ref[...]  # (TR, W) int32
+    xg = x_ref[cols]  # gathered RHS, (TR, W)
+    y_ref[...] = jnp.sum(vals * xg, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("panel_rows",))
+def spmv_ell(vals, cols, x, *, panel_rows: int = DEFAULT_PANEL_ROWS):
+    """y = A @ x with A in padded-ELL layout, as a Pallas row-panel kernel.
+
+    ``vals.shape[0]`` must be divisible by ``panel_rows`` (the AOT exporter
+    pads chunks; see aot.py).
+    """
+    rows, width = vals.shape
+    if rows % panel_rows != 0:
+        raise ValueError(f"rows={rows} not divisible by panel_rows={panel_rows}")
+    grid = (rows // panel_rows,)
+    return pl.pallas_call(
+        _spmv_ell_kernel,
+        grid=grid,
+        in_specs=[
+            # x: whole vector visible to every panel (gather source).
+            pl.BlockSpec(x.shape, lambda i: (0,) * x.ndim),
+            pl.BlockSpec((panel_rows, width), lambda i: (i, 0)),
+            pl.BlockSpec((panel_rows, width), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((panel_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), vals.dtype),
+        interpret=True,  # CPU-PJRT compatible lowering; see module docstring
+    )(x, vals, cols)

@@ -1,0 +1,65 @@
+"""Layer-2: the MPK compute graphs exported to the rust coordinator.
+
+Each public function here is a jit-able, fixed-shape computation built on the
+Layer-1 Pallas kernels.  ``aot.py`` lowers these once to HLO text; the rust
+runtime (rust/src/runtime) loads and executes them via PJRT.  Python never
+runs on the request path.
+
+Conventions shared with the rust side (runtime/artifacts.rs):
+
+* matrices arrive as padded ELL chunks: ``vals f64[R, W]``, ``cols i32[R, W]``
+* the RHS vector ``x f64[N]`` covers local rows + halo tail (N >= R)
+* all functions return tuples (lowered with return_tuple=True)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.axpby import axpby
+from .kernels.chebyshev import cheb_step
+from .kernels.spmv_ell import spmv_ell
+
+jax.config.update("jax_enable_x64", True)
+
+
+@functools.partial(jax.jit, static_argnames=("panel_rows",))
+def spmv(vals, cols, x, *, panel_rows: int = 256):
+    """Single SpMV chunk: y = A @ x (the DLB-MPK level/chunk work unit)."""
+    return (spmv_ell(vals, cols, x, panel_rows=panel_rows),)
+
+
+@functools.partial(jax.jit, static_argnames=("p_m", "panel_rows"))
+def mpk(vals, cols, x, *, p_m: int, panel_rows: int = 256):
+    """Local traditional MPK: stack of y_p = A^p x for p = 1..p_m.
+
+    Only valid when the chunk is a whole square local matrix (R == N, no
+    halo): each power feeds the previous output back in.  Used by the
+    quickstart example and as an XLA-side cross-check of the rust TRAD loop.
+    """
+    rows, _ = vals.shape
+    if x.shape[0] != rows:
+        raise ValueError("mpk requires a square chunk (R == N)")
+    ys = []
+    y = x
+    for _ in range(p_m):
+        y = spmv_ell(vals, cols, y, panel_rows=panel_rows)
+        ys.append(y)
+    return (jnp.stack(ys, axis=0),)
+
+
+@functools.partial(jax.jit, static_argnames=("panel_rows",))
+def chebyshev_step(vals, cols, v_re, v_im, vprev_re, vprev_im, *, panel_rows: int = 256):
+    """One Chebyshev recurrence step (paper Eq. 6) on complex planes."""
+    return cheb_step(vals, cols, v_re, v_im, vprev_re, vprev_im, panel_rows=panel_rows)
+
+
+@jax.jit
+def vec_axpby(a, b, x, y):
+    """z = a*x + b*y — the Chebyshev accumulation primitive (Eq. 5)."""
+    from .kernels.chebyshev import _pick_tile
+
+    return (axpby(a, b, x, y, tile=_pick_tile(x.shape[0])),)

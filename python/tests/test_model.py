@@ -1,0 +1,90 @@
+"""Layer-2 model graphs vs. oracle + AOT artifact sanity."""
+
+import json
+import os
+
+import numpy as np
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from compile import aot
+
+
+def _rand(rng, rows, width, xlen):
+    vals = rng.standard_normal((rows, width))
+    cols = rng.integers(0, xlen, (rows, width)).astype(np.int32)
+    x = rng.standard_normal(xlen)
+    return vals, cols, x
+
+
+def test_model_spmv_tuple():
+    rng = np.random.default_rng(0)
+    vals, cols, x = _rand(rng, 512, 7, 600)
+    (y,) = model.spmv(vals, cols, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref.spmv_ell_ref(vals, cols, x)),
+                               rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("p_m", [1, 2, 4, 6])
+def test_model_mpk_matches_repeated_spmv(p_m):
+    rng = np.random.default_rng(p_m)
+    vals, cols, x = _rand(rng, 256, 5, 256)
+    vals *= 0.1  # keep powers bounded
+    (ys,) = model.mpk(vals, cols, x, p_m=p_m)
+    ys = np.asarray(ys)
+    assert ys.shape == (p_m, 256)
+    y = x
+    for p in range(p_m):
+        y = np.asarray(ref.spmv_ell_ref(vals, cols, y))
+        np.testing.assert_allclose(ys[p], y, rtol=1e-11, atol=1e-11)
+
+
+def test_model_mpk_rejects_nonsquare():
+    with pytest.raises(ValueError, match="square"):
+        model.mpk(np.ones((256, 3)), np.zeros((256, 3), np.int32), np.ones(300), p_m=2)
+
+
+def test_model_vec_axpby():
+    rng = np.random.default_rng(9)
+    x, y = rng.standard_normal(2048), rng.standard_normal(2048)
+    (z,) = model.vec_axpby(0.25, -1.5, x, y)
+    np.testing.assert_allclose(np.asarray(z), 0.25 * x - 1.5 * y, rtol=1e-13, atol=1e-13)
+
+
+def test_model_chebyshev_step():
+    rng = np.random.default_rng(11)
+    vals, cols, _ = _rand(rng, 256, 7, 300)
+    vecs = [rng.standard_normal(300) for _ in range(4)]
+    got = model.chebyshev_step(vals, cols, *vecs)
+    want = ref.cheb_step_ref(vals, cols, *vecs)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-12, atol=1e-12)
+
+
+# --------------------------------------------------------------- artifacts
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_lowering_roundtrip():
+    """The exporter path produces parseable, entry-bearing HLO text."""
+    text = aot.to_hlo_text(aot.lower_spmv(256, 3, 256, 256))
+    assert "ENTRY" in text and "HloModule" in text
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_manifest_consistent_with_files():
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert len(manifest) >= 5
+    for name, meta in manifest.items():
+        path = os.path.join(ART_DIR, meta["file"])
+        assert os.path.exists(path), f"missing artifact {path}"
+        head = open(path).read(2000)
+        assert "HloModule" in head
+        assert meta["kind"] in {"spmv", "mpk", "cheb_step", "axpby"}

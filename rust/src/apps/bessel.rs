@@ -1,0 +1,134 @@
+//! Bessel functions of the first kind `J_k(x)` — the Chebyshev expansion
+//! coefficients (paper Eq. 5).
+//!
+//! Miller's downward recurrence with the standard normalization
+//! `J_0 + 2·Σ_{k even} J_k = 1`; accurate to ~1e-14 for the argument range
+//! the propagator uses (`x = a·δτ`, typically ≤ 50).
+
+/// `J_k(x)` for `k = 0..=k_max`.
+pub fn bessel_j_array(k_max: usize, x: f64) -> Vec<f64> {
+    let mut out = vec![0.0; k_max + 1];
+    if x == 0.0 {
+        out[0] = 1.0;
+        return out;
+    }
+    let ax = x.abs();
+    // start far above k_max and above the turning point |x|
+    let start = k_max + 16 + (ax as usize) + ((40.0 * (k_max as f64 + ax)).sqrt() as usize);
+
+    let mut jp = 0.0f64; // J_{k+1}
+    let mut jc = 1e-30f64; // J_k, initially k = start
+    let mut norm = 0.0f64; // J_0 + 2 Σ_{even k > 0} J_k
+
+    let record = |k: usize, val: f64, out: &mut [f64], norm: &mut f64| {
+        if k <= k_max {
+            out[k] = val;
+        }
+        if k == 0 {
+            *norm += val;
+        } else if k % 2 == 0 {
+            *norm += 2.0 * val;
+        }
+    };
+    record(start, jc, &mut out, &mut norm);
+
+    for k in (1..=start).rev() {
+        // J_{k-1} = (2k/x) J_k − J_{k+1}
+        let jm = (2.0 * k as f64 / ax) * jc - jp;
+        jp = jc;
+        jc = jm;
+        record(k - 1, jc, &mut out, &mut norm);
+        if jc.abs() > 1e250 {
+            jp *= 1e-250;
+            jc *= 1e-250;
+            norm *= 1e-250;
+            for v in out.iter_mut() {
+                *v *= 1e-250;
+            }
+        }
+    }
+    for v in out.iter_mut() {
+        *v /= norm;
+    }
+    if x < 0.0 {
+        for (k, v) in out.iter_mut().enumerate() {
+            if k % 2 == 1 {
+                *v = -*v;
+            }
+        }
+    }
+    out
+}
+
+/// Number of Chebyshev terms for argument `z` to reach ~1e-15 truncation:
+/// `J_k(z)` decays super-exponentially past `k ≈ z`.
+pub fn chebyshev_terms(z: f64) -> usize {
+    let z = z.abs();
+    (z + 20.0 + 10.0 * z.cbrt()).ceil() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Series definition for small arguments (reference).
+    fn j_series(k: usize, x: f64) -> f64 {
+        let mut term = (x / 2.0f64).powi(k as i32)
+            / (1..=k).map(|i| i as f64).product::<f64>().max(1.0);
+        let mut sum = term;
+        for m in 1..60 {
+            term *= -(x * x / 4.0) / (m as f64 * (m as f64 + k as f64));
+            sum += term;
+        }
+        sum
+    }
+
+    #[test]
+    fn matches_series_small_x() {
+        let js = bessel_j_array(10, 1.5);
+        for k in 0..=10 {
+            let want = j_series(k, 1.5);
+            assert!(
+                (js[k] - want).abs() < 1e-12,
+                "J_{k}(1.5): {} vs {want}",
+                js[k]
+            );
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        // Abramowitz & Stegun: J_0(1) = 0.7651976866, J_1(1) = 0.4400505857
+        let js = bessel_j_array(4, 1.0);
+        assert!((js[0] - 0.7651976865579666).abs() < 1e-12);
+        assert!((js[1] - 0.4400505857449335).abs() < 1e-12);
+        // J_0(5) = -0.1775967713
+        let j5 = bessel_j_array(2, 5.0);
+        assert!((j5[0] + 0.17759677131433830).abs() < 1e-11);
+    }
+
+    #[test]
+    fn negative_argument_parity() {
+        let jp = bessel_j_array(5, 2.0);
+        let jn = bessel_j_array(5, -2.0);
+        for k in 0..=5 {
+            let want = if k % 2 == 1 { -jp[k] } else { jp[k] };
+            assert!((jn[k] - want).abs() < 1e-13);
+        }
+    }
+
+    #[test]
+    fn zero_argument() {
+        let js = bessel_j_array(3, 0.0);
+        assert_eq!(js, vec![1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn truncation_estimate_covers_decay() {
+        for &z in &[0.5, 2.0, 10.0, 40.0] {
+            let m = chebyshev_terms(z);
+            let js = bessel_j_array(m, z);
+            assert!(js[m].abs() < 1e-13, "J_{m}({z}) = {}", js[m]);
+        }
+    }
+}

@@ -1,0 +1,369 @@
+//! Chebyshev time propagation of quantum states (paper §7, Eq. 5–7).
+//!
+//! Solves `|ψ(τ+δτ)⟩ = e^{−iδτ·H}|ψ(τ)⟩` by the Chebyshev expansion
+//!
+//!   `e^{−iδτH} ≈ e^{−iδτ·b}·[ J_0(z)·v_0 + 2 Σ_k (−i)^k J_k(z)·v_k ]`
+//!
+//! with `H` rescaled to spectral radius ≤ 1 (`H_s = (H − b)/a`, `z = a·δτ`),
+//! `v_{k+1} = 2 H_s v_k − v_{k−1}` (Eq. 6). The recurrence is a sequence of
+//! `M` SpMVs with the *same* matrix — exactly the shape DLB-MPK accelerates:
+//! the propagator blocks the recurrence in chunks of `p_m` steps and runs
+//! each chunk through the cache-blocked distributed wavefront.
+//!
+//! The complex state is carried as two real planes (`H` is real), so one
+//! recurrence step is two SpMVs — matching the fused `cheb_step` AOT
+//! artifact on the XLA path.
+
+use crate::distsim::{CommStats, DistMatrix};
+use crate::matrix::CsrMatrix;
+use crate::mpk::dlb::{self, DlbOptions, DlbPlan, Recurrence, Workspace};
+use crate::mpk::trad::trad_recurrence;
+use crate::mpk::SpmvBackend;
+
+use super::bessel::{bessel_j_array, chebyshev_terms};
+
+/// Which MPK engine drives the recurrence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Back-to-back SpMVs (the paper's baseline TRAD implementation).
+    Trad,
+    /// Cache-blocked DLB-MPK (the paper's contribution).
+    Dlb,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ChebyshevConfig {
+    /// Physical time step δτ.
+    pub dt: f64,
+    /// Recurrence block size p_m (paper §7: p_m « M, tuned like Fig. 8).
+    pub p_m: usize,
+    pub engine: Engine,
+    pub dlb: DlbOptions,
+}
+
+impl Default for ChebyshevConfig {
+    fn default() -> Self {
+        Self { dt: 0.5, p_m: 8, engine: Engine::Dlb, dlb: DlbOptions::default() }
+    }
+}
+
+/// Complex state as two real planes.
+#[derive(Clone, Debug)]
+pub struct State {
+    pub re: Vec<f64>,
+    pub im: Vec<f64>,
+}
+
+impl State {
+    pub fn zeros(n: usize) -> Self {
+        Self { re: vec![0.0; n], im: vec![0.0; n] }
+    }
+
+    pub fn norm2(&self) -> f64 {
+        self.re.iter().map(|v| v * v).sum::<f64>() + self.im.iter().map(|v| v * v).sum::<f64>()
+    }
+
+    pub fn normalize(&mut self) {
+        let n = self.norm2().sqrt();
+        if n > 0.0 {
+            for v in self.re.iter_mut().chain(self.im.iter_mut()) {
+                *v /= n;
+            }
+        }
+    }
+
+    /// |⟨r|ψ⟩|² density.
+    pub fn density(&self) -> Vec<f64> {
+        self.re
+            .iter()
+            .zip(&self.im)
+            .map(|(r, i)| r * r + i * i)
+            .collect()
+    }
+}
+
+/// The propagator: holds the rescaled Hamiltonian, the DLB plan, and the
+/// expansion coefficients.
+pub struct ChebyshevPropagator {
+    pub cfg: ChebyshevConfig,
+    /// Spectral scale `a` (H_s = (H − b)/a; b = 0 for the Anderson model's
+    /// symmetric spectrum).
+    pub scale_a: f64,
+    /// Number of expansion terms M.
+    pub n_terms: usize,
+    /// `J_k(a·δτ)` for k = 0..=M.
+    pub coeffs: Vec<f64>,
+    plan: DlbPlan,
+    dist_trad: DistMatrix,
+    ws: Workspace,
+    pub comm: CommStats,
+}
+
+impl ChebyshevPropagator {
+    /// Build from the (unscaled) Hamiltonian distributed over `dist`.
+    ///
+    /// `h` is consumed conceptually: the propagator re-scales a copy of the
+    /// distributed blocks by `1/a` with `a = ‖H‖_∞` (Gershgorin bound).
+    pub fn new(h: &CsrMatrix, dist: &DistMatrix, cfg: ChebyshevConfig) -> Self {
+        let a = h.inf_norm().max(f64::MIN_POSITIVE);
+        // scale local blocks
+        let mut dist = dist.clone();
+        for r in &mut dist.ranks {
+            r.a.scale(1.0 / a);
+        }
+        let z = a * cfg.dt;
+        let n_terms = chebyshev_terms(z).max(cfg.p_m + 1);
+        let coeffs = bessel_j_array(n_terms, z);
+        let plan = dlb::plan(&dist, cfg.p_m, &cfg.dlb);
+        Self {
+            cfg,
+            scale_a: a,
+            n_terms,
+            coeffs,
+            dist_trad: dist,
+            plan,
+            ws: Workspace::default(),
+            comm: CommStats::default(),
+        }
+    }
+
+    /// One δτ step: ψ ← e^{−iδτH_s·a} ψ (global phase e^{−iδτ·b} omitted;
+    /// b = 0 here, and a global phase is unobservable anyway).
+    pub fn step(&mut self, psi: &State, backend: &mut dyn SpmvBackend) -> State {
+        let n = psi.re.len();
+        let mut out = State::zeros(n);
+        // k = 0 term: J_0 · v_0
+        axpy(&mut out.re, self.coeffs[0], &psi.re);
+        axpy(&mut out.im, self.coeffs[0], &psi.im);
+
+        // v_{k-1}, v_k window, per plane
+        let mut v_prev = psi.clone(); // v_0
+        let mut v_cur: Option<State> = None; // v_1 after first block
+        let mut k_done = 0usize; // highest k accumulated
+
+        while k_done < self.n_terms {
+            let p_m = self.cfg.p_m.min(self.n_terms - k_done);
+            // run p_m recurrence steps from (v_{k_done-1}=?, v_{k_done})
+            let (x0_re, x0_im, xm1_re, xm1_im): (&[f64], &[f64], Option<&[f64]>, Option<&[f64]>) =
+                match &v_cur {
+                    None => (&psi.re, &psi.im, None, None), // wind-up: v1 = H v0
+                    Some(vc) => (&vc.re, &vc.im, Some(&v_prev.re), Some(&v_prev.im)),
+                };
+            let (res_re, res_im) = match self.cfg.engine {
+                Engine::Dlb => {
+                    // plans with p_m smaller than configured: rebuild cheaply
+                    let plan: &DlbPlan = if p_m == self.cfg.p_m {
+                        &self.plan
+                    } else {
+                        // tail block (rare): build a small temporary plan
+                        &dlb::plan(&self.plan.dist, p_m, &self.cfg.dlb)
+                    };
+                    let rr = dlb::execute_recurrence_with(
+                        plan, x0_re, xm1_re, Recurrence::Chebyshev, backend, &mut self.ws,
+                    );
+                    let ri = dlb::execute_recurrence_with(
+                        plan, x0_im, xm1_im, Recurrence::Chebyshev, backend, &mut self.ws,
+                    );
+                    (rr, ri)
+                }
+                Engine::Trad => {
+                    let rr = trad_recurrence(
+                        &self.dist_trad, x0_re, xm1_re, p_m, Recurrence::Chebyshev, backend,
+                    );
+                    let ri = trad_recurrence(
+                        &self.dist_trad, x0_im, xm1_im, p_m, Recurrence::Chebyshev, backend,
+                    );
+                    (rr, ri)
+                }
+            };
+            self.comm.merge(&res_re.comm);
+            self.comm.merge(&res_im.comm);
+
+            // accumulate 2·(−i)^k·J_k·v_k for k = k_done+1 ..= k_done+p_m
+            for (j, (vr, vi)) in res_re.powers.iter().zip(&res_im.powers).enumerate() {
+                let k = k_done + j + 1;
+                let c = 2.0 * self.coeffs[k];
+                match k % 4 {
+                    0 => {
+                        // (−i)^k = 1
+                        axpy(&mut out.re, c, vr);
+                        axpy(&mut out.im, c, vi);
+                    }
+                    1 => {
+                        // (−i)^k = −i : (−i)(r + i·m) = m − i·r
+                        axpy(&mut out.re, c, vi);
+                        axpy(&mut out.im, -c, vr);
+                    }
+                    2 => {
+                        axpy(&mut out.re, -c, vr);
+                        axpy(&mut out.im, -c, vi);
+                    }
+                    _ => {
+                        axpy(&mut out.re, -c, vi);
+                        axpy(&mut out.im, c, vr);
+                    }
+                }
+            }
+
+            // roll the window: v_prev = v_{k_done+p_m-1}, v_cur = v_{k_done+p_m}
+            let m = res_re.powers.len();
+            v_prev = if m >= 2 {
+                State { re: res_re.powers[m - 2].clone(), im: res_im.powers[m - 2].clone() }
+            } else {
+                match &v_cur {
+                    None => psi.clone(),
+                    Some(vc) => vc.clone(),
+                }
+            };
+            v_cur = Some(State {
+                re: res_re.powers[m - 1].clone(),
+                im: res_im.powers[m - 1].clone(),
+            });
+            k_done += m;
+        }
+        out
+    }
+
+    /// Propagate `steps` time steps.
+    pub fn propagate(&mut self, psi: &State, steps: usize, backend: &mut dyn SpmvBackend) -> State {
+        let mut cur = psi.clone();
+        for _ in 0..steps {
+            cur = self.step(&cur, backend);
+        }
+        cur
+    }
+}
+
+#[inline]
+fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+    for (yv, xv) in y.iter_mut().zip(x) {
+        *yv += a * xv;
+    }
+}
+
+/// Gaussian wave packet (paper Eq. 9) on an Anderson lattice.
+pub fn wave_packet(cfg: &crate::matrix::anderson::AndersonConfig, sigma: f64, k0: [f64; 3]) -> State {
+    let n = cfg.n_sites();
+    let (cx, cy, cz) = (cfg.lx as f64 / 2.0, cfg.ly as f64 / 2.0, cfg.lz as f64 / 2.0);
+    let mut st = State::zeros(n);
+    for z in 0..cfg.lz {
+        for y in 0..cfg.ly {
+            for x in 0..cfg.lx {
+                let r = cfg.site(x, y, z);
+                let (dx, dy, dz) = (x as f64 - cx, y as f64 - cy, z as f64 - cz);
+                let r2 = dx * dx + dy * dy + dz * dz;
+                let amp = (-r2 / (2.0 * sigma * sigma)).exp();
+                let phase = k0[0] * dx + k0[1] * dy + k0[2] * dz;
+                st.re[r] = amp * phase.cos();
+                st.im[r] = amp * phase.sin();
+            }
+        }
+    }
+    st.normalize();
+    st
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::anderson::{anderson, AndersonConfig};
+    use crate::matrix::gen;
+    use crate::mpk::NativeBackend;
+    use crate::partition::{partition, Method};
+
+    fn propagate(engine: Engine, np: usize, steps: usize) -> (State, State) {
+        let cfg = AndersonConfig::isotropic(8, 1.0, 11);
+        let h = anderson(&cfg);
+        let part = partition(&h, np, Method::Block);
+        let dist = DistMatrix::build(&h, &part);
+        let ccfg = ChebyshevConfig {
+            dt: 0.4,
+            p_m: 4,
+            engine,
+            dlb: DlbOptions { cache_bytes: 64 << 10, s_m: 50 },
+        };
+        let mut prop = ChebyshevPropagator::new(&h, &dist, ccfg);
+        let psi0 = wave_packet(&cfg, 2.0, [std::f64::consts::FRAC_PI_2, 0.0, 0.0]);
+        let psi = prop.propagate(&psi0, steps, &mut NativeBackend);
+        (psi0, psi)
+    }
+
+    #[test]
+    fn unitarity_norm_conserved() {
+        let (psi0, psi) = propagate(Engine::Dlb, 2, 3);
+        assert!((psi0.norm2() - 1.0).abs() < 1e-12);
+        assert!((psi.norm2() - 1.0).abs() < 1e-9, "norm² = {}", psi.norm2());
+    }
+
+    #[test]
+    fn dlb_and_trad_engines_agree() {
+        let (_, a) = propagate(Engine::Dlb, 3, 2);
+        let (_, b) = propagate(Engine::Trad, 3, 2);
+        for (u, v) in a.re.iter().zip(&b.re).chain(a.im.iter().zip(&b.im)) {
+            assert!((u - v).abs() < 1e-10, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn free_particle_1d_exact() {
+        // 1D chain without disorder: H = -t Σ|r⟩⟨r+1| + h.c. has exact
+        // dispersion; check e^{-iδτH} against dense matrix exponential via
+        // repeated squaring of the series... cheaper: check energy
+        // conservation ⟨H⟩ and Chebyshev self-consistency over two half steps.
+        let cfg = AndersonConfig { lx: 32, ly: 1, lz: 1, w: 0.0, t: 1.0, t_perp: 0.0, seed: 1 };
+        let h = anderson(&cfg);
+        let part = partition(&h, 1, Method::Block);
+        let dist = DistMatrix::build(&h, &part);
+        let psi0 = wave_packet(&cfg, 3.0, [1.0, 0.0, 0.0]);
+
+        // one full step vs two half steps must agree (semigroup property)
+        let mk = |dt: f64| ChebyshevConfig { dt, p_m: 3, engine: Engine::Dlb, dlb: DlbOptions { cache_bytes: 1 << 20, s_m: 50 } };
+        let mut full = ChebyshevPropagator::new(&h, &dist, mk(0.6));
+        let mut half = ChebyshevPropagator::new(&h, &dist, mk(0.3));
+        let a = full.propagate(&psi0, 1, &mut NativeBackend);
+        let b = half.propagate(&psi0, 2, &mut NativeBackend);
+        for (u, v) in a.re.iter().zip(&b.re).chain(a.im.iter().zip(&b.im)) {
+            assert!((u - v).abs() < 1e-9, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn stationary_state_only_gains_phase() {
+        // single site (n=1): H = [w], e^{-i dt H} psi has |psi| unchanged
+        // and the density of ANY eigenstate is stationary; use a 2-site
+        // hopping dimer's symmetric state
+        let mut coo = crate::matrix::CooMatrix::new(2, 2);
+        coo.push(0, 1, -1.0);
+        coo.push(1, 0, -1.0);
+        let h = coo.to_csr();
+        let part = partition(&h, 1, Method::Block);
+        let dist = DistMatrix::build(&h, &part);
+        let mut prop = ChebyshevPropagator::new(
+            &h,
+            &dist,
+            ChebyshevConfig { dt: 0.7, p_m: 2, engine: Engine::Trad, dlb: DlbOptions::default() },
+        );
+        let s = 1.0 / 2.0f64.sqrt();
+        let psi = State { re: vec![s, s], im: vec![0.0, 0.0] };
+        let out = prop.step(&psi, &mut NativeBackend);
+        let d = out.density();
+        assert!((d[0] - 0.5).abs() < 1e-10 && (d[1] - 0.5).abs() < 1e-10);
+        // eigenvalue −1: phase e^{+i·0.7}
+        let want_re = s * 0.7f64.cos();
+        let want_im = s * 0.7f64.sin();
+        assert!((out.re[0] - want_re).abs() < 1e-10);
+        assert!((out.im[0] - want_im).abs() < 1e-10);
+    }
+
+    #[test]
+    fn wave_packet_is_normalized_and_centered() {
+        let cfg = AndersonConfig::isotropic(16, 1.0, 2);
+        let st = wave_packet(&cfg, 3.0, [0.0, 0.0, 0.0]);
+        assert!((st.norm2() - 1.0).abs() < 1e-12);
+        let rho = st.density();
+        let c = cfg.site(8, 8, 8);
+        let m = rho.iter().cloned().fold(0.0, f64::max);
+        assert_eq!(rho[c], m);
+        let _ = gen::tridiag(2); // keep import used
+    }
+}

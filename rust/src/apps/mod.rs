@@ -1,0 +1,6 @@
+//! Applications built on the DLB-MPK library.
+
+pub mod bessel;
+pub mod chebyshev;
+pub mod poly_cg;
+pub mod observables;

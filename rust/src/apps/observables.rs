@@ -1,0 +1,83 @@
+//! Observables for the Anderson localization study (paper §7, Fig. 11).
+
+use crate::matrix::anderson::AndersonConfig;
+
+/// Center of mass ⟨x⟩, ⟨y⟩, ⟨z⟩ of a density, relative to the box center.
+pub fn center_of_mass(cfg: &AndersonConfig, rho: &[f64]) -> [f64; 3] {
+    let (cx, cy, cz) = (cfg.lx as f64 / 2.0, cfg.ly as f64 / 2.0, cfg.lz as f64 / 2.0);
+    let mut m = 0.0;
+    let mut s = [0.0f64; 3];
+    for z in 0..cfg.lz {
+        for y in 0..cfg.ly {
+            for x in 0..cfg.lx {
+                let w = rho[cfg.site(x, y, z)];
+                m += w;
+                s[0] += w * (x as f64 - cx);
+                s[1] += w * (y as f64 - cy);
+                s[2] += w * (z as f64 - cz);
+            }
+        }
+    }
+    if m > 0.0 {
+        for v in &mut s {
+            *v /= m;
+        }
+    }
+    s
+}
+
+/// Marginal density along x: ρ(x) = Σ_{y,z} ρ(r) (Fig. 11a's heat-map rows).
+pub fn density_profile_x(cfg: &AndersonConfig, rho: &[f64]) -> Vec<f64> {
+    let mut out = vec![0.0; cfg.lx];
+    for z in 0..cfg.lz {
+        for y in 0..cfg.ly {
+            for x in 0..cfg.lx {
+                out[x] += rho[cfg.site(x, y, z)];
+            }
+        }
+    }
+    out
+}
+
+/// Participation ratio 1/Σρ² — localization measure (≈ number of occupied
+/// sites; small when localized).
+pub fn participation_ratio(rho: &[f64]) -> f64 {
+    let s2: f64 = rho.iter().map(|v| v * v).sum();
+    if s2 > 0.0 {
+        1.0 / s2
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn com_of_point_mass() {
+        let cfg = AndersonConfig::isotropic(4, 0.0, 0);
+        let mut rho = vec![0.0; 64];
+        rho[cfg.site(3, 1, 0)] = 1.0;
+        let c = center_of_mass(&cfg, &rho);
+        assert_eq!(c, [1.0, -1.0, -2.0]);
+    }
+
+    #[test]
+    fn profile_sums_to_norm() {
+        let cfg = AndersonConfig::isotropic(4, 0.0, 0);
+        let rho = vec![1.0 / 64.0; 64];
+        let p = density_profile_x(&cfg, &rho);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p.iter().all(|&v| (v - 0.25 / 4.0 * 4.0 * 0.25).abs() < 1.0));
+    }
+
+    #[test]
+    fn participation_ratio_extremes() {
+        let uniform = vec![0.01; 100];
+        assert!((participation_ratio(&uniform) - 100.0).abs() < 1e-9);
+        let mut point = vec![0.0; 100];
+        point[3] = 1.0;
+        assert!((participation_ratio(&point) - 1.0).abs() < 1e-12);
+    }
+}

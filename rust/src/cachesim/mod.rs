@@ -1,0 +1,16 @@
+//! Cache simulator: replay the memory reference stream of an MPK execution
+//! and count main-memory traffic (DESIGN.md §Substitutions — stands in for
+//! likwid hardware counters).
+//!
+//! The paper's roofline argument is entirely about how many bytes of matrix
+//! data must come from main memory per SpMV. [`replay`] replays the exact
+//! row-range schedule an MPK variant executes, at cache-line granularity,
+//! against a set-associative LRU cache, and reports the memory-traffic
+//! ratio TRAD/DLB — the cache-blocking factor that wall-clock speedups
+//! follow.
+
+pub mod lru;
+pub mod replay;
+
+pub use lru::LruCache;
+pub use replay::{replay, AccessStats, MpkTrace};

@@ -1,0 +1,142 @@
+//! Replay an MPK schedule's matrix-data reference stream.
+
+use crate::cachesim::LruCache;
+use crate::matrix::CsrMatrix;
+
+/// A trace of row-range SpMV executions: `(lo, hi)` row ranges of a local
+/// matrix, in execution order.
+pub struct MpkTrace<'a> {
+    pub a: &'a CsrMatrix,
+    pub steps: Vec<(usize, usize)>,
+}
+
+impl<'a> MpkTrace<'a> {
+    /// TRAD: `p_m` full sweeps.
+    pub fn trad(a: &'a CsrMatrix, p_m: usize) -> Self {
+        Self { a, steps: (0..p_m).map(|_| (0, a.n_rows())).collect() }
+    }
+
+    /// Wavefront trace from a schedule + group ranges.
+    pub fn wavefront(
+        a: &'a CsrMatrix,
+        ranges: &[(usize, usize)],
+        schedule: &[crate::race::schedule::Step],
+    ) -> Self {
+        Self { a, steps: schedule.iter().map(|s| ranges[s.group]).collect() }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct AccessStats {
+    /// Bytes of matrix data requested (CRS values + colidx + rowptr).
+    pub requested: u64,
+    /// Bytes loaded from main memory (cache misses).
+    pub mem_traffic: u64,
+}
+
+impl AccessStats {
+    /// Fraction of matrix traffic served by the cache.
+    pub fn hit_fraction(&self) -> f64 {
+        if self.requested == 0 {
+            0.0
+        } else {
+            1.0 - self.mem_traffic as f64 / self.requested as f64
+        }
+    }
+}
+
+/// Replay the matrix-data reference stream of `trace` through `cache`.
+///
+/// Address layout (byte offsets, disjoint regions):
+/// * values:  `[0, 8·nnz)`
+/// * colidx:  `[8·nnz, 12·nnz)`
+/// * rowptr:  `[12·nnz, 12·nnz + 4·(n+1))`
+///
+/// The x/y vectors are deliberately *not* replayed: the paper's blocking
+/// argument concerns matrix data (the dominant stream, `12 B/nnz` vs
+/// `8 B/row`), and the BFS reordering makes vector accesses near-sequential.
+pub fn replay(trace: &MpkTrace, cache: &mut LruCache) -> AccessStats {
+    let a = trace.a;
+    let nnz = a.nnz() as u64;
+    let val_base = 0u64;
+    let col_base = 8 * nnz;
+    let ptr_base = 12 * nnz;
+    let mut stats = AccessStats::default();
+    for &(lo, hi) in &trace.steps {
+        let k0 = a.rowptr[lo] as u64;
+        let k1 = a.rowptr[hi] as u64;
+        let nnz_bytes = 8 * (k1 - k0);
+        let col_bytes = 4 * (k1 - k0);
+        let ptr_bytes = 4 * (hi as u64 - lo as u64 + 1);
+        stats.requested += nnz_bytes + col_bytes + ptr_bytes;
+        stats.mem_traffic += cache.touch(val_base + 8 * k0, nnz_bytes as usize);
+        stats.mem_traffic += cache.touch(col_base + 4 * k0, col_bytes as usize);
+        stats.mem_traffic += cache.touch(ptr_base + 4 * lo as u64, ptr_bytes as usize);
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::levels::bfs_reorder;
+    use crate::matrix::gen;
+    use crate::race::{group_levels, wavefront};
+
+    #[test]
+    fn trad_traffic_is_pm_times_matrix() {
+        let a = gen::stencil_2d_5pt(40, 40);
+        let p_m = 4;
+        let trace = MpkTrace::trad(&a, p_m);
+        // cache far smaller than the matrix -> every sweep misses
+        let mut cache = LruCache::new(8 << 10, 64, 8);
+        let st = replay(&trace, &mut cache);
+        let per_sweep = st.requested / p_m as u64;
+        assert!(st.mem_traffic as f64 > 0.95 * (p_m as f64) * per_sweep as f64);
+    }
+
+    #[test]
+    fn wavefront_traffic_close_to_single_sweep() {
+        let a = gen::stencil_2d_5pt(40, 40);
+        let (b, lv) = bfs_reorder(&a, 0);
+        let p_m = 4;
+        // budget C below the physical cache ("safety factor", paper §6.2)
+        let cache_bytes = 64 << 10;
+        let g = group_levels(&b, &lv, p_m, cache_bytes / 2, 50);
+        let s = wavefront(&g, lv.n_levels(), p_m);
+        let trace = MpkTrace::wavefront(&b, &g.ranges, &s);
+        let mut cache = LruCache::new(cache_bytes, 64, 8);
+        let st = replay(&trace, &mut cache);
+        let one_sweep = st.requested / p_m as u64;
+        // cache blocking: total memory traffic ≈ one sweep (compulsory
+        // misses), far below p_m sweeps
+        assert!(
+            (st.mem_traffic as f64) < 1.8 * one_sweep as f64,
+            "traffic {} vs sweep {}",
+            st.mem_traffic,
+            one_sweep
+        );
+    }
+
+    #[test]
+    fn dlb_beats_trad_traffic_on_level_matrix() {
+        let a = gen::random_banded_sym(4_000, 16, 60, 3);
+        let (b, lv) = bfs_reorder(&a, 0);
+        let p_m = 4;
+        let cache_bytes = 96 << 10;
+        // budget C below the physical cache ("safety factor", paper §6.2)
+        let g = group_levels(&b, &lv, p_m, cache_bytes / 2, 50);
+        let s = wavefront(&g, lv.n_levels(), p_m);
+
+        let mut c1 = LruCache::new(cache_bytes, 64, 8);
+        let trad = replay(&MpkTrace::trad(&b, p_m), &mut c1);
+        let mut c2 = LruCache::new(cache_bytes, 64, 8);
+        let dlb = replay(&MpkTrace::wavefront(&b, &g.ranges, &s), &mut c2);
+        assert!(
+            dlb.mem_traffic * 2 < trad.mem_traffic,
+            "dlb {} vs trad {}",
+            dlb.mem_traffic,
+            trad.mem_traffic
+        );
+    }
+}

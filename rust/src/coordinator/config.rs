@@ -1,0 +1,90 @@
+//! Run configuration (the paper's tunables in one place).
+
+use crate::partition::Method;
+
+/// Which matrix to run on.
+#[derive(Clone, Debug)]
+pub enum MatrixSpec {
+    /// 2D 5-point stencil `nx × ny`.
+    Stencil2D { nx: usize, ny: usize },
+    /// 3D 7-point stencil.
+    Stencil3D { nx: usize, ny: usize, nz: usize },
+    /// Synthetic banded FEM-like matrix.
+    Banded { n: usize, nnzr: usize, band: usize, seed: u64 },
+    /// Anderson Hamiltonian (isotropic).
+    Anderson { l: usize, w: f64, seed: u64 },
+    /// Table-4 suite analogue by name (e.g. "Serena-s") at `scale`.
+    Suite { name: String, scale: f64 },
+    /// MatrixMarket file.
+    File { path: std::path::PathBuf },
+}
+
+impl MatrixSpec {
+    pub fn build(&self) -> anyhow::Result<crate::matrix::CsrMatrix> {
+        use crate::matrix::gen;
+        Ok(match self {
+            Self::Stencil2D { nx, ny } => gen::stencil_2d_5pt(*nx, *ny),
+            Self::Stencil3D { nx, ny, nz } => gen::stencil_3d_7pt(*nx, *ny, *nz),
+            Self::Banded { n, nnzr, band, seed } => gen::random_banded_sym(*n, *nnzr, *band, *seed),
+            Self::Anderson { l, w, seed } => crate::matrix::anderson::anderson(
+                &crate::matrix::anderson::AndersonConfig::isotropic(*l, *w, *seed),
+            ),
+            Self::Suite { name, scale } => {
+                let entry = gen::suite()
+                    .into_iter()
+                    .find(|e| e.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown suite matrix {name}"))?;
+                (entry.build)(*scale)
+            }
+            Self::File { path } => crate::matrix::mm::read_matrix_market(path)?,
+        })
+    }
+}
+
+/// Full run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub matrix: MatrixSpec,
+    pub n_ranks: usize,
+    pub partitioner: Method,
+    pub p_m: usize,
+    /// Cache budget C for DLB (bytes).
+    pub cache_bytes: usize,
+    /// RACE recursion cap s_m.
+    pub s_m: usize,
+    /// Timing repetitions (median reported, paper §6.1.2).
+    pub reps: usize,
+    /// Validate DLB/CA against TRAD.
+    pub validate: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            matrix: MatrixSpec::Stencil2D { nx: 64, ny: 64 },
+            n_ranks: 1,
+            partitioner: Method::RecursiveBisect,
+            p_m: 4,
+            cache_bytes: 16 << 20,
+            s_m: 50,
+            reps: 5,
+            validate: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_build() {
+        assert_eq!(MatrixSpec::Stencil2D { nx: 4, ny: 3 }.build().unwrap().n_rows(), 12);
+        assert_eq!(
+            MatrixSpec::Anderson { l: 4, w: 1.0, seed: 1 }.build().unwrap().n_rows(),
+            64
+        );
+        assert!(MatrixSpec::Suite { name: "Serena-s".into(), scale: 0.01 }.build().is_ok());
+        assert!(MatrixSpec::Suite { name: "nope".into(), scale: 1.0 }.build().is_err());
+    }
+}

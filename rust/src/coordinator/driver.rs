@@ -1,0 +1,149 @@
+//! The experiment pipeline: matrix → partition → distribute → MPK → report.
+
+use anyhow::Result;
+
+use crate::distsim::DistMatrix;
+use crate::mpk::dlb::{self, DlbOptions};
+use crate::mpk::{ca, trad_mpk, MpkResult, NativeBackend};
+use crate::partition::partition;
+use crate::perf::{median_time, roofline};
+use crate::util::mib;
+
+use super::config::RunConfig;
+use super::report::Report;
+
+/// Everything a run produces: per-variant reports plus raw results.
+pub struct RunOutput {
+    pub reports: Vec<Report>,
+    pub trad: MpkResult,
+    pub dlb: MpkResult,
+    pub dlb_overhead: f64,
+}
+
+/// Execute TRAD and DLB (and validate) per `cfg`, timing both.
+pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
+    let a = cfg.matrix.build()?;
+    let part = partition(&a, cfg.n_ranks, cfg.partitioner);
+    let dist = DistMatrix::build(&a, &part);
+    let x: Vec<f64> = (0..a.n_rows())
+        .map(|i| 1.0 + ((i * 2654435761) % 1000) as f64 / 1000.0)
+        .collect();
+
+    let opts = DlbOptions { cache_bytes: cfg.cache_bytes, s_m: cfg.s_m };
+    let plan = dlb::plan(&dist, cfg.p_m, &opts);
+    let o_dlb = crate::mpk::overheads::dlb_overhead_from_plan(&plan);
+    let o_mpi = dist.mpi_overhead();
+
+    // timed runs
+    let mut trad_out = None;
+    let t_trad = median_time(cfg.reps, || {
+        trad_out = Some(trad_mpk(&dist, &x, cfg.p_m, &mut NativeBackend));
+    });
+    let trad_res = trad_out.unwrap();
+
+    let mut dlb_out = None;
+    let t_dlb = median_time(cfg.reps, || {
+        dlb_out = Some(dlb::execute(&plan, &x, &mut NativeBackend));
+    });
+    let dlb_res = dlb_out.unwrap();
+
+    let validated = if cfg.validate {
+        Some(equal(&trad_res, &dlb_res))
+    } else {
+        None
+    };
+
+    let mk = |name: &str, res: &MpkResult, t: crate::perf::Timed, o_dlb: f64, validated| Report {
+        variant: name.to_string(),
+        n_rows: a.n_rows(),
+        nnz: a.nnz(),
+        crs_mib: mib(a.crs_bytes()),
+        n_ranks: cfg.n_ranks,
+        p_m: cfg.p_m,
+        time: t,
+        gflops: roofline::gflops(res.flop_nnz, t.median_s),
+        comm: res.comm.clone(),
+        o_mpi,
+        o_dlb,
+        validated,
+    };
+
+    let reports = vec![
+        mk("trad", &trad_res, t_trad, 0.0, None),
+        mk("dlb", &dlb_res, t_dlb, o_dlb, validated),
+    ];
+    Ok(RunOutput { reports, trad: trad_res, dlb: dlb_res, dlb_overhead: o_dlb })
+}
+
+/// Also run CA-MPK and report its overheads (used by `fig5` and the CLI).
+pub fn run_ca(cfg: &RunConfig) -> Result<(Report, ca::CaOverheads)> {
+    let a = cfg.matrix.build()?;
+    let part = partition(&a, cfg.n_ranks, cfg.partitioner);
+    let dist = DistMatrix::build(&a, &part);
+    let x: Vec<f64> = (0..a.n_rows()).map(|i| (i % 7) as f64).collect();
+    let mut out = None;
+    let t = median_time(cfg.reps, || {
+        out = Some(ca::ca_mpk_with(&a, &dist, &x, cfg.p_m));
+    });
+    let o = out.unwrap();
+    let rep = Report {
+        variant: "ca".into(),
+        n_rows: a.n_rows(),
+        nnz: a.nnz(),
+        crs_mib: mib(a.crs_bytes()),
+        n_ranks: cfg.n_ranks,
+        p_m: cfg.p_m,
+        time: t,
+        gflops: roofline::gflops(o.result.flop_nnz, t.median_s),
+        comm: o.result.comm.clone(),
+        o_mpi: dist.mpi_overhead(),
+        o_dlb: 0.0,
+        validated: None,
+    };
+    Ok((rep, o.overheads))
+}
+
+fn equal(a: &MpkResult, b: &MpkResult) -> bool {
+    a.powers.len() == b.powers.len()
+        && a.powers.iter().zip(&b.powers).all(|(u, v)| {
+            u.iter()
+                .zip(v)
+                .all(|(x, y)| (x - y).abs() <= 1e-9 * (1.0 + y.abs()))
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::MatrixSpec;
+
+    #[test]
+    fn pipeline_runs_and_validates() {
+        let cfg = RunConfig {
+            matrix: MatrixSpec::Stencil2D { nx: 24, ny: 24 },
+            n_ranks: 3,
+            p_m: 3,
+            reps: 1,
+            cache_bytes: 64 << 10,
+            ..Default::default()
+        };
+        let out = run(&cfg).unwrap();
+        assert_eq!(out.reports.len(), 2);
+        assert_eq!(out.reports[1].validated, Some(true));
+        assert!(out.dlb_overhead >= 0.0);
+    }
+
+    #[test]
+    fn ca_pipeline_reports_overheads() {
+        let cfg = RunConfig {
+            matrix: MatrixSpec::Stencil2D { nx: 16, ny: 16 },
+            n_ranks: 2,
+            p_m: 3,
+            reps: 1,
+            ..Default::default()
+        };
+        let (rep, ov) = run_ca(&cfg).unwrap();
+        assert_eq!(rep.variant, "ca");
+        assert!(ov.extra_halo > 0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Top-level drivers: configuration, pipeline wiring, reporting.
+//!
+//! The coordinator owns the full experiment pipeline the paper runs:
+//! generate/load matrix → partition → build the distributed matrix →
+//! plan + execute an MPK variant → validate → report performance and
+//! overheads. The CLI (`rust/src/main.rs`) and all benches are thin
+//! wrappers over this module.
+
+pub mod config;
+pub mod driver;
+pub mod report;
+
+pub use config::{MatrixSpec, RunConfig};
+pub use driver::{run, RunOutput};
+pub use report::Report;

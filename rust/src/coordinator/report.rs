@@ -1,0 +1,52 @@
+//! Human-readable run reports (the CLI/bench output format).
+
+use crate::distsim::CommStats;
+use crate::perf::Timed;
+
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub variant: String,
+    pub n_rows: usize,
+    pub nnz: usize,
+    pub crs_mib: usize,
+    pub n_ranks: usize,
+    pub p_m: usize,
+    pub time: Timed,
+    pub gflops: f64,
+    pub comm: CommStats,
+    pub o_mpi: f64,
+    pub o_dlb: f64,
+    pub validated: Option<bool>,
+}
+
+impl Report {
+    pub fn print_header() {
+        println!(
+            "{:<10} {:>9} {:>10} {:>8} {:>5} {:>4} {:>9} {:>8} {:>9} {:>7} {:>7} {:>5}",
+            "variant", "rows", "nnz", "MiB", "ranks", "p_m", "median_s", "Gflop/s", "comm_MiB",
+            "O_MPI", "O_DLB", "ok"
+        );
+    }
+
+    pub fn print_row(&self) {
+        println!(
+            "{:<10} {:>9} {:>10} {:>8} {:>5} {:>4} {:>9.4} {:>8.2} {:>9.2} {:>7.4} {:>7.4} {:>5}",
+            self.variant,
+            self.n_rows,
+            self.nnz,
+            self.crs_mib,
+            self.n_ranks,
+            self.p_m,
+            self.time.median_s,
+            self.gflops,
+            self.comm.bytes as f64 / (1 << 20) as f64,
+            self.o_mpi,
+            self.o_dlb,
+            match self.validated {
+                Some(true) => "yes",
+                Some(false) => "NO",
+                None => "-",
+            }
+        );
+    }
+}

@@ -1,0 +1,298 @@
+//! Construction of the distributed matrix from a global matrix + partition.
+
+use crate::matrix::CsrMatrix;
+use crate::partition::Partition;
+
+use super::{RankLocal, RecvPlan, SendPlan};
+
+/// The distributed matrix: every rank's local block plus bookkeeping to
+/// reassemble global vectors (validation) and drive halo exchanges.
+#[derive(Clone, Debug)]
+pub struct DistMatrix {
+    pub ranks: Vec<RankLocal>,
+    pub n_global: usize,
+    /// `owner_of[global_row]` = rank.
+    pub owner_of: Vec<u32>,
+    /// `local_of[global_row]` = local row index on its owner.
+    pub local_of: Vec<u32>,
+}
+
+impl DistMatrix {
+    /// Partition `a` row-wise according to `part` and build all rank-local
+    /// structures (local blocks, halo maps, send/recv plans).
+    pub fn build(a: &CsrMatrix, part: &Partition) -> Self {
+        assert_eq!(a.n_rows, a.n_cols, "distributed MPK needs a square matrix");
+        part.validate(a.n_rows()).expect("invalid partition");
+        let n = a.n_rows();
+        let np = part.n_parts;
+
+        // owner / local index of every global row
+        let mut owner_of = vec![0u32; n];
+        let mut local_of = vec![0u32; n];
+        let mut counters = vec![0u32; np];
+        for r in 0..n {
+            let p = part.part_of[r] as usize;
+            owner_of[r] = p as u32;
+            local_of[r] = counters[p];
+            counters[p] += 1;
+        }
+
+        let mut ranks = Vec::with_capacity(np);
+        for p in 0..np {
+            let owned: Vec<usize> = (0..n).filter(|&r| part.part_of[r] == p as u32).collect();
+            let nl = owned.len();
+
+            // halo: distinct remote columns, sorted by (owner, global id)
+            let mut halo: Vec<usize> = {
+                let mut set = std::collections::HashSet::new();
+                for &r in &owned {
+                    for &c in a.row_cols(r) {
+                        let c = c as usize;
+                        if owner_of[c] != p as u32 {
+                            set.insert(c);
+                        }
+                    }
+                }
+                set.into_iter().collect()
+            };
+            halo.sort_unstable_by_key(|&g| (owner_of[g], g));
+
+            // slot index per halo global
+            let slot_of: std::collections::HashMap<usize, u32> =
+                halo.iter().enumerate().map(|(s, &g)| (g, s as u32)).collect();
+
+            // local block with local column indexing
+            let mut rowptr = Vec::with_capacity(nl + 1);
+            rowptr.push(0usize);
+            let mut colidx = Vec::new();
+            let mut values = Vec::new();
+            let mut scratch: Vec<(u32, f64)> = Vec::new();
+            for &r in &owned {
+                scratch.clear();
+                for k in a.rowptr[r]..a.rowptr[r + 1] {
+                    let c = a.colidx[k] as usize;
+                    let lc = if owner_of[c] == p as u32 {
+                        local_of[c]
+                    } else {
+                        nl as u32 + slot_of[&c]
+                    };
+                    scratch.push((lc, a.values[k]));
+                }
+                scratch.sort_unstable_by_key(|&(c, _)| c);
+                for &(c, v) in &scratch {
+                    colidx.push(c);
+                    values.push(v);
+                }
+                rowptr.push(colidx.len());
+            }
+            let local =
+                CsrMatrix::new(nl, nl + halo.len(), rowptr, colidx, values);
+
+            // recv plans: contiguous owner segments of the sorted halo
+            let mut recv = Vec::new();
+            let mut s = 0usize;
+            while s < halo.len() {
+                let from = owner_of[halo[s]] as usize;
+                let mut e = s;
+                while e < halo.len() && owner_of[halo[e]] as usize == from {
+                    e += 1;
+                }
+                recv.push(RecvPlan { from, slots: s..e });
+                s = e;
+            }
+
+            ranks.push(RankLocal {
+                rank: p,
+                owned,
+                a: local,
+                halo_globals: halo,
+                send: Vec::new(), // filled below
+                recv,
+            });
+        }
+
+        // send plans: mirror of every recv plan
+        for p in 0..np {
+            let requests: Vec<(usize, Vec<usize>)> = ranks[p]
+                .recv
+                .iter()
+                .map(|rp| (rp.from, ranks[p].halo_globals[rp.slots.clone()].to_vec()))
+                .collect();
+            for (from, globals) in requests {
+                let rows: Vec<u32> = globals.iter().map(|&g| local_of[g]).collect();
+                ranks[from].send.push(SendPlan { to: p, rows });
+            }
+        }
+        for r in &mut ranks {
+            r.send.sort_by_key(|s| s.to);
+        }
+
+        DistMatrix { ranks, n_global: n, owner_of, local_of }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Σ_i N_{h,i} — total halo elements (numerator of paper Eq. 1).
+    pub fn total_halo(&self) -> usize {
+        self.ranks.iter().map(|r| r.n_halo()).sum()
+    }
+
+    /// Paper Eq. (1): `O_MPI = Σ_i N_{h,i} / N_r`.
+    pub fn mpi_overhead(&self) -> f64 {
+        self.total_halo() as f64 / self.n_global as f64
+    }
+
+    /// Scatter a global vector into per-rank local vectors (halo zeroed).
+    pub fn scatter(&self, x: &[f64]) -> Vec<Vec<f64>> {
+        assert_eq!(x.len(), self.n_global);
+        self.ranks
+            .iter()
+            .map(|r| {
+                let mut v = r.new_vec();
+                for (l, &g) in r.owned.iter().enumerate() {
+                    v[l] = x[g];
+                }
+                v
+            })
+            .collect()
+    }
+
+    /// Gather per-rank local vectors back into a global vector (halo
+    /// tails ignored).
+    pub fn gather(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        let mut out = vec![0.0; self.n_global];
+        for (r, x) in self.ranks.iter().zip(xs) {
+            for (l, &g) in r.owned.iter().enumerate() {
+                out[g] = x[l];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::partition::{partition, Method};
+
+    fn dist(nx: usize, np: usize) -> (CsrMatrix, DistMatrix) {
+        let a = gen::stencil_2d_5pt(nx, nx);
+        let p = partition(&a, np, Method::Block);
+        let d = DistMatrix::build(&a, &p);
+        (a, d)
+    }
+
+    #[test]
+    fn local_blocks_cover_all_nnz() {
+        let (a, d) = dist(12, 3);
+        let total: usize = d.ranks.iter().map(|r| r.a.nnz()).sum();
+        assert_eq!(total, a.nnz());
+        let rows: usize = d.ranks.iter().map(|r| r.n_local()).sum();
+        assert_eq!(rows, a.n_rows());
+    }
+
+    #[test]
+    fn halo_slots_sorted_and_recv_contiguous() {
+        let (_, d) = dist(12, 4);
+        for r in &d.ranks {
+            // sorted by (owner, gid)
+            for w in r.halo_globals.windows(2) {
+                let (a, b) = (w[0], w[1]);
+                assert!((d.owner_of[a], a) < (d.owner_of[b], b));
+            }
+            // recv plans tile the halo exactly
+            let mut next = 0usize;
+            for rp in &r.recv {
+                assert_eq!(rp.slots.start, next);
+                next = rp.slots.end;
+                assert_ne!(rp.from, r.rank, "self-recv is forbidden");
+            }
+            assert_eq!(next, r.n_halo());
+        }
+    }
+
+    #[test]
+    fn send_mirrors_recv() {
+        let (_, d) = dist(10, 3);
+        for r in &d.ranks {
+            for rp in &r.recv {
+                let peer = &d.ranks[rp.from];
+                let sp = peer.send.iter().find(|s| s.to == r.rank).unwrap();
+                assert_eq!(sp.rows.len(), rp.slots.len());
+                // the globals match slot-for-slot
+                for (i, slot) in rp.slots.clone().enumerate() {
+                    let g = r.halo_globals[slot];
+                    assert_eq!(peer.owned[sp.rows[i] as usize], g);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip() {
+        let (a, d) = dist(9, 2);
+        let x: Vec<f64> = (0..a.n_rows()).map(|i| i as f64).collect();
+        let xs = d.scatter(&x);
+        assert_eq!(d.gather(&xs), x);
+    }
+
+    #[test]
+    fn boundary_rows_touch_halo() {
+        let (_, d) = dist(8, 2);
+        for r in &d.ranks {
+            let b = r.boundary_rows();
+            assert!(!b.is_empty());
+            for &row in &b {
+                assert!(r
+                    .a
+                    .row_cols(row as usize)
+                    .iter()
+                    .any(|&c| c as usize >= r.n_local()));
+            }
+        }
+    }
+
+    #[test]
+    fn permute_local_preserves_spmv() {
+        let (a, d) = dist(8, 2);
+        let mut d2 = d.clone();
+        // reverse local rows on rank 0
+        let nl = d2.ranks[0].n_local();
+        let perm: Vec<usize> = (0..nl).rev().collect();
+        d2.ranks[0].permute_local(&perm);
+        // same global SpMV result
+        let x: Vec<f64> = (0..a.n_rows()).map(|i| (i as f64).sin()).collect();
+        let mut want = vec![0.0; a.n_rows()];
+        a.spmv(&x, &mut want);
+        for d in [&d, &d2] {
+            let mut xs = d.scatter(&x);
+            let mut stats = crate::distsim::CommStats::default();
+            crate::distsim::exchange_halo(&d.ranks, &mut xs, &mut stats);
+            let ys: Vec<Vec<f64>> = d
+                .ranks
+                .iter()
+                .zip(&xs)
+                .map(|(r, x)| {
+                    let mut y = r.new_vec();
+                    r.a.spmv(x, &mut y);
+                    y
+                })
+                .collect();
+            let got = d.gather(&ys);
+            for (u, v) in got.iter().zip(&want) {
+                assert!((u - v).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn mpi_overhead_small_for_block_partition() {
+        let (_, d) = dist(32, 4);
+        // block partition of a 32x32 grid: halo = 2 boundary lines per cut
+        let o = d.mpi_overhead();
+        assert!(o > 0.0 && o < 0.25, "O_MPI = {o}");
+    }
+}

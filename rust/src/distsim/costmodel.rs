@@ -1,0 +1,108 @@
+//! α-β communication cost model for multi-rank wall-clock estimates.
+//!
+//! This testbed has one physical core, so multi-rank timings cannot be
+//! measured directly; the simulation runs ranks sequentially, measures each
+//! rank's compute time, and combines `max_i(T_compute,i)` with a modeled
+//! communication time per bulk-synchronous round:
+//!
+//!   T_round = α · (messages on critical path) + (bytes on critical path)/β
+//!
+//! Defaults are calibrated to typical HPC interconnects (the paper's
+//! Intel MPI on HDR Infiniband): α ≈ 1.5 µs intra-node / 2.5 µs inter-node,
+//! β ≈ 16 GB/s intra / 12 GB/s inter per rank pair.
+
+#[derive(Clone, Copy, Debug)]
+pub struct CommCostModel {
+    /// Per-message latency, seconds.
+    pub alpha: f64,
+    /// Bandwidth, bytes/second.
+    pub beta: f64,
+    /// Ranks per node: messages between ranks in the same node use
+    /// `intra_alpha`/`intra_beta` instead.
+    pub ranks_per_node: usize,
+    pub intra_alpha: f64,
+    pub intra_beta: f64,
+}
+
+impl Default for CommCostModel {
+    fn default() -> Self {
+        Self {
+            alpha: 2.5e-6,
+            beta: 12.0e9,
+            ranks_per_node: 4,
+            intra_alpha: 1.5e-6,
+            intra_beta: 16.0e9,
+        }
+    }
+}
+
+impl CommCostModel {
+    /// Time for one message of `bytes` between `from` and `to`.
+    pub fn message_time(&self, from: usize, to: usize, bytes: usize) -> f64 {
+        let same_node = from / self.ranks_per_node == to / self.ranks_per_node;
+        if same_node {
+            self.intra_alpha + bytes as f64 / self.intra_beta
+        } else {
+            self.alpha + bytes as f64 / self.beta
+        }
+    }
+
+    /// Critical-path time of one bulk-synchronous exchange round: the
+    /// busiest rank's serialized send+recv cost (a conservative but standard
+    /// BSP estimate).
+    ///
+    /// `traffic[i]` = list of (peer, bytes) for rank i's receives.
+    pub fn round_time(&self, traffic: &[Vec<(usize, usize)>]) -> f64 {
+        let n = traffic.len();
+        let mut per_rank = vec![0.0f64; n];
+        for (i, recvs) in traffic.iter().enumerate() {
+            for &(peer, bytes) in recvs {
+                let t = self.message_time(peer, i, bytes);
+                per_rank[i] += t; // recv side
+                per_rank[peer] += t; // send side
+            }
+        }
+        per_rank.into_iter().fold(0.0, f64::max)
+    }
+}
+
+/// Build the per-round traffic table of a distributed matrix (what one
+/// `exchange_halo` moves).
+pub fn halo_traffic(ranks: &[crate::distsim::RankLocal]) -> Vec<Vec<(usize, usize)>> {
+    ranks
+        .iter()
+        .map(|r| {
+            r.recv
+                .iter()
+                .map(|rp| (rp.from, rp.slots.len() * std::mem::size_of::<f64>()))
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intra_node_cheaper_than_inter() {
+        let m = CommCostModel::default();
+        assert!(m.message_time(0, 1, 4096) < m.message_time(0, 7, 4096));
+    }
+
+    #[test]
+    fn round_time_is_critical_path() {
+        let m = CommCostModel::default();
+        // rank 1 receives from 0 and 2; rank 3 idle
+        let traffic = vec![vec![], vec![(0, 8000), (2, 8000)], vec![], vec![]];
+        let t = m.round_time(&traffic);
+        let expect = 2.0 * m.message_time(0, 1, 8000);
+        assert!((t - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_traffic_is_free() {
+        let m = CommCostModel::default();
+        assert_eq!(m.round_time(&[vec![], vec![]]), 0.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Simulated-MPI distributed runtime (DESIGN.md §Substitutions).
+//!
+//! Ranks are explicit state machines inside one process. Everything the
+//! paper *counts* — halo elements, message sizes, redundant work — is exact;
+//! multi-rank wall-clock estimates combine measured per-rank compute time
+//! with an α-β communication cost model ([`costmodel`]).
+//!
+//! The data layout mirrors a textbook distributed CRS code (paper §4,
+//! Fig. 3): each rank owns a contiguous-in-partition set of rows, stores its
+//! local block with *local* column indexing, and keeps remote x-elements in
+//! a halo tail appended to its local vectors. Halo slots are grouped by
+//! owner rank (ascending global id within an owner) so each receive is one
+//! contiguous segment — the standard MPI bulk-transfer layout.
+
+pub mod build;
+pub mod comm;
+pub mod costmodel;
+
+pub use build::DistMatrix;
+pub use comm::{exchange_halo, CommStats};
+pub use costmodel::CommCostModel;
+
+/// Per-destination send plan: local row indices whose values this rank
+/// must ship to `to` before each SpMV.
+#[derive(Clone, Debug)]
+pub struct SendPlan {
+    pub to: usize,
+    /// Local row indices (into this rank's vectors).
+    pub rows: Vec<u32>,
+}
+
+/// Per-source receive plan: the contiguous halo-slot segment filled by
+/// rank `from`.
+#[derive(Clone, Debug)]
+pub struct RecvPlan {
+    pub from: usize,
+    /// Halo slot range, offsets relative to `n_local`.
+    pub slots: std::ops::Range<usize>,
+}
+
+/// One rank's share of the distributed matrix.
+#[derive(Clone, Debug)]
+pub struct RankLocal {
+    pub rank: usize,
+    /// Global ids of owned rows, ascending; local row `r` is `owned[r]`.
+    pub owned: Vec<usize>,
+    /// Local block: `n_local` rows, `n_local + n_halo` columns.
+    /// Columns `< n_local` are owned rows (same order as `owned`);
+    /// columns `>= n_local` are halo slots.
+    pub a: crate::matrix::CsrMatrix,
+    /// Global id of each halo slot (index 0 = local column `n_local`).
+    pub halo_globals: Vec<usize>,
+    pub send: Vec<SendPlan>,
+    pub recv: Vec<RecvPlan>,
+}
+
+impl RankLocal {
+    pub fn n_local(&self) -> usize {
+        self.owned.len()
+    }
+
+    pub fn n_halo(&self) -> usize {
+        self.halo_globals.len()
+    }
+
+    /// Vector length for this rank: owned + halo tail (paper's
+    /// `N_{r,i} + N_{h,i}`).
+    pub fn vec_len(&self) -> usize {
+        self.n_local() + self.n_halo()
+    }
+
+    /// Allocate a zeroed local vector (with halo tail).
+    pub fn new_vec(&self) -> Vec<f64> {
+        vec![0.0; self.vec_len()]
+    }
+
+    /// Apply a permutation to the *local* rows (halo slots are unaffected):
+    /// `perm[new] = old`. Rewrites the local block, `owned`, and send plans.
+    /// Used by DLB-MPK to make distance classes contiguous (paper §5:
+    /// "gathering these boundary vertices and reordering the matrix during
+    /// preprocessing").
+    pub fn permute_local(&mut self, perm: &[usize]) {
+        let nl = self.n_local();
+        assert_eq!(perm.len(), nl);
+        let mut inv = vec![0usize; nl];
+        for (new, &old) in perm.iter().enumerate() {
+            inv[old] = new;
+        }
+        // rows in new order, local columns remapped, halo columns unchanged
+        let mut rowptr = Vec::with_capacity(nl + 1);
+        rowptr.push(0usize);
+        let mut colidx = Vec::with_capacity(self.a.nnz());
+        let mut values = Vec::with_capacity(self.a.nnz());
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        for new_r in 0..nl {
+            let old_r = perm[new_r];
+            scratch.clear();
+            for k in self.a.rowptr[old_r]..self.a.rowptr[old_r + 1] {
+                let c = self.a.colidx[k] as usize;
+                let nc = if c < nl { inv[c] } else { c };
+                scratch.push((nc as u32, self.a.values[k]));
+            }
+            scratch.sort_unstable_by_key(|&(c, _)| c);
+            for &(c, v) in &scratch {
+                colidx.push(c);
+                values.push(v);
+            }
+            rowptr.push(colidx.len());
+        }
+        self.a = crate::matrix::CsrMatrix::new(nl, self.a.n_cols, rowptr, colidx, values);
+        self.owned = perm.iter().map(|&old| self.owned[old]).collect();
+        for sp in &mut self.send {
+            for r in &mut sp.rows {
+                *r = inv[*r as usize] as u32;
+            }
+        }
+    }
+
+    /// Local vertices adjacent to the halo — the boundary sources for the
+    /// distance classification (the paper's distance-1 set w.r.t. `B`).
+    pub fn boundary_rows(&self) -> Vec<u32> {
+        let nl = self.n_local();
+        let mut out = Vec::new();
+        for r in 0..nl {
+            if self.a.row_cols(r).iter().any(|&c| c as usize >= nl) {
+                out.push(r as u32);
+            }
+        }
+        out
+    }
+}

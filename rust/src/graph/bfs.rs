@@ -1,0 +1,110 @@
+//! Breadth-first level construction (paper §3, the `L(i)` definition).
+
+use crate::graph::Adjacency;
+
+/// Result of a full BFS traversal: `level_of[v]` for every vertex, plus the
+/// number of levels. Disconnected components are handled the practical way
+/// RACE does: when the frontier empties with unvisited vertices left, the
+/// smallest-index unvisited vertex seeds the *next* level, so levels remain
+/// mutually exclusive and jointly exhaustive.
+pub struct BfsResult {
+    pub level_of: Vec<u32>,
+    pub n_levels: usize,
+}
+
+/// BFS levels from `root` (RACE uses row 0 by default).
+pub fn bfs_levels(g: &Adjacency, root: usize) -> BfsResult {
+    let n = g.n;
+    let mut level_of = vec![u32::MAX; n];
+    if n == 0 {
+        return BfsResult { level_of, n_levels: 0 };
+    }
+    let mut frontier: Vec<u32> = vec![root as u32];
+    level_of[root] = 0;
+    let mut next: Vec<u32> = Vec::new();
+    let mut level = 0u32;
+    let mut visited = 1usize;
+    let mut unvisited_scan = 0usize; // monotone scan pointer for restarts
+    loop {
+        next.clear();
+        for &u in &frontier {
+            for &v in g.neighbors(u as usize) {
+                if level_of[v as usize] == u32::MAX {
+                    level_of[v as usize] = level + 1;
+                    next.push(v);
+                    visited += 1;
+                }
+            }
+        }
+        if next.is_empty() {
+            if visited == n {
+                break;
+            }
+            // disconnected: seed next level with first unvisited vertex
+            while level_of[unvisited_scan] != u32::MAX {
+                unvisited_scan += 1;
+            }
+            level_of[unvisited_scan] = level + 1;
+            next.push(unvisited_scan as u32);
+            visited += 1;
+        }
+        std::mem::swap(&mut frontier, &mut next);
+        level += 1;
+    }
+    BfsResult { level_of, n_levels: level as usize + 1 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Adjacency;
+    use crate::matrix::gen;
+
+    #[test]
+    fn path_graph_levels_are_distance() {
+        let a = gen::tridiag(6);
+        let g = Adjacency::from_matrix(&a);
+        let r = bfs_levels(&g, 0);
+        assert_eq!(r.level_of, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(r.n_levels, 6);
+    }
+
+    #[test]
+    fn stencil_levels_are_manhattan_distance() {
+        let (nx, ny) = (5, 4);
+        let a = gen::stencil_2d_5pt(nx, ny);
+        let g = Adjacency::from_matrix(&a);
+        let r = bfs_levels(&g, 0);
+        for y in 0..ny {
+            for x in 0..nx {
+                assert_eq!(r.level_of[y * nx + x], (x + y) as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn disconnected_components_get_fresh_levels() {
+        // two disjoint edges: {0,1}, {2,3}
+        let mut coo = crate::matrix::CooMatrix::new(4, 4);
+        coo.push(0, 1, 1.0);
+        coo.push(1, 0, 1.0);
+        coo.push(2, 3, 1.0);
+        coo.push(3, 2, 1.0);
+        let g = Adjacency::from_matrix(&coo.to_csr());
+        let r = bfs_levels(&g, 0);
+        assert_eq!(r.level_of[0], 0);
+        assert_eq!(r.level_of[1], 1);
+        // restart: vertex 2 lands in level 2, its neighbor 3 in level 3
+        assert_eq!(r.level_of[2], 2);
+        assert_eq!(r.level_of[3], 3);
+        assert_eq!(r.n_levels, 4);
+    }
+
+    #[test]
+    fn root_choice_shifts_levels() {
+        let a = gen::tridiag(5);
+        let g = Adjacency::from_matrix(&a);
+        let r = bfs_levels(&g, 2);
+        assert_eq!(r.level_of, vec![2, 1, 0, 1, 2]);
+    }
+}

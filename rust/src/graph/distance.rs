@@ -1,0 +1,148 @@
+//! Distance-from-boundary classes `I_k` (paper §5).
+//!
+//! On each MPI rank, local vertices are classified by their graph distance
+//! `k` from the halo boundary `B`: `I_k` can be promoted only to power `k`
+//! during the local cache-blocked phase; vertices with `k >= p_m` form the
+//! bulk structure `M` where RACE blocks freely.
+
+use crate::graph::Adjacency;
+
+/// Multi-source BFS distances from `sources` (u32::MAX = unreachable).
+pub fn multi_source_distances(g: &Adjacency, sources: &[u32]) -> Vec<u32> {
+    let mut dist = vec![u32::MAX; g.n];
+    let mut frontier: Vec<u32> = Vec::with_capacity(sources.len());
+    for &s in sources {
+        if dist[s as usize] == u32::MAX {
+            dist[s as usize] = 0;
+            frontier.push(s);
+        }
+    }
+    let mut next = Vec::new();
+    let mut d = 0u32;
+    while !frontier.is_empty() {
+        next.clear();
+        for &u in &frontier {
+            for &v in g.neighbors(u as usize) {
+                if dist[v as usize] == u32::MAX {
+                    dist[v as usize] = d + 1;
+                    next.push(v);
+                }
+            }
+        }
+        std::mem::swap(&mut frontier, &mut next);
+        d += 1;
+    }
+    dist
+}
+
+/// Distance classes of a rank-local graph.
+///
+/// `class_of[v] = min(dist(v, boundary), cap)` where `cap = p_m` lumps
+/// everything at distance `>= p_m` (and unreachable vertices) into the bulk
+/// `M`. Class indices `1..p_m` are the paper's `I_1 .. I_{p_m-1}` — note
+/// `I_0 = B` is the *halo buffer*, which lives outside the local vertex set,
+/// so local classes start at 1.
+pub struct DistanceClasses {
+    /// For each local vertex: its class in `[1, cap]`; `cap` = bulk `M`.
+    pub class_of: Vec<u32>,
+    pub cap: u32,
+    /// Vertices per class, `counts[k-1]` = |I_k| for k in 1..=cap.
+    pub counts: Vec<usize>,
+}
+
+/// Classify local vertices by distance from the boundary.
+///
+/// * `g` — adjacency of the rank-local graph over `n_local + n_halo`
+///   vertices (halo vertices at indices `>= n_local`).
+/// * `n_local` — number of owned vertices.
+/// * `cap` — `p_m`; distances are clamped to it.
+///
+/// Distance 1 = local vertex adjacent to a halo vertex, matching the paper:
+/// "internal vertices at a distance of k from the boundary B … can only be
+/// elevated up to A^k x".
+pub fn distance_classes(g: &Adjacency, n_local: usize, cap: u32) -> DistanceClasses {
+    assert!(cap >= 1);
+    let halo: Vec<u32> = (n_local as u32..g.n as u32).collect();
+    let dist = multi_source_distances(g, &halo);
+    let mut class_of = vec![0u32; n_local];
+    let mut counts = vec![0usize; cap as usize];
+    for v in 0..n_local {
+        let d = dist[v];
+        let k = if d == u32::MAX { cap } else { d.min(cap) };
+        // Local vertices adjacent to the halo have d == 1 already; d == 0
+        // can't happen for v < n_local because sources are halo-only.
+        debug_assert!(k >= 1);
+        class_of[v] = k;
+        counts[(k - 1) as usize] += 1;
+    }
+    DistanceClasses { class_of, cap, counts }
+}
+
+impl DistanceClasses {
+    /// |M| — vertices in the bulk structure (promotable to p_m locally).
+    pub fn bulk_size(&self) -> usize {
+        self.counts[self.cap as usize - 1]
+    }
+
+    /// Paper Eq. (2): local DLB overhead `1 - |M_i| / N_{i,r}`.
+    pub fn local_overhead(&self) -> f64 {
+        let n: usize = self.counts.iter().sum();
+        if n == 0 {
+            0.0
+        } else {
+            1.0 - self.bulk_size() as f64 / n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Adjacency;
+    use crate::matrix::gen;
+
+    /// Path graph 0-1-2-3-4-5 where 4,5 are "halo".
+    fn path_with_halo() -> Adjacency {
+        Adjacency::from_matrix(&gen::tridiag(6))
+    }
+
+    #[test]
+    fn distances_from_multiple_sources() {
+        let g = path_with_halo();
+        let d = multi_source_distances(&g, &[0, 5]);
+        assert_eq!(d, vec![0, 1, 2, 2, 1, 0]);
+    }
+
+    #[test]
+    fn classes_clamp_to_bulk() {
+        let g = path_with_halo();
+        // local = 0..4, halo = {4, 5}; distances from halo: [4,3,2,1]
+        let dc = distance_classes(&g, 4, 3);
+        assert_eq!(dc.class_of, vec![3, 3, 2, 1]);
+        assert_eq!(dc.counts, vec![1, 1, 2]); // |I_1|=1, |I_2|=1, |M|=2
+        assert_eq!(dc.bulk_size(), 2);
+        assert!((dc.local_overhead() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_halo_means_all_bulk() {
+        let g = Adjacency::from_matrix(&gen::tridiag(4));
+        let dc = distance_classes(&g, 4, 5);
+        assert_eq!(dc.bulk_size(), 4);
+        assert_eq!(dc.local_overhead(), 0.0);
+    }
+
+    #[test]
+    fn boundary_vertex_is_class_one() {
+        let a = gen::stencil_2d_5pt(4, 4);
+        // treat last row of the grid (12..16) as halo
+        let g = Adjacency::from_matrix(&a);
+        let dc = distance_classes(&g, 12, 4);
+        // grid rows y=2 touch halo y=3 -> class 1
+        for x in 0..4 {
+            assert_eq!(dc.class_of[2 * 4 + x], 1);
+            assert_eq!(dc.class_of[4 + x], 2);
+            assert_eq!(dc.class_of[x], 3);
+        }
+    }
+}

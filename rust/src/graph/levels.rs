@@ -1,0 +1,204 @@
+//! The `Levels` structure: BFS levels as contiguous row ranges after the
+//! symmetric "BFS reordering" permutation (paper §3, Fig. 1c/1d).
+
+use crate::graph::{bfs_levels, Adjacency};
+use crate::matrix::CsrMatrix;
+
+/// Levels of a (permuted) matrix.
+///
+/// After BFS reordering, level `i` occupies rows
+/// `[level_ptr[i], level_ptr[i+1])` of the permuted matrix, and the key
+/// invariant holds: every non-zero of a row in level `i` has its column in
+/// levels `{i-1, i, i+1}`.
+#[derive(Clone, Debug)]
+pub struct Levels {
+    /// `level_ptr[i]..level_ptr[i+1]` = rows of level i (permuted indexing).
+    pub level_ptr: Vec<usize>,
+    /// `perm[new] = old` — the symmetric BFS permutation applied.
+    pub perm: Vec<usize>,
+    /// `inv_perm[old] = new`.
+    pub inv_perm: Vec<usize>,
+}
+
+impl Levels {
+    /// Compute BFS levels of `a` from `root` and the stable-by-level
+    /// permutation (original order preserved within a level).
+    pub fn compute(a: &CsrMatrix, root: usize) -> Self {
+        let g = Adjacency::from_symmetric_or_general(a);
+        let r = bfs_levels(&g, root);
+        Self::from_level_of(&r.level_of, r.n_levels)
+    }
+
+    /// Build from a level assignment (counting sort by level, stable).
+    pub fn from_level_of(level_of: &[u32], n_levels: usize) -> Self {
+        let n = level_of.len();
+        let mut counts = vec![0usize; n_levels + 1];
+        for &l in level_of {
+            counts[l as usize + 1] += 1;
+        }
+        for i in 0..n_levels {
+            counts[i + 1] += counts[i];
+        }
+        let level_ptr = counts.clone();
+        let mut perm = vec![0usize; n];
+        let mut fill = counts;
+        for (old, &l) in level_of.iter().enumerate() {
+            perm[fill[l as usize]] = old;
+            fill[l as usize] += 1;
+        }
+        let mut inv_perm = vec![0usize; n];
+        for (new, &old) in perm.iter().enumerate() {
+            inv_perm[old] = new;
+        }
+        Self { level_ptr, perm, inv_perm }
+    }
+
+    pub fn n_levels(&self) -> usize {
+        self.level_ptr.len() - 1
+    }
+
+    pub fn n_rows(&self) -> usize {
+        *self.level_ptr.last().unwrap()
+    }
+
+    /// Row range of level `i` in the permuted matrix.
+    #[inline]
+    pub fn rows(&self, i: usize) -> std::ops::Range<usize> {
+        self.level_ptr[i]..self.level_ptr[i + 1]
+    }
+
+    pub fn level_size(&self, i: usize) -> usize {
+        self.level_ptr[i + 1] - self.level_ptr[i]
+    }
+
+    /// Level index of a permuted row (binary search).
+    pub fn level_of_row(&self, row: usize) -> usize {
+        match self.level_ptr.binary_search(&row) {
+            Ok(i) => {
+                // row == level_ptr[i]; empty levels share the same ptr value,
+                // pick the first level that actually contains the row.
+                let mut i = i;
+                while self.level_ptr[i + 1] == row {
+                    i += 1;
+                }
+                i
+            }
+            Err(i) => i - 1,
+        }
+    }
+
+    /// Verify the level invariant on the *permuted* matrix `b`:
+    /// all columns of rows in level `i` fall in levels `{i-1, i, i+1}`.
+    pub fn validate(&self, b: &CsrMatrix) -> Result<(), String> {
+        for i in 0..self.n_levels() {
+            for r in self.rows(i) {
+                for &c in b.row_cols(r) {
+                    let lc = self.level_of_row(c as usize);
+                    if lc + 1 < i || lc > i + 1 {
+                        return Err(format!(
+                            "row {r} (level {i}) references column {c} (level {lc})"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Matrix bytes (CRS accounting) held by the level range `[lo, hi)` of
+    /// the permuted matrix — the quantity the cache budget `C` constrains.
+    pub fn bytes_of_levels(&self, b: &CsrMatrix, lo: usize, hi: usize) -> usize {
+        let rows = self.level_ptr[hi] - self.level_ptr[lo];
+        let nnz = b.rowptr[self.level_ptr[hi]] - b.rowptr[self.level_ptr[lo]];
+        crate::matrix::crs_bytes(rows, nnz)
+    }
+}
+
+/// Convenience: compute levels of `a` and return `(permuted_matrix, levels)`
+/// — the standard RACE preprocessing step.
+pub fn bfs_reorder(a: &CsrMatrix, root: usize) -> (CsrMatrix, Levels) {
+    let levels = Levels::compute(a, root);
+    let b = a.permute_symmetric(&levels.perm);
+    (b, levels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    #[test]
+    fn levels_partition_rows() {
+        let a = gen::stencil_2d_5pt(7, 6);
+        let (b, lv) = bfs_reorder(&a, 0);
+        assert_eq!(lv.n_rows(), a.n_rows());
+        assert_eq!(lv.n_levels(), 7 + 6 - 1);
+        lv.validate(&b).unwrap();
+        // permutation is a bijection
+        let mut seen = vec![false; a.n_rows()];
+        for &p in &lv.perm {
+            assert!(!seen[p]);
+            seen[p] = true;
+        }
+    }
+
+    #[test]
+    fn validate_rejects_wrong_levels() {
+        // Matrix with a long-range edge 0 <-> 3: one-row-per-level
+        // assignment violates the adjacency invariant (levels 0 and 3).
+        let mut coo = crate::matrix::CooMatrix::new(4, 4);
+        for i in 0..4 {
+            coo.push(i, i, 1.0);
+        }
+        coo.push(0, 3, 1.0);
+        coo.push(3, 0, 1.0);
+        let a = coo.to_csr();
+        let bad = Levels {
+            level_ptr: vec![0, 1, 2, 3, 4],
+            perm: (0..4).collect(),
+            inv_perm: (0..4).collect(),
+        };
+        assert!(bad.validate(&a).is_err());
+        // correct BFS levels pass
+        let (b, lv) = bfs_reorder(&a, 0);
+        lv.validate(&b).unwrap();
+        // single level is trivially valid
+        let one = Levels { level_ptr: vec![0, 4], perm: (0..4).collect(), inv_perm: (0..4).collect() };
+        assert!(one.validate(&a).is_ok());
+    }
+
+    #[test]
+    fn level_of_row_with_empty_levels() {
+        let lv = Levels {
+            level_ptr: vec![0, 2, 2, 5],
+            perm: (0..5).collect(),
+            inv_perm: (0..5).collect(),
+        };
+        assert_eq!(lv.level_of_row(0), 0);
+        assert_eq!(lv.level_of_row(1), 0);
+        assert_eq!(lv.level_of_row(2), 2); // level 1 is empty
+        assert_eq!(lv.level_of_row(4), 2);
+    }
+
+    #[test]
+    fn bytes_of_levels_sums_crs() {
+        let a = gen::stencil_2d_5pt(8, 8);
+        let (b, lv) = bfs_reorder(&a, 0);
+        let total: usize = (0..lv.n_levels()).map(|i| lv.bytes_of_levels(&b, i, i + 1)).sum();
+        assert_eq!(total, b.crs_bytes());
+    }
+
+    #[test]
+    fn bfs_reorder_reduces_bandwidth_of_shuffled_stencil() {
+        // a permuted stencil has terrible bandwidth; BFS reorder restores
+        // level-locality
+        let a = gen::stencil_2d_5pt(16, 16);
+        let mut perm: Vec<usize> = (0..a.n_rows()).collect();
+        let mut rng = crate::util::rng::Rng::new(1);
+        rng.shuffle(&mut perm);
+        let shuffled = a.permute_symmetric(&perm);
+        let (b, lv) = bfs_reorder(&shuffled, 0);
+        lv.validate(&b).unwrap();
+        assert!(b.bandwidth() < shuffled.bandwidth());
+    }
+}

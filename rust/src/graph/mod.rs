@@ -1,0 +1,174 @@
+//! Matrix↔graph correspondence and level machinery (paper §3).
+//!
+//! A sparse matrix `A` corresponds to a graph `G(A)` whose vertices are rows
+//! and whose edges are non-zeros. RACE's level-based SpMV formulation rests
+//! on BFS levels of this graph: `N(L(i)) ⊆ {L(i-1), L(i), L(i+1)}`, so a
+//! wavefront over levels can promote rows to higher powers of `A` while the
+//! relevant matrix data is still in cache.
+//!
+//! Non-symmetric patterns are handled the way RACE does (paper footnote 4):
+//! levels are computed on the *symmetrized* pattern `A + Aᵀ`; the fill-in
+//! affects only level construction, never the numerics.
+
+pub mod bfs;
+pub mod distance;
+pub mod levels;
+
+pub use bfs::bfs_levels;
+pub use distance::distance_classes;
+pub use levels::Levels;
+
+use crate::matrix::CsrMatrix;
+
+/// Symmetrized adjacency (pattern of `A + Aᵀ`, self-loops removed).
+///
+/// Self-loops (diagonal entries) are irrelevant for BFS levels — a vertex is
+/// trivially its own distance-0 neighbor — and removing them keeps level
+/// invariants clean.
+#[derive(Clone, Debug)]
+pub struct Adjacency {
+    pub n: usize,
+    pub ptr: Vec<usize>,
+    pub adj: Vec<u32>,
+}
+
+impl Adjacency {
+    /// Fast path for pattern-symmetric matrices: adjacency = pattern minus
+    /// the diagonal, no sort needed. Falls back to the general
+    /// (symmetrizing) path otherwise.
+    pub fn from_symmetric_or_general(a: &CsrMatrix) -> Self {
+        if a.pattern_symmetric() {
+            let n = a.n_rows;
+            let mut ptr = Vec::with_capacity(n + 1);
+            ptr.push(0usize);
+            let mut adj = Vec::with_capacity(a.nnz());
+            for r in 0..n {
+                for &c in a.row_cols(r) {
+                    if c as usize != r {
+                        adj.push(c);
+                    }
+                }
+                ptr.push(adj.len());
+            }
+            Self { n, ptr, adj }
+        } else {
+            Self::from_matrix(a)
+        }
+    }
+
+    /// Adjacency of a rank-local block (`nl` owned rows, `nv − nl` halo
+    /// slots as extra vertices). Assumes the local-local sub-pattern is
+    /// symmetric (true whenever the global matrix is pattern-symmetric,
+    /// which `distsim::DistMatrix::build` preserves); debug-asserted.
+    /// Halo back-edges are derived by bucketing — no global sort.
+    pub fn from_local_block(a: &CsrMatrix, nl: usize) -> Self {
+        let nv = a.n_cols;
+        debug_assert!(a.n_rows == nl && nv >= nl);
+        // degree pass
+        let mut ptr = vec![0usize; nv + 1];
+        for r in 0..nl {
+            for &c in a.row_cols(r) {
+                let c = c as usize;
+                if c == r {
+                    continue;
+                }
+                ptr[r + 1] += 1;
+                if c >= nl {
+                    ptr[c + 1] += 1; // halo back-edge
+                } else {
+                    debug_assert!(
+                        a.row_cols(c).binary_search(&(r as u32)).is_ok(),
+                        "local block pattern not symmetric; use from_matrix"
+                    );
+                }
+            }
+        }
+        for i in 0..nv {
+            ptr[i + 1] += ptr[i];
+        }
+        let mut adj = vec![0u32; ptr[nv]];
+        let mut fill = ptr.clone();
+        for r in 0..nl {
+            for &c in a.row_cols(r) {
+                let c = c as usize;
+                if c == r {
+                    continue;
+                }
+                adj[fill[r]] = c as u32;
+                fill[r] += 1;
+                if c >= nl {
+                    adj[fill[c]] = r as u32;
+                    fill[c] += 1;
+                }
+            }
+        }
+        // halo rows were filled in ascending r automatically; local rows are
+        // sorted because CSR columns are sorted
+        Self { n: nv, ptr, adj }
+    }
+
+    pub fn from_matrix(a: &CsrMatrix) -> Self {
+        assert_eq!(a.n_rows, a.n_cols, "graph view needs a square matrix");
+        let n = a.n_rows;
+        // degree count for A + Aᵀ without duplicates: collect pairs
+        let mut pairs: Vec<(u32, u32)> = Vec::with_capacity(2 * a.nnz());
+        for r in 0..n {
+            for &c in a.row_cols(r) {
+                if c as usize != r {
+                    pairs.push((r as u32, c));
+                    pairs.push((c, r as u32));
+                }
+            }
+        }
+        pairs.sort_unstable();
+        pairs.dedup();
+        let mut ptr = vec![0usize; n + 1];
+        for &(r, _) in &pairs {
+            ptr[r as usize + 1] += 1;
+        }
+        for i in 0..n {
+            ptr[i + 1] += ptr[i];
+        }
+        let adj = pairs.into_iter().map(|(_, c)| c).collect();
+        Self { n, ptr, adj }
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.adj[self.ptr[v]..self.ptr[v + 1]]
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.ptr[v + 1] - self.ptr[v]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    #[test]
+    fn adjacency_symmetrizes_and_drops_diagonal() {
+        // Asymmetric 3x3: edge 0->2 only.
+        let a = crate::matrix::CsrMatrix::new(
+            3,
+            3,
+            vec![0, 2, 3, 4],
+            vec![0, 2, 1, 2],
+            vec![1.0; 4],
+        );
+        let g = Adjacency::from_matrix(&a);
+        assert_eq!(g.neighbors(0), &[2]);
+        assert_eq!(g.neighbors(2), &[0]); // symmetrized
+        assert_eq!(g.neighbors(1), &[] as &[u32]); // diagonal removed
+    }
+
+    #[test]
+    fn stencil_degrees() {
+        let a = gen::stencil_2d_5pt(4, 4);
+        let g = Adjacency::from_matrix(&a);
+        assert_eq!(g.degree(0), 2); // corner
+        assert_eq!(g.degree(5), 4); // interior
+    }
+}

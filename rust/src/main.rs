@@ -1,0 +1,282 @@
+//! `dlb-mpk` — CLI launcher for the DLB-MPK library.
+//!
+//! Subcommands:
+//!   run        run TRAD vs DLB on a matrix and report performance
+//!   ca         run CA-MPK and report its overheads
+//!   suite      list the Table-4 synthetic benchmark suite
+//!   bandwidth  measure the load-only bandwidth ladder (Fig. 7)
+//!   anderson   Chebyshev propagation demo on the Anderson model
+//!
+//! Examples:
+//!   dlb-mpk run --matrix banded:400000,12,2000 --ranks 4 --pm 6 --cache-mib 8
+//!   dlb-mpk run --matrix suite:Serena-s,0.5 --ranks 2 --pm 4
+//!   dlb-mpk anderson --l 32 --w 1.0 --steps 5
+//!   dlb-mpk bandwidth --max-mib 512
+
+use anyhow::{bail, Context, Result};
+
+use dlb_mpk::coordinator::{self, MatrixSpec, Report, RunConfig};
+use dlb_mpk::matrix::gen;
+use dlb_mpk::partition::Method;
+use dlb_mpk::util::mib;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = Flags::parse(&args[1..])?;
+    match cmd.as_str() {
+        "run" => cmd_run(&flags),
+        "ca" => cmd_ca(&flags),
+        "suite" => cmd_suite(&flags),
+        "bandwidth" => cmd_bandwidth(&flags),
+        "anderson" => cmd_anderson(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `dlb-mpk help`)"),
+    }
+}
+
+fn print_usage() {
+    println!("{}", include_str_usage());
+}
+
+fn include_str_usage() -> &'static str {
+    "dlb-mpk — Distributed Level-Blocked Matrix Power Kernels\n\
+     \n\
+     USAGE: dlb-mpk <command> [flags]\n\
+     \n\
+     COMMANDS:\n\
+       run        TRAD vs DLB performance on one matrix\n\
+       ca         CA-MPK baseline overheads\n\
+       suite      print the Table-4 synthetic suite\n\
+       bandwidth  load-only bandwidth ladder (Fig. 7)\n\
+       anderson   Chebyshev/Anderson propagation demo (Fig. 11)\n\
+     \n\
+     COMMON FLAGS:\n\
+       --matrix SPEC    stencil2d:NX,NY | stencil3d:NX,NY,NZ |\n\
+                        banded:N,NNZR,BAND[,SEED] | anderson:L[,W[,SEED]] |\n\
+                        suite:NAME[,SCALE] | file:PATH\n\
+       --ranks N        simulated MPI ranks (default 1)\n\
+       --pm P           power p_m (default 4)\n\
+       --cache-mib C    DLB cache budget (default 16)\n\
+       --partitioner M  block | greedy | bisect (default bisect)\n\
+       --reps R         timing repetitions (default 5)\n\
+       --no-validate    skip TRAD/DLB equivalence check\n"
+}
+
+struct Flags(std::collections::BTreeMap<String, String>);
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Self> {
+        let mut m = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if !a.starts_with("--") {
+                bail!("unexpected argument {a:?}");
+            }
+            let key = a.trim_start_matches("--").to_string();
+            let boolean = matches!(key.as_str(), "no-validate" | "fast");
+            if boolean {
+                m.insert(key, "true".into());
+                i += 1;
+            } else {
+                let v = args.get(i + 1).with_context(|| format!("flag --{key} needs a value"))?;
+                m.insert(key, v.clone());
+                i += 2;
+            }
+        }
+        Ok(Self(m))
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.0.get(k).map(|s| s.as_str())
+    }
+
+    fn usize(&self, k: &str, default: usize) -> Result<usize> {
+        self.get(k).map_or(Ok(default), |v| v.parse().with_context(|| format!("--{k}")))
+    }
+
+    fn f64(&self, k: &str, default: f64) -> Result<f64> {
+        self.get(k).map_or(Ok(default), |v| v.parse().with_context(|| format!("--{k}")))
+    }
+
+    fn has(&self, k: &str) -> bool {
+        self.get(k) == Some("true")
+    }
+}
+
+fn parse_matrix(spec: &str) -> Result<MatrixSpec> {
+    let (kind, rest) = spec.split_once(':').unwrap_or((spec, ""));
+    fn nums(s: &str) -> Vec<&str> {
+        s.split(',').filter(|t| !t.is_empty()).collect()
+    }
+    Ok(match kind {
+        "stencil2d" => {
+            let p = nums(rest);
+            anyhow::ensure!(p.len() == 2, "stencil2d:NX,NY");
+            MatrixSpec::Stencil2D { nx: p[0].parse()?, ny: p[1].parse()? }
+        }
+        "stencil3d" => {
+            let p = nums(rest);
+            anyhow::ensure!(p.len() == 3, "stencil3d:NX,NY,NZ");
+            MatrixSpec::Stencil3D { nx: p[0].parse()?, ny: p[1].parse()?, nz: p[2].parse()? }
+        }
+        "banded" => {
+            let p = nums(rest);
+            anyhow::ensure!(p.len() >= 3, "banded:N,NNZR,BAND[,SEED]");
+            MatrixSpec::Banded {
+                n: p[0].parse()?,
+                nnzr: p[1].parse()?,
+                band: p[2].parse()?,
+                seed: p.get(3).map_or(Ok(1), |s| s.parse())?,
+            }
+        }
+        "anderson" => {
+            let p = nums(rest);
+            anyhow::ensure!(!p.is_empty(), "anderson:L[,W[,SEED]]");
+            MatrixSpec::Anderson {
+                l: p[0].parse()?,
+                w: p.get(1).map_or(Ok(1.0), |s| s.parse())?,
+                seed: p.get(2).map_or(Ok(1), |s| s.parse())?,
+            }
+        }
+        "suite" => {
+            let p = nums(rest);
+            anyhow::ensure!(!p.is_empty(), "suite:NAME[,SCALE]");
+            MatrixSpec::Suite {
+                name: p[0].to_string(),
+                scale: p.get(1).map_or(Ok(1.0), |s| s.parse())?,
+            }
+        }
+        "file" => MatrixSpec::File { path: rest.into() },
+        other => bail!("unknown matrix kind {other:?}"),
+    })
+}
+
+fn config(flags: &Flags) -> Result<RunConfig> {
+    let matrix = parse_matrix(flags.get("matrix").unwrap_or("stencil2d:256,256"))?;
+    let partitioner = Method::parse(flags.get("partitioner").unwrap_or("bisect"))
+        .context("--partitioner must be block|greedy|bisect")?;
+    Ok(RunConfig {
+        matrix,
+        n_ranks: flags.usize("ranks", 1)?,
+        partitioner,
+        p_m: flags.usize("pm", 4)?,
+        cache_bytes: flags.usize("cache-mib", 16)? << 20,
+        s_m: flags.usize("sm", 50)?,
+        reps: flags.usize("reps", 5)?,
+        validate: !flags.has("no-validate"),
+    })
+}
+
+fn cmd_run(flags: &Flags) -> Result<()> {
+    let cfg = config(flags)?;
+    let out = coordinator::run(&cfg)?;
+    Report::print_header();
+    for r in &out.reports {
+        r.print_row();
+    }
+    let speedup = out.reports[0].time.median_s / out.reports[1].time.median_s;
+    println!("\nDLB speedup over TRAD: {speedup:.2}x");
+    Ok(())
+}
+
+fn cmd_ca(flags: &Flags) -> Result<()> {
+    let cfg = config(flags)?;
+    let (rep, ov) = coordinator::driver::run_ca(&cfg)?;
+    Report::print_header();
+    rep.print_row();
+    println!(
+        "\nCA overheads: base halo {} | extra halo {} ({:.2}% of rows) | redundant nnz {} ({:.2}% of nnz)",
+        ov.base_halo,
+        ov.extra_halo,
+        100.0 * ov.rel_extra_halo(rep.n_rows),
+        ov.redundant_nnz,
+        100.0 * ov.rel_redundant(rep.nnz),
+    );
+    Ok(())
+}
+
+fn cmd_suite(flags: &Flags) -> Result<()> {
+    let scale = flags.f64("scale", 0.25)?;
+    println!(
+        "{:<16} {:>10} {:>12} {:>7} {:>9}  (scale {scale})",
+        "name", "N_r", "N_nz", "N_nzr", "CRS MiB"
+    );
+    for e in gen::suite() {
+        let a = (e.build)(scale);
+        println!(
+            "{:<16} {:>10} {:>12} {:>7.1} {:>9}",
+            e.name,
+            a.n_rows(),
+            a.nnz(),
+            a.nnzr(),
+            mib(a.crs_bytes())
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bandwidth(flags: &Flags) -> Result<()> {
+    let max_mib = flags.usize("max-mib", 256)?;
+    println!("{:>12} {:>10}", "bytes", "GB/s");
+    for p in dlb_mpk::perf::bandwidth::bandwidth_sweep(64 << 10, max_mib << 20, 3) {
+        println!("{:>12} {:>10.2}", p.bytes, p.gb_per_s);
+    }
+    Ok(())
+}
+
+fn cmd_anderson(flags: &Flags) -> Result<()> {
+    use dlb_mpk::apps::chebyshev::{wave_packet, ChebyshevConfig, ChebyshevPropagator, Engine};
+    use dlb_mpk::apps::observables::center_of_mass;
+    use dlb_mpk::distsim::DistMatrix;
+    use dlb_mpk::matrix::anderson::{anderson, AndersonConfig};
+    use dlb_mpk::mpk::dlb::DlbOptions;
+    use dlb_mpk::mpk::NativeBackend;
+    use dlb_mpk::partition::partition;
+
+    let l = flags.usize("l", 24)?;
+    let w = flags.f64("w", 1.0)?;
+    let steps = flags.usize("steps", 5)?;
+    let ranks = flags.usize("ranks", 1)?;
+    let acfg = AndersonConfig { lx: l, ly: l, lz: l, w, t: 1.0, t_perp: 1.0, seed: 42 };
+    let h = anderson(&acfg);
+    println!("anderson {}^3: {} sites, {} nnz", l, h.n_rows(), h.nnz());
+    let part = partition(&h, ranks, Method::RecursiveBisect);
+    let dist = DistMatrix::build(&h, &part);
+    let ccfg = ChebyshevConfig {
+        dt: flags.f64("dt", 1.0)?,
+        p_m: flags.usize("pm", 8)?,
+        engine: Engine::Dlb,
+        dlb: DlbOptions { cache_bytes: flags.usize("cache-mib", 16)? << 20, s_m: 50 },
+    };
+    let mut prop = ChebyshevPropagator::new(&h, &dist, ccfg);
+    println!("chebyshev: {} terms per step, block p_m = {}", prop.n_terms, ccfg.p_m);
+    let mut psi = wave_packet(&acfg, l as f64 / 8.0, [std::f64::consts::FRAC_PI_2, 0.0, 0.0]);
+    for s in 0..steps {
+        psi = prop.step(&psi, &mut NativeBackend);
+        let com = center_of_mass(&acfg, &psi.density());
+        println!(
+            "step {:>3}: norm² = {:.12}  ⟨x⟩ = {:+.3}  ⟨y⟩ = {:+.3}  ⟨z⟩ = {:+.3}",
+            s + 1,
+            psi.norm2(),
+            com[0],
+            com[1],
+            com[2]
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,186 @@
+//! Anderson-model Hamiltonian generator (paper §7, Eq. 8).
+//!
+//! Stands in for the ScaMaC generator: a single-particle tight-binding
+//! Hamiltonian on an `lx × ly × lz` cubic lattice with uncorrelated uniform
+//! disorder `w_r ∈ [-1, 1]` scaled by `W/2` on the diagonal, hopping `-t`
+//! along x and `-t_perp` along y/z (the weakly-coupled-chains variant used
+//! for the quantum-boomerang study; `t_perp == t` recovers the isotropic
+//! model). Open boundary conditions; site index `r = x + lx·(y + ly·z)`.
+
+use crate::matrix::CsrMatrix;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct AndersonConfig {
+    pub lx: usize,
+    pub ly: usize,
+    pub lz: usize,
+    /// Disorder strength W (diagonal is `W/2 · w_r`).
+    pub w: f64,
+    /// Hopping along x.
+    pub t: f64,
+    /// Hopping along y and z (`t_perp < t` = weakly coupled chains).
+    pub t_perp: f64,
+    pub seed: u64,
+}
+
+impl AndersonConfig {
+    pub fn isotropic(l: usize, w: f64, seed: u64) -> Self {
+        Self { lx: l, ly: l, lz: l, w, t: 1.0, t_perp: 1.0, seed }
+    }
+
+    pub fn n_sites(&self) -> usize {
+        self.lx * self.ly * self.lz
+    }
+
+    #[inline]
+    pub fn site(&self, x: usize, y: usize, z: usize) -> usize {
+        x + self.lx * (y + self.ly * z)
+    }
+}
+
+/// Build the Anderson Hamiltonian as a CRS matrix.
+///
+/// Builds CSR directly (no COO assembly): the stencil structure is known, so
+/// each row's sorted neighbor list is emitted in one pass — this keeps
+/// multi-GiB weak-scaling lattices (Table 5 ladder) fast to generate.
+pub fn anderson(cfg: &AndersonConfig) -> CsrMatrix {
+    let n = cfg.n_sites();
+    let (lx, ly, lz) = (cfg.lx, cfg.ly, cfg.lz);
+    // disorder drawn in site order so the matrix is independent of the
+    // assembly strategy (must match the historical COO ordering)
+    let mut rng = Rng::new(cfg.seed);
+    let mut diag = Vec::with_capacity(n);
+    for _ in 0..n {
+        diag.push(0.5 * cfg.w * rng.range_f64(-1.0, 1.0));
+    }
+
+    let mut rowptr = Vec::with_capacity(n + 1);
+    rowptr.push(0usize);
+    // 7-point upper bound on nnz
+    let mut colidx: Vec<u32> = Vec::with_capacity(7 * n);
+    let mut values: Vec<f64> = Vec::with_capacity(7 * n);
+    for z in 0..lz {
+        for y in 0..ly {
+            for x in 0..lx {
+                let r = cfg.site(x, y, z);
+                // neighbors in ascending column order:
+                // -z, -y, -x, diag, +x, +y, +z
+                if z > 0 && cfg.t_perp != 0.0 {
+                    colidx.push((r - lx * ly) as u32);
+                    values.push(-cfg.t_perp);
+                }
+                if y > 0 && cfg.t_perp != 0.0 {
+                    colidx.push((r - lx) as u32);
+                    values.push(-cfg.t_perp);
+                }
+                if x > 0 && cfg.t != 0.0 {
+                    colidx.push((r - 1) as u32);
+                    values.push(-cfg.t);
+                }
+                if diag[r] != 0.0 {
+                    colidx.push(r as u32);
+                    values.push(diag[r]);
+                }
+                if x + 1 < lx && cfg.t != 0.0 {
+                    colidx.push((r + 1) as u32);
+                    values.push(-cfg.t);
+                }
+                if y + 1 < ly && cfg.t_perp != 0.0 {
+                    colidx.push((r + lx) as u32);
+                    values.push(-cfg.t_perp);
+                }
+                if z + 1 < lz && cfg.t_perp != 0.0 {
+                    colidx.push((r + lx * ly) as u32);
+                    values.push(-cfg.t_perp);
+                }
+                rowptr.push(colidx.len());
+            }
+        }
+    }
+    CsrMatrix::new(n, n, rowptr, colidx, values)
+}
+
+/// Paper Table 5 weak-scaling ladder: per-domain matrix held at ~constant
+/// CRS size by doubling one dimension per step, innermost (x) doubled last
+/// "to respect layer conditions for cache blocking".
+///
+/// `base_l` is the cube edge at 1 domain (paper: 160; scaled down here).
+pub fn weak_scaling_configs(base_l: usize, domains: &[usize], w: f64, seed: u64) -> Vec<AndersonConfig> {
+    domains
+        .iter()
+        .map(|&d| {
+            assert!(d.is_power_of_two(), "domain counts must be powers of two");
+            let k = d.trailing_zeros() as usize;
+            // double z, then y, then x, cyclically (innermost x last)
+            let mut dims = [base_l, base_l, base_l]; // x, y, z
+            for i in 0..k {
+                let axis = 2 - (i % 3); // z, y, x, z, y, x, ...
+                dims[axis] *= 2;
+            }
+            AndersonConfig { lx: dims[0], ly: dims[1], lz: dims[2], w, t: 1.0, t_perp: 1.0, seed }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anderson_is_symmetric_7pt() {
+        let cfg = AndersonConfig::isotropic(8, 1.0, 3);
+        let a = anderson(&cfg);
+        assert_eq!(a.n_rows(), 512);
+        assert!(a.pattern_symmetric());
+        // interior site: diag + 6 neighbors
+        let r = cfg.site(4, 4, 4);
+        assert_eq!(a.row_cols(r).len(), 7);
+        // exact count: n diag + 2*3*l^2*(l-1) hopping = 512 + 2688 for l = 8;
+        // nnzr -> 7.0 as l grows (paper Table 5 uses l >= 160).
+        assert_eq!(a.nnz(), 512 + 2 * 3 * 8 * 8 * 7);
+    }
+
+    #[test]
+    fn disorder_bounded_by_w_half() {
+        let cfg = AndersonConfig::isotropic(6, 4.0, 9);
+        let a = anderson(&cfg);
+        for r in 0..a.n_rows() {
+            let idx = a.row_cols(r).binary_search(&(r as u32)).unwrap();
+            let d = a.row_vals(r)[idx];
+            assert!(d.abs() <= 2.0, "diag {d} exceeds W/2");
+        }
+    }
+
+    #[test]
+    fn anisotropic_hopping() {
+        let cfg = AndersonConfig { lx: 4, ly: 4, lz: 4, w: 0.0, t: 1.0, t_perp: 0.001, seed: 1 };
+        let a = anderson(&cfg);
+        let r = cfg.site(1, 1, 1);
+        let cols = a.row_cols(r);
+        let vals = a.row_vals(r);
+        for (c, v) in cols.iter().zip(vals) {
+            let c = *c as usize;
+            if c == cfg.site(0, 1, 1) || c == cfg.site(2, 1, 1) {
+                assert_eq!(*v, -1.0);
+            } else if c != r {
+                assert_eq!(*v, -0.001);
+            }
+        }
+    }
+
+    #[test]
+    fn weak_scaling_doubles_sites() {
+        let cfgs = weak_scaling_configs(16, &[1, 2, 4, 8], 1.0, 0);
+        let sizes: Vec<usize> = cfgs.iter().map(|c| c.n_sites()).collect();
+        assert_eq!(sizes, vec![4096, 8192, 16384, 32768]);
+        // x doubled last: after 3 doublings dims are (32, 32, 32)
+        assert_eq!((cfgs[3].lx, cfgs[3].ly, cfgs[3].lz), (32, 32, 32));
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let cfg = AndersonConfig::isotropic(5, 2.0, 77);
+        assert_eq!(anderson(&cfg), anderson(&cfg));
+    }
+}

@@ -1,0 +1,90 @@
+//! Coordinate-format builder: accumulate (row, col, val) triplets, then
+//! compact into CRS (duplicates summed — the standard assembly contract).
+
+use crate::matrix::CsrMatrix;
+
+#[derive(Clone, Debug, Default)]
+pub struct CooMatrix {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    entries: Vec<(u32, u32, f64)>,
+}
+
+impl CooMatrix {
+    pub fn new(n_rows: usize, n_cols: usize) -> Self {
+        Self { n_rows, n_cols, entries: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.n_rows && c < self.n_cols, "({r},{c}) out of bounds");
+        self.entries.push((r as u32, c as u32, v));
+    }
+
+    pub fn nnz_raw(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Sort, sum duplicates, drop explicit zeros produced by cancellation,
+    /// and emit CRS.
+    pub fn to_csr(mut self) -> CsrMatrix {
+        self.entries.sort_unstable_by_key(|&(r, c, _)| ((r as u64) << 32) | c as u64);
+        let mut rowptr = vec![0usize; self.n_rows + 1];
+        let mut colidx: Vec<u32> = Vec::with_capacity(self.entries.len());
+        let mut values: Vec<f64> = Vec::with_capacity(self.entries.len());
+        let mut it = self.entries.iter().peekable();
+        while let Some(&(r, c, v)) = it.next() {
+            let mut sum = v;
+            while let Some(&&(r2, c2, v2)) = it.peek() {
+                if r2 == r && c2 == c {
+                    sum += v2;
+                    it.next();
+                } else {
+                    break;
+                }
+            }
+            if sum != 0.0 {
+                colidx.push(c);
+                values.push(sum);
+                rowptr[r as usize + 1] += 1;
+            }
+        }
+        for r in 0..self.n_rows {
+            rowptr[r + 1] += rowptr[r];
+        }
+        CsrMatrix::new(self.n_rows, self.n_cols, rowptr, colidx, values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_sums_duplicates() {
+        let mut coo = CooMatrix::new(2, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 0, 2.0);
+        coo.push(1, 1, 5.0);
+        coo.push(0, 1, -1.0);
+        let a = coo.to_csr();
+        assert_eq!(a.nnz(), 3);
+        let d = a.to_dense();
+        assert_eq!(d[0], vec![3.0, -1.0]);
+        assert_eq!(d[1], vec![0.0, 5.0]);
+    }
+
+    #[test]
+    fn cancellation_drops_entry() {
+        let mut coo = CooMatrix::new(1, 1);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 0, -1.0);
+        assert_eq!(coo.to_csr().nnz(), 0);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let a = CooMatrix::new(3, 3).to_csr();
+        assert_eq!(a.nnz(), 0);
+        assert!(a.validate().is_ok());
+    }
+}

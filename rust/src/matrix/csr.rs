@@ -1,0 +1,368 @@
+//! Compressed Row Storage (CRS/CSR) matrix.
+
+use crate::matrix::crs_bytes;
+
+/// Square or rectangular sparse matrix in CRS format.
+///
+/// Invariants (checked by [`CsrMatrix::validate`]):
+/// * `rowptr.len() == n_rows + 1`, `rowptr[0] == 0`, non-decreasing
+/// * `colidx.len() == values.len() == rowptr[n_rows]`
+/// * every column index is `< n_cols`
+/// * column indices are strictly increasing within a row
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub rowptr: Vec<usize>,
+    pub colidx: Vec<u32>,
+    pub values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    pub fn new(
+        n_rows: usize,
+        n_cols: usize,
+        rowptr: Vec<usize>,
+        colidx: Vec<u32>,
+        values: Vec<f64>,
+    ) -> Self {
+        let m = Self { n_rows, n_cols, rowptr, colidx, values };
+        debug_assert!(m.validate().is_ok(), "{:?}", m.validate());
+        m
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.colidx.len()
+    }
+
+    /// Average non-zeros per row (the paper's `N_nzr`).
+    pub fn nnzr(&self) -> f64 {
+        if self.n_rows == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.n_rows as f64
+        }
+    }
+
+    /// CRS footprint in bytes (paper convention, §6.1.2).
+    pub fn crs_bytes(&self) -> usize {
+        crs_bytes(self.n_rows, self.nnz())
+    }
+
+    /// Column indices of row `r`.
+    #[inline]
+    pub fn row_cols(&self, r: usize) -> &[u32] {
+        &self.colidx[self.rowptr[r]..self.rowptr[r + 1]]
+    }
+
+    /// Values of row `r`.
+    #[inline]
+    pub fn row_vals(&self, r: usize) -> &[f64] {
+        &self.values[self.rowptr[r]..self.rowptr[r + 1]]
+    }
+
+    /// Full structural validation; returns a description of the first
+    /// violation, if any.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rowptr.len() != self.n_rows + 1 {
+            return Err(format!(
+                "rowptr length {} != n_rows + 1 = {}",
+                self.rowptr.len(),
+                self.n_rows + 1
+            ));
+        }
+        if self.rowptr[0] != 0 {
+            return Err("rowptr[0] != 0".into());
+        }
+        if self.colidx.len() != self.values.len() {
+            return Err("colidx/values length mismatch".into());
+        }
+        if *self.rowptr.last().unwrap() != self.colidx.len() {
+            return Err("rowptr[n] != nnz".into());
+        }
+        for r in 0..self.n_rows {
+            if self.rowptr[r] > self.rowptr[r + 1] {
+                return Err(format!("rowptr decreasing at row {r}"));
+            }
+            let cols = self.row_cols(r);
+            for (k, &c) in cols.iter().enumerate() {
+                if c as usize >= self.n_cols {
+                    return Err(format!("col {c} out of bounds in row {r}"));
+                }
+                if k > 0 && cols[k - 1] >= c {
+                    return Err(format!("row {r} columns not strictly increasing"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Serial reference SpMV: `y = A x`. The correctness oracle everything
+    /// else is checked against (mirrors python `ref.spmv_ell_ref`).
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert!(x.len() >= self.n_cols, "x too short: {} < {}", x.len(), self.n_cols);
+        assert!(y.len() >= self.n_rows);
+        for r in 0..self.n_rows {
+            let mut sum = 0.0;
+            for k in self.rowptr[r]..self.rowptr[r + 1] {
+                sum += self.values[k] * x[self.colidx[k] as usize];
+            }
+            y[r] = sum;
+        }
+    }
+
+    /// SpMV restricted to the row range `[lo, hi)` — the work unit of the
+    /// level-blocked wavefront (levels are contiguous after BFS reordering).
+    ///
+    /// Hot path of every MPK variant: 4-way unrolled with unchecked loads
+    /// (EXPERIMENTS.md §Perf L3-2). SAFETY: `validate()` guarantees every
+    /// column index < n_cols and rowptr is monotone within bounds; callers
+    /// guarantee `hi <= n_rows`, `x.len() >= n_cols`, `y.len() >= hi`.
+    #[inline]
+    pub fn spmv_range(&self, lo: usize, hi: usize, x: &[f64], y: &mut [f64]) {
+        assert!(hi <= self.n_rows && lo <= hi);
+        assert!(x.len() >= self.n_cols && y.len() >= hi);
+        let rowptr = &self.rowptr;
+        let colidx = &self.colidx[..];
+        let values = &self.values[..];
+        for r in lo..hi {
+            // SAFETY: r+1 <= n_rows < rowptr.len()
+            let (start, end) = unsafe {
+                (*rowptr.get_unchecked(r), *rowptr.get_unchecked(r + 1))
+            };
+            let mut s0 = 0.0f64;
+            let mut s1 = 0.0f64;
+            let mut s2 = 0.0f64;
+            let mut s3 = 0.0f64;
+            let mut k = start;
+            // SAFETY: k..end are valid nnz indices; column indices are
+            // validated < n_cols <= x.len().
+            unsafe {
+                while k + 4 <= end {
+                    s0 += values.get_unchecked(k) * x.get_unchecked(*colidx.get_unchecked(k) as usize);
+                    s1 += values.get_unchecked(k + 1)
+                        * x.get_unchecked(*colidx.get_unchecked(k + 1) as usize);
+                    s2 += values.get_unchecked(k + 2)
+                        * x.get_unchecked(*colidx.get_unchecked(k + 2) as usize);
+                    s3 += values.get_unchecked(k + 3)
+                        * x.get_unchecked(*colidx.get_unchecked(k + 3) as usize);
+                    k += 4;
+                }
+                while k < end {
+                    s0 += values.get_unchecked(k) * x.get_unchecked(*colidx.get_unchecked(k) as usize);
+                    k += 1;
+                }
+                *y.get_unchecked_mut(r) = (s0 + s1) + (s2 + s3);
+            }
+        }
+    }
+
+    /// Structural symmetry check (pattern only).
+    pub fn pattern_symmetric(&self) -> bool {
+        if self.n_rows != self.n_cols {
+            return false;
+        }
+        for r in 0..self.n_rows {
+            for &c in self.row_cols(r) {
+                if self.row_cols(c as usize).binary_search(&(r as u32)).is_err() {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Matrix bandwidth: `max |r - c|` over non-zeros.
+    pub fn bandwidth(&self) -> usize {
+        let mut bw = 0usize;
+        for r in 0..self.n_rows {
+            for &c in self.row_cols(r) {
+                bw = bw.max(r.abs_diff(c as usize));
+            }
+        }
+        bw
+    }
+
+    /// Symmetric permutation `B = P A P^T` with `B[i, j] = A[perm[i], perm[j]]`
+    /// — i.e. `perm[i]` is the old index of new row `i` (RACE BFS reordering).
+    pub fn permute_symmetric(&self, perm: &[usize]) -> CsrMatrix {
+        assert_eq!(self.n_rows, self.n_cols, "symmetric permutation needs square matrix");
+        assert_eq!(perm.len(), self.n_rows);
+        let mut inv = vec![0usize; self.n_rows];
+        for (new, &old) in perm.iter().enumerate() {
+            inv[old] = new;
+        }
+        let mut rowptr = Vec::with_capacity(self.n_rows + 1);
+        rowptr.push(0usize);
+        let mut colidx = Vec::with_capacity(self.nnz());
+        let mut values = Vec::with_capacity(self.nnz());
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        for new_r in 0..self.n_rows {
+            let old_r = perm[new_r];
+            scratch.clear();
+            for k in self.rowptr[old_r]..self.rowptr[old_r + 1] {
+                scratch.push((inv[self.colidx[k] as usize] as u32, self.values[k]));
+            }
+            scratch.sort_unstable_by_key(|&(c, _)| c);
+            for &(c, v) in &scratch {
+                colidx.push(c);
+                values.push(v);
+            }
+            rowptr.push(colidx.len());
+        }
+        CsrMatrix::new(self.n_rows, self.n_cols, rowptr, colidx, values)
+    }
+
+    /// Extract the rows in `rows` (in order) keeping *global* column indices.
+    pub fn extract_rows(&self, rows: &[usize]) -> CsrMatrix {
+        let mut rowptr = Vec::with_capacity(rows.len() + 1);
+        rowptr.push(0usize);
+        let mut colidx = Vec::new();
+        let mut values = Vec::new();
+        for &r in rows {
+            colidx.extend_from_slice(self.row_cols(r));
+            values.extend_from_slice(self.row_vals(r));
+            rowptr.push(colidx.len());
+        }
+        CsrMatrix { n_rows: rows.len(), n_cols: self.n_cols, rowptr, colidx, values }
+    }
+
+    /// Dense materialization (tests only; panics over ~4k rows).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        assert!(self.n_rows <= 4096, "to_dense is for small test matrices");
+        let mut d = vec![vec![0.0; self.n_cols]; self.n_rows];
+        for r in 0..self.n_rows {
+            for k in self.rowptr[r]..self.rowptr[r + 1] {
+                d[r][self.colidx[k] as usize] = self.values[k];
+            }
+        }
+        d
+    }
+
+    /// Scale all values by `s` (used to bound spectra for power iterations).
+    pub fn scale(&mut self, s: f64) {
+        for v in &mut self.values {
+            *v *= s;
+        }
+    }
+
+    /// Infinity norm (max absolute row sum) — cheap spectral bound.
+    pub fn inf_norm(&self) -> f64 {
+        (0..self.n_rows)
+            .map(|r| self.row_vals(r).iter().map(|v| v.abs()).sum::<f64>())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CsrMatrix {
+        // [[2, 1, 0], [1, 2, 1], [0, 1, 2]]
+        CsrMatrix::new(
+            3,
+            3,
+            vec![0, 2, 5, 7],
+            vec![0, 1, 0, 1, 2, 1, 2],
+            vec![2.0, 1.0, 1.0, 2.0, 1.0, 1.0, 2.0],
+        )
+    }
+
+    #[test]
+    fn spmv_tridiag() {
+        let a = small();
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [0.0; 3];
+        a.spmv(&x, &mut y);
+        assert_eq!(y, [4.0, 8.0, 8.0]);
+    }
+
+    #[test]
+    fn spmv_range_matches_full() {
+        let a = small();
+        let x = [1.0, -1.0, 0.5];
+        let mut y_full = [0.0; 3];
+        let mut y_rng = [9.0; 3];
+        a.spmv(&x, &mut y_full);
+        a.spmv_range(0, 1, &x, &mut y_rng);
+        a.spmv_range(1, 3, &x, &mut y_rng);
+        assert_eq!(y_full, y_rng);
+    }
+
+    #[test]
+    fn validate_catches_bad_cols() {
+        let m = CsrMatrix {
+            n_rows: 1,
+            n_cols: 1,
+            rowptr: vec![0, 1],
+            colidx: vec![5],
+            values: vec![1.0],
+        };
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_unsorted_row() {
+        let m = CsrMatrix {
+            n_rows: 1,
+            n_cols: 3,
+            rowptr: vec![0, 2],
+            colidx: vec![2, 1],
+            values: vec![1.0, 1.0],
+        };
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn permute_symmetric_roundtrip() {
+        let a = small();
+        let perm = vec![2, 0, 1];
+        let b = a.permute_symmetric(&perm);
+        // B[i][j] == A[perm[i]][perm[j]]
+        let da = a.to_dense();
+        let db = b.to_dense();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(db[i][j], da[perm[i]][perm[j]]);
+            }
+        }
+        // identity permutation is a no-op
+        let id = a.permute_symmetric(&[0, 1, 2]);
+        assert_eq!(id, a);
+    }
+
+    #[test]
+    fn pattern_symmetric_detects() {
+        assert!(small().pattern_symmetric());
+        let asym = CsrMatrix::new(2, 2, vec![0, 1, 1], vec![1], vec![1.0]);
+        assert!(!asym.pattern_symmetric());
+    }
+
+    #[test]
+    fn bandwidth_tridiag_is_one() {
+        assert_eq!(small().bandwidth(), 1);
+    }
+
+    #[test]
+    fn extract_rows_keeps_global_cols() {
+        let a = small();
+        let sub = a.extract_rows(&[2, 0]);
+        assert_eq!(sub.n_rows, 2);
+        assert_eq!(sub.row_cols(0), &[1, 2]);
+        assert_eq!(sub.row_cols(1), &[0, 1]);
+    }
+
+    #[test]
+    fn inf_norm() {
+        assert_eq!(small().inf_norm(), 4.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Padded ELLPACK chunks — the wire format of the AOT Pallas/XLA SpMV.
+//!
+//! Mirrors `python/compile/kernels/ref.py::csr_to_ell`: a block of rows is
+//! stored as dense `(rows, width)` panels of values (f64) and column indices
+//! (i32), rows shorter than `width` padded with `(0.0, col 0)` — harmless
+//! because `0.0 * x[0] == 0`. Row count is padded up to a multiple of the
+//! kernel's panel height.
+
+use crate::matrix::CsrMatrix;
+
+#[derive(Clone, Debug)]
+pub struct EllChunk {
+    /// Rows including padding (multiple of `panel_rows` used at AOT time).
+    pub rows: usize,
+    /// Rows of actual payload (<= rows).
+    pub rows_valid: usize,
+    pub width: usize,
+    /// Row-major (rows × width).
+    pub vals: Vec<f64>,
+    /// Row-major (rows × width), i32 to match the artifact operand dtype.
+    pub cols: Vec<i32>,
+}
+
+impl EllChunk {
+    /// Convert CRS rows `[lo, hi)` of `a`, padding rows up to a multiple of
+    /// `row_align` and width up to at least `min_width`.
+    pub fn from_csr_rows(
+        a: &CsrMatrix,
+        lo: usize,
+        hi: usize,
+        row_align: usize,
+        min_width: usize,
+    ) -> Self {
+        assert!(lo <= hi && hi <= a.n_rows);
+        let rows_valid = hi - lo;
+        let width = (lo..hi)
+            .map(|r| a.rowptr[r + 1] - a.rowptr[r])
+            .max()
+            .unwrap_or(0)
+            .max(min_width)
+            .max(1);
+        let rows = rows_valid.div_ceil(row_align.max(1)) * row_align.max(1);
+        let mut vals = vec![0.0; rows * width];
+        let mut cols = vec![0i32; rows * width];
+        for (i, r) in (lo..hi).enumerate() {
+            let (s, e) = (a.rowptr[r], a.rowptr[r + 1]);
+            for (w, k) in (s..e).enumerate() {
+                vals[i * width + w] = a.values[k];
+                cols[i * width + w] = a.colidx[k] as i32;
+            }
+        }
+        Self { rows, rows_valid, width, vals, cols }
+    }
+
+    /// Whole-matrix conversion.
+    pub fn from_csr(a: &CsrMatrix, row_align: usize) -> Self {
+        Self::from_csr_rows(a, 0, a.n_rows, row_align, 1)
+    }
+
+    /// Reference ELL SpMV (used to validate the XLA path from rust).
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert!(y.len() >= self.rows_valid);
+        for r in 0..self.rows_valid {
+            let mut sum = 0.0;
+            for w in 0..self.width {
+                let k = r * self.width + w;
+                sum += self.vals[k] * x[self.cols[k] as usize];
+            }
+            y[r] = sum;
+        }
+    }
+
+    /// Padding fraction (wasted slots / total slots) — ELL efficiency metric.
+    pub fn pad_fraction(&self, nnz: usize) -> f64 {
+        let slots = self.rows * self.width;
+        if slots == 0 {
+            0.0
+        } else {
+            1.0 - nnz as f64 / slots as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ell_matches_csr_spmv() {
+        let a = gen::stencil_2d_5pt(13, 9);
+        let ell = EllChunk::from_csr(&a, 8);
+        assert_eq!(ell.rows_valid, a.n_rows());
+        assert_eq!(ell.rows % 8, 0);
+        assert_eq!(ell.width, 5);
+        let mut rng = Rng::new(5);
+        let x: Vec<f64> = (0..a.n_rows()).map(|_| rng.normal()).collect();
+        let mut y_csr = vec![0.0; a.n_rows()];
+        let mut y_ell = vec![0.0; a.n_rows()];
+        a.spmv(&x, &mut y_csr);
+        ell.spmv(&x, &mut y_ell);
+        for (u, v) in y_csr.iter().zip(&y_ell) {
+            assert!((u - v).abs() < 1e-13);
+        }
+    }
+
+    #[test]
+    fn row_range_chunk() {
+        let a = gen::stencil_2d_5pt(10, 10);
+        let ell = EllChunk::from_csr_rows(&a, 20, 50, 16, 1);
+        assert_eq!(ell.rows_valid, 30);
+        assert_eq!(ell.rows, 32);
+        let x = vec![1.0; 100];
+        let mut y_ell = vec![0.0; 30];
+        ell.spmv(&x, &mut y_ell);
+        let mut y_full = vec![0.0; 100];
+        a.spmv(&x, &mut y_full);
+        for i in 0..30 {
+            assert!((y_ell[i] - y_full[20 + i]).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn pad_fraction_counts_waste() {
+        let a = gen::stencil_2d_5pt(4, 4); // corner rows have 3 nnz, width 5
+        let ell = EllChunk::from_csr(&a, 1);
+        let f = ell.pad_fraction(a.nnz());
+        assert!(f > 0.0 && f < 0.5, "pad fraction {f}");
+    }
+}

@@ -1,0 +1,340 @@
+//! Deterministic matrix generators.
+//!
+//! These stand in for the paper's SuiteSparse selection (Table 4) and the
+//! Lynx matrices, which are not redistributable / not downloadable in this
+//! environment (DESIGN.md §Substitutions). Cache blocking behavior is
+//! governed by N_r, N_nzr, and the level structure (bandwidth), all of which
+//! the generators control directly, so the *shape* of every experiment is
+//! preserved: who wins, roughly by how much, and where the cache boundary
+//! crossover falls.
+
+use crate::matrix::{CooMatrix, CsrMatrix};
+use crate::util::rng::Rng;
+
+/// 1D tridiagonal stencil (paper Fig. 4's example): 2 on the diagonal,
+/// -1 off-diagonal.
+pub fn tridiag(n: usize) -> CsrMatrix {
+    let mut coo = CooMatrix::new(n, n);
+    for i in 0..n {
+        coo.push(i, i, 2.0);
+        if i > 0 {
+            coo.push(i, i - 1, -1.0);
+        }
+        if i + 1 < n {
+            coo.push(i, i + 1, -1.0);
+        }
+    }
+    coo.to_csr()
+}
+
+/// 2D 5-point Laplacian stencil on an `nx × ny` grid (paper Fig. 1).
+pub fn stencil_2d_5pt(nx: usize, ny: usize) -> CsrMatrix {
+    let n = nx * ny;
+    let mut coo = CooMatrix::new(n, n);
+    for y in 0..ny {
+        for x in 0..nx {
+            let r = y * nx + x;
+            coo.push(r, r, 4.0);
+            if x > 0 {
+                coo.push(r, r - 1, -1.0);
+            }
+            if x + 1 < nx {
+                coo.push(r, r + 1, -1.0);
+            }
+            if y > 0 {
+                coo.push(r, r - nx, -1.0);
+            }
+            if y + 1 < ny {
+                coo.push(r, r + nx, -1.0);
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// 3D 7-point Laplacian stencil on an `nx × ny × nz` grid.
+pub fn stencil_3d_7pt(nx: usize, ny: usize, nz: usize) -> CsrMatrix {
+    let n = nx * ny * nz;
+    let mut coo = CooMatrix::new(n, n);
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let r = (z * ny + y) * nx + x;
+                coo.push(r, r, 6.0);
+                if x > 0 {
+                    coo.push(r, r - 1, -1.0);
+                }
+                if x + 1 < nx {
+                    coo.push(r, r + 1, -1.0);
+                }
+                if y > 0 {
+                    coo.push(r, r - nx, -1.0);
+                }
+                if y + 1 < ny {
+                    coo.push(r, r + nx, -1.0);
+                }
+                if z > 0 {
+                    coo.push(r, r - nx * ny, -1.0);
+                }
+                if z + 1 < nz {
+                    coo.push(r, r + nx * ny, -1.0);
+                }
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// 3D 27-point stencil (dense corner coupling) — the nlpkkt-like "bad
+/// structure" end of the spectrum when combined with a large grid.
+pub fn stencil_3d_27pt(nx: usize, ny: usize, nz: usize) -> CsrMatrix {
+    let n = nx * ny * nz;
+    let mut coo = CooMatrix::new(n, n);
+    for z in 0..nz as isize {
+        for y in 0..ny as isize {
+            for x in 0..nx as isize {
+                let r = ((z as usize * ny) + y as usize) * nx + x as usize;
+                for dz in -1..=1isize {
+                    for dy in -1..=1isize {
+                        for dx in -1..=1isize {
+                            let (xx, yy, zz) = (x + dx, y + dy, z + dz);
+                            if xx < 0 || yy < 0 || zz < 0 {
+                                continue;
+                            }
+                            let (xx, yy, zz) = (xx as usize, yy as usize, zz as usize);
+                            if xx >= nx || yy >= ny || zz >= nz {
+                                continue;
+                            }
+                            let c = (zz * ny + yy) * nx + xx;
+                            let v = if c == r { 26.0 } else { -1.0 };
+                            coo.push(r, c, v);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// Symmetric random banded matrix: every row gets ~`nnzr` non-zeros whose
+/// column offsets are clumped within `±band` of the diagonal (squared-uniform
+/// sampling concentrates them near the diagonal, mimicking FEM clustering).
+/// Diagonal is always present and dominant, so power iterations stay bounded
+/// after [`CsrMatrix::scale`].
+pub fn random_banded_sym(n: usize, nnzr: usize, band: usize, seed: u64) -> CsrMatrix {
+    assert!(band >= 1 && nnzr >= 1);
+    let mut rng = Rng::new(seed);
+    let mut coo = CooMatrix::new(n, n);
+    // Each mirrored off-diagonal pair contributes 2 nnz; target per-row count.
+    let upper_per_row = (nnzr.saturating_sub(1)) / 2;
+    for r in 0..n {
+        coo.push(r, r, nnzr as f64); // diagonally dominant
+        for _ in 0..upper_per_row {
+            // squared-uniform: offsets cluster near the diagonal
+            let u = rng.f64();
+            let off = 1 + ((u * u) * band as f64) as usize;
+            if r + off < n {
+                let v = -rng.f64();
+                coo.push(r, r + off, v);
+                coo.push(r + off, r, v);
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// An entry of the synthetic benchmark suite (Table 4 analogue).
+#[derive(Clone)]
+pub struct SuiteEntry {
+    /// `<paper-name>-s` ("-s" = scaled synthetic analogue).
+    pub name: &'static str,
+    /// Paper value, for the printed comparison.
+    pub paper_nnzr: f64,
+    /// Rows at `scale = 1.0` (for size targeting in benches).
+    pub base_rows: usize,
+    pub build: fn(f64) -> CsrMatrix,
+}
+
+impl SuiteEntry {
+    /// CRS bytes estimate at `scale = 1.0`.
+    pub fn base_bytes(&self) -> usize {
+        crate::matrix::crs_bytes(self.base_rows, (self.base_rows as f64 * self.paper_nnzr) as usize)
+    }
+
+    /// Scale needed so the matrix is roughly `target_bytes` in CRS.
+    pub fn scale_for_bytes(&self, target_bytes: usize) -> f64 {
+        target_bytes as f64 / self.base_bytes() as f64
+    }
+}
+
+/// Benchmark suite mirroring Table 4: one synthetic analogue per paper
+/// matrix family, ordered by CRS size at `scale = 1.0` (like the paper's
+/// size ordering). `scale` multiplies the row count, so benches can place
+/// the suite around *this* host's cache boundary the way the paper's suite
+/// straddles the SPR/MIL cache sizes.
+pub fn suite() -> Vec<SuiteEntry> {
+    fn rows(scale: f64, base: usize) -> usize {
+        ((base as f64 * scale) as usize).max(512)
+    }
+    vec![
+        SuiteEntry {
+            name: "inline_1-s",
+            base_rows: 60000,
+            paper_nnzr: 73.0,
+            build: |s| random_banded_sym(rows(s, 60_000), 73, 1_200, 101),
+        },
+        SuiteEntry {
+            name: "Emilia_923-s",
+            base_rows: 110000,
+            paper_nnzr: 44.4,
+            build: |s| random_banded_sym(rows(s, 110_000), 44, 1_500, 102),
+        },
+        SuiteEntry {
+            name: "ldoor-s",
+            base_rows: 115000,
+            paper_nnzr: 48.8,
+            build: |s| random_banded_sym(rows(s, 115_000), 49, 1_000, 103),
+        },
+        SuiteEntry {
+            name: "af_shell10-s",
+            base_rows: 180000,
+            paper_nnzr: 34.9,
+            build: |s| random_banded_sym(rows(s, 180_000), 35, 800, 104),
+        },
+        SuiteEntry {
+            name: "Serena-s",
+            base_rows: 165000,
+            paper_nnzr: 46.3,
+            build: |s| random_banded_sym(rows(s, 165_000), 46, 2_000, 105),
+        },
+        SuiteEntry {
+            name: "bone010-s",
+            base_rows: 120000,
+            paper_nnzr: 72.6,
+            build: |s| random_banded_sym(rows(s, 120_000), 73, 1_500, 106),
+        },
+        SuiteEntry {
+            name: "audikw_1-s",
+            base_rows: 115000,
+            paper_nnzr: 82.2,
+            build: |s| random_banded_sym(rows(s, 115_000), 82, 2_500, 107),
+        },
+        SuiteEntry {
+            name: "channel-500-s",
+            base_rows: 580000,
+            paper_nnzr: 17.7,
+            build: |s| random_banded_sym(rows(s, 580_000), 18, 300, 113),
+        },
+        SuiteEntry {
+            name: "dielFilter-s",
+            base_rows: 135000,
+            paper_nnzr: 80.9,
+            build: |s| random_banded_sym(rows(s, 135_000), 81, 3_000, 108),
+        },
+        SuiteEntry {
+            name: "nlpkkt120-s",
+            base_rows: 175616,
+            paper_nnzr: 27.3,
+            // x-dimension scales linearly with `s` (rows ∝ s, like the
+            // banded entries), keeping ny = nz fixed
+            build: |s| stencil_3d_27pt(((56.0 * s) as usize).max(8), 56, 56),
+        },
+        SuiteEntry {
+            name: "ML_Geer-s",
+            base_rows: 185000,
+            paper_nnzr: 73.7,
+            build: |s| random_banded_sym(rows(s, 185_000), 74, 1_800, 109),
+        },
+        SuiteEntry {
+            name: "Lynx68-s",
+            base_rows: 820000,
+            paper_nnzr: 16.3,
+            build: |s| random_banded_sym(rows(s, 820_000), 16, 500, 114),
+        },
+        SuiteEntry {
+            name: "Flan_1565-s",
+            base_rows: 190000,
+            paper_nnzr: 75.0,
+            build: |s| random_banded_sym(rows(s, 190_000), 75, 2_200, 110),
+        },
+        SuiteEntry {
+            name: "Bump_2911-s",
+            base_rows: 350000,
+            paper_nnzr: 43.9,
+            build: |s| random_banded_sym(rows(s, 350_000), 44, 2_800, 111),
+        },
+        SuiteEntry {
+            name: "Queen_4147-s",
+            base_rows: 500000,
+            paper_nnzr: 79.5,
+            build: |s| random_banded_sym(rows(s, 500_000), 80, 4_000, 112),
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tridiag_structure() {
+        let a = tridiag(5);
+        assert_eq!(a.nnz(), 13);
+        assert!(a.pattern_symmetric());
+        assert_eq!(a.bandwidth(), 1);
+    }
+
+    #[test]
+    fn stencil_2d_counts() {
+        let a = stencil_2d_5pt(4, 4);
+        assert_eq!(a.n_rows(), 16);
+        // 16 diag + 2*(3*4 + 3*4) off-diag = 16 + 48 = 64
+        assert_eq!(a.nnz(), 64);
+        assert!(a.pattern_symmetric());
+    }
+
+    #[test]
+    fn stencil_3d_7pt_interior_row() {
+        let a = stencil_3d_7pt(5, 5, 5);
+        // interior vertex has 7 nnz
+        let r = (2 * 5 + 2) * 5 + 2;
+        assert_eq!(a.row_cols(r).len(), 7);
+        assert!(a.pattern_symmetric());
+    }
+
+    #[test]
+    fn stencil_27pt_interior_row() {
+        let a = stencil_3d_27pt(4, 4, 4);
+        let r = (1 * 4 + 1) * 4 + 1;
+        assert_eq!(a.row_cols(r).len(), 27);
+        assert!(a.pattern_symmetric());
+    }
+
+    #[test]
+    fn random_banded_is_symmetric_and_banded() {
+        let a = random_banded_sym(2_000, 20, 100, 42);
+        assert!(a.pattern_symmetric());
+        assert!(a.bandwidth() <= 101);
+        let nnzr = a.nnzr();
+        assert!((12.0..=22.0).contains(&nnzr), "nnzr = {nnzr}");
+        assert!(a.validate().is_ok());
+    }
+
+    #[test]
+    fn random_banded_deterministic() {
+        let a = random_banded_sym(500, 10, 50, 7);
+        let b = random_banded_sym(500, 10, 50, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn suite_builds_small_scale() {
+        for e in suite() {
+            let a = (e.build)(0.01);
+            assert!(a.n_rows() >= 512, "{} too small", e.name);
+            assert!(a.validate().is_ok(), "{} invalid", e.name);
+            assert!(a.pattern_symmetric(), "{} asymmetric", e.name);
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! MatrixMarket coordinate-format IO (the SuiteSparse interchange format).
+//!
+//! Supports `matrix coordinate real|integer|pattern general|symmetric`.
+//! Symmetric files are expanded to full storage on read (the convention the
+//! rest of the crate expects).
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::matrix::{CooMatrix, CsrMatrix};
+
+/// Read a MatrixMarket file into CRS.
+pub fn read_matrix_market(path: &Path) -> Result<CsrMatrix> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    read_from(BufReader::new(f))
+}
+
+pub fn read_from<R: BufRead>(mut r: R) -> Result<CsrMatrix> {
+    let mut header = String::new();
+    r.read_line(&mut header)?;
+    let h: Vec<&str> = header.trim().split_whitespace().collect();
+    if h.len() < 5 || h[0] != "%%MatrixMarket" || h[1] != "matrix" || h[2] != "coordinate" {
+        bail!("unsupported MatrixMarket header: {header:?}");
+    }
+    let field = h[3]; // real | integer | pattern
+    let sym = h[4]; // general | symmetric
+    if !matches!(field, "real" | "integer" | "pattern") {
+        bail!("unsupported field type {field}");
+    }
+    if !matches!(sym, "general" | "symmetric") {
+        bail!("unsupported symmetry {sym}");
+    }
+
+    let mut line = String::new();
+    // skip comments
+    loop {
+        line.clear();
+        if r.read_line(&mut line)? == 0 {
+            bail!("missing size line");
+        }
+        if !line.trim_start().starts_with('%') && !line.trim().is_empty() {
+            break;
+        }
+    }
+    let dims: Vec<usize> = line
+        .split_whitespace()
+        .map(|t| t.parse::<usize>().context("bad size line"))
+        .collect::<Result<_>>()?;
+    if dims.len() != 3 {
+        bail!("size line must have 3 entries, got {line:?}");
+    }
+    let (n_rows, n_cols, nnz) = (dims[0], dims[1], dims[2]);
+    let mut coo = CooMatrix::new(n_rows, n_cols);
+    let mut seen = 0usize;
+    loop {
+        line.clear();
+        if r.read_line(&mut line)? == 0 {
+            break;
+        }
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let i: usize = it.next().context("row missing")?.parse()?;
+        let j: usize = it.next().context("col missing")?.parse()?;
+        let v: f64 = if field == "pattern" {
+            1.0
+        } else {
+            it.next().context("value missing")?.parse()?
+        };
+        if i < 1 || i > n_rows || j < 1 || j > n_cols {
+            bail!("entry ({i},{j}) out of bounds");
+        }
+        coo.push(i - 1, j - 1, v);
+        if sym == "symmetric" && i != j {
+            coo.push(j - 1, i - 1, v);
+        }
+        seen += 1;
+    }
+    if seen != nnz {
+        bail!("expected {nnz} entries, found {seen}");
+    }
+    Ok(coo.to_csr())
+}
+
+/// Write CRS as `matrix coordinate real general`.
+pub fn write_matrix_market(a: &CsrMatrix, path: &Path) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(f, "% written by dlb-mpk")?;
+    writeln!(f, "{} {} {}", a.n_rows, a.n_cols, a.nnz())?;
+    for r in 0..a.n_rows {
+        for k in a.rowptr[r]..a.rowptr[r + 1] {
+            writeln!(f, "{} {} {:.17e}", r + 1, a.colidx[k] + 1, a.values[k])?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    #[test]
+    fn roundtrip_general() {
+        let a = gen::stencil_2d_5pt(6, 5);
+        let dir = std::env::temp_dir().join("dlbmpk_mm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("a.mtx");
+        write_matrix_market(&a, &p).unwrap();
+        let b = read_matrix_market(&p).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn reads_symmetric_expanded() {
+        let text = "%%MatrixMarket matrix coordinate real symmetric\n3 3 4\n1 1 2.0\n2 1 -1.0\n2 2 2.0\n3 3 1.5\n";
+        let a = read_from(text.as_bytes()).unwrap();
+        assert_eq!(a.nnz(), 5); // off-diag mirrored
+        let d = a.to_dense();
+        assert_eq!(d[0][1], -1.0);
+        assert_eq!(d[1][0], -1.0);
+    }
+
+    #[test]
+    fn reads_pattern() {
+        let text = "%%MatrixMarket matrix coordinate pattern general\n2 2 2\n1 1\n2 2\n";
+        let a = read_from(text.as_bytes()).unwrap();
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(a.values, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(read_from("%%MatrixMarket matrix array real general\n1 1 1\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn rejects_count_mismatch() {
+        let text = "%%MatrixMarket matrix coordinate real general\n2 2 3\n1 1 1.0\n";
+        assert!(read_from(text.as_bytes()).is_err());
+    }
+}

@@ -1,0 +1,38 @@
+//! Sparse matrix substrate: formats, IO, and generators.
+//!
+//! The crate-wide canonical format is CRS ([`CsrMatrix`]) with `u32` column
+//! indices and `f64` values, matching the paper's storage accounting
+//! (Section 6: 8 B values + 4 B column indices + 4 B row pointer, i.e. a
+//! total CRS footprint of `4·N_r + 12·N_nz` bytes).
+//!
+//! [`ell`] provides the padded ELLPACK chunks consumed by the AOT
+//! Pallas/XLA SpMV artifacts (see `python/compile/kernels/spmv_ell.py`).
+
+pub mod anderson;
+pub mod coo;
+pub mod csr;
+pub mod ell;
+pub mod gen;
+pub mod mm;
+pub mod rcm;
+
+pub use coo::CooMatrix;
+pub use csr::CsrMatrix;
+pub use ell::EllChunk;
+
+/// CRS storage footprint in bytes: `4·N_r + 12·N_nz` (paper §6.1.2).
+pub fn crs_bytes(n_rows: usize, n_nz: usize) -> usize {
+    4 * n_rows + 12 * n_nz
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn crs_bytes_matches_paper_formula() {
+        // Serena: N_r = 1,391,349, N_nz = 64,531,701 -> 744 MiB (Table 4).
+        let b = super::crs_bytes(1_391_349, 64_531_701);
+        assert_eq!(crate::util::mib(b), 744);
+        // audikw_1: 943,695 rows, 77,651,847 nnz -> 892 MiB.
+        assert_eq!(crate::util::mib(super::crs_bytes(943_695, 77_651_847)), 892);
+    }
+}

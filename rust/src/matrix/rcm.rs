@@ -1,0 +1,153 @@
+//! Reverse Cuthill–McKee (RCM) bandwidth-reducing reordering.
+//!
+//! The paper's related-work section ties SpMV performance to access locality
+//! via matrix bandwidth reduction (Kreutzer et al. 2014). RCM is the
+//! standard tool; it also serves as an alternative pre-permutation ahead of
+//! the BFS level reordering for matrices with poor initial orderings
+//! (ablation: `benches/ablation` / `coordinator` config).
+
+use crate::graph::Adjacency;
+use crate::matrix::CsrMatrix;
+
+/// RCM permutation (`perm[new] = old`). Starts each component from a
+/// pseudo-peripheral vertex (two-sweep BFS heuristic), visits neighbors in
+/// ascending degree order, and reverses the final order.
+pub fn rcm_permutation(a: &CsrMatrix) -> Vec<usize> {
+    let g = Adjacency::from_symmetric_or_general(a);
+    let n = g.n;
+    let mut visited = vec![false; n];
+    let mut order: Vec<u32> = Vec::with_capacity(n);
+    let mut scan = 0usize;
+    while order.len() < n {
+        while scan < n && visited[scan] {
+            scan += 1;
+        }
+        let root = pseudo_peripheral(&g, scan as u32, &visited);
+        // Cuthill–McKee BFS with ascending-degree tie-break
+        let start = order.len();
+        visited[root as usize] = true;
+        order.push(root);
+        let mut head = start;
+        while head < order.len() {
+            let u = order[head] as usize;
+            head += 1;
+            let mut nbrs: Vec<u32> = g
+                .neighbors(u)
+                .iter()
+                .copied()
+                .filter(|&v| !visited[v as usize])
+                .collect();
+            nbrs.sort_unstable_by_key(|&v| g.degree(v as usize));
+            for v in nbrs {
+                if !visited[v as usize] {
+                    visited[v as usize] = true;
+                    order.push(v);
+                }
+            }
+        }
+    }
+    order.reverse();
+    order.into_iter().map(|v| v as usize).collect()
+}
+
+/// Two-sweep BFS pseudo-peripheral vertex heuristic (George & Liu).
+fn pseudo_peripheral(g: &Adjacency, start: u32, visited: &[bool]) -> u32 {
+    let mut cur = start;
+    let mut last_ecc = 0u32;
+    for _ in 0..4 {
+        let (far, ecc) = bfs_farthest(g, cur, visited);
+        if ecc <= last_ecc {
+            break;
+        }
+        last_ecc = ecc;
+        cur = far;
+    }
+    cur
+}
+
+fn bfs_farthest(g: &Adjacency, root: u32, visited: &[bool]) -> (u32, u32) {
+    let mut dist = vec![u32::MAX; g.n];
+    dist[root as usize] = 0;
+    let mut frontier = vec![root];
+    let mut far = root;
+    let mut ecc = 0;
+    while !frontier.is_empty() {
+        let mut next = Vec::new();
+        for &u in &frontier {
+            for &v in g.neighbors(u as usize) {
+                if !visited[v as usize] && dist[v as usize] == u32::MAX {
+                    dist[v as usize] = dist[u as usize] + 1;
+                    if dist[v as usize] > ecc {
+                        ecc = dist[v as usize];
+                        far = v;
+                    }
+                    next.push(v);
+                }
+            }
+        }
+        frontier = next;
+    }
+    (far, ecc)
+}
+
+/// Apply RCM: returns the symmetrically permuted matrix and the permutation.
+pub fn rcm_reorder(a: &CsrMatrix) -> (CsrMatrix, Vec<usize>) {
+    let perm = rcm_permutation(a);
+    (a.permute_symmetric(&perm), perm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rcm_reduces_bandwidth_of_shuffled_matrix() {
+        let a = gen::stencil_2d_5pt(20, 20);
+        let mut perm: Vec<usize> = (0..400).collect();
+        Rng::new(3).shuffle(&mut perm);
+        let shuffled = a.permute_symmetric(&perm);
+        let (r, _) = rcm_reorder(&shuffled);
+        assert!(r.bandwidth() < shuffled.bandwidth() / 2,
+            "rcm {} vs shuffled {}", r.bandwidth(), shuffled.bandwidth());
+    }
+
+    #[test]
+    fn rcm_is_a_permutation_and_preserves_spmv() {
+        let a = gen::random_banded_sym(300, 8, 40, 6);
+        let (r, perm) = rcm_reorder(&a);
+        let mut seen = vec![false; 300];
+        for &p in &perm {
+            assert!(!seen[p]);
+            seen[p] = true;
+        }
+        // y_perm[i] == y[perm[i]]
+        let x: Vec<f64> = (0..300).map(|i| (i as f64).cos()).collect();
+        let xp: Vec<f64> = perm.iter().map(|&o| x[o]).collect();
+        let mut y = vec![0.0; 300];
+        let mut yp = vec![0.0; 300];
+        a.spmv(&x, &mut y);
+        r.spmv(&xp, &mut yp);
+        for (i, &o) in perm.iter().enumerate() {
+            assert!((yp[i] - y[o]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rcm_handles_disconnected() {
+        let mut coo = crate::matrix::CooMatrix::new(6, 6);
+        for (u, v) in [(0, 1), (2, 3), (4, 5)] {
+            coo.push(u, v, 1.0);
+            coo.push(v, u, 1.0);
+        }
+        for i in 0..6 {
+            coo.push(i, i, 2.0);
+        }
+        let a = coo.to_csr();
+        let perm = rcm_permutation(&a);
+        let mut s = perm.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..6).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,280 @@
+//! Communication-Avoiding MPK (Mohiyuddin et al. 2009) — the baseline whose
+//! overheads motivate DLB-MPK (paper §4, Fig. 4b, Fig. 5).
+//!
+//! CA-MPK fetches an *extended* halo up front (distance classes
+//! `E_0 … E_{p_m−1}` beyond the MPI boundary) and performs *redundant*
+//! SpMVs on external vertices (`E_k` promoted to power `p_m − 1 − k`) so
+//! that all `p_m` local powers complete with a single exchange.
+//!
+//! Implemented as both an exact overhead counter (Fig. 5: extra halo
+//! elements and recomputed non-zeros as functions of `p_m` and ranks) and an
+//! executable kernel (equivalence-tested against TRAD/DLB).
+
+use std::collections::HashMap;
+
+use crate::distsim::{CommStats, DistMatrix};
+use crate::matrix::CsrMatrix;
+use crate::mpk::MpkResult;
+
+/// Exact CA-MPK overheads (accumulated over all ranks).
+#[derive(Clone, Debug, Default)]
+pub struct CaOverheads {
+    /// Halo elements TRAD/DLB would fetch (Σ_i |E_0|).
+    pub base_halo: usize,
+    /// Additional halo elements CA fetches (Σ_i |E_1 ∪ … ∪ E_{p_m−1}|).
+    pub extra_halo: usize,
+    /// Redundant non-zero products: Σ_i Σ_k nnz(rows of E_k) · (p_m−1−k).
+    pub redundant_nnz: usize,
+    /// Redundant row-SpMV applications (vertex count × powers recomputed).
+    pub redundant_rows: usize,
+}
+
+impl CaOverheads {
+    /// Fig. 5 left: extra halo relative to total rows.
+    pub fn rel_extra_halo(&self, n_rows: usize) -> f64 {
+        self.extra_halo as f64 / n_rows as f64
+    }
+
+    /// Fig. 5 right: recomputed non-zeros relative to total non-zeros.
+    pub fn rel_redundant(&self, nnz: usize) -> f64 {
+        self.redundant_nnz as f64 / nnz as f64
+    }
+}
+
+/// External distance classes of one rank: `ext[k]` = global ids at graph
+/// distance `k+1` from the owned set (so `ext[0] = E_0 = B`, the TRAD halo).
+fn external_classes(a: &CsrMatrix, owned_mask: &[bool], e0: &[usize], depth: usize) -> Vec<Vec<usize>> {
+    let mut classes = vec![e0.to_vec()];
+    let mut dist: HashMap<usize, usize> = e0.iter().map(|&g| (g, 0)).collect();
+    for k in 1..depth {
+        let mut next = Vec::new();
+        for &g in &classes[k - 1] {
+            for &c in a.row_cols(g) {
+                let c = c as usize;
+                if owned_mask[c] || dist.contains_key(&c) {
+                    continue;
+                }
+                dist.insert(c, k);
+                next.push(c);
+            }
+        }
+        next.sort_unstable();
+        classes.push(next);
+    }
+    classes
+}
+
+/// The CA plan + overhead counters for a distributed matrix.
+pub struct CaPlan {
+    /// Per rank: external classes `E_0..E_{p_m-1}` (global ids).
+    pub ext: Vec<Vec<Vec<usize>>>,
+    pub overheads: CaOverheads,
+    pub p_m: usize,
+}
+
+/// Build the CA plan (needs the *global* matrix for external rows).
+pub fn ca_plan(a: &CsrMatrix, dist: &DistMatrix, p_m: usize) -> CaPlan {
+    assert!(p_m >= 1);
+    let mut ext = Vec::with_capacity(dist.n_ranks());
+    let mut ov = CaOverheads::default();
+    for r in &dist.ranks {
+        let mut owned_mask = vec![false; a.n_rows()];
+        for &g in &r.owned {
+            owned_mask[g] = true;
+        }
+        let classes = external_classes(a, &owned_mask, &r.halo_globals, p_m.max(1));
+        ov.base_halo += classes[0].len();
+        for (k, cls) in classes.iter().enumerate() {
+            if k >= 1 {
+                ov.extra_halo += cls.len();
+            }
+            // E_k is promoted to power p_m-1-k (redundantly; the owner also
+            // computes it). E_{p_m-1} is fetch-only.
+            let promotions = p_m.saturating_sub(1).saturating_sub(k);
+            if promotions > 0 {
+                let nnz: usize = cls.iter().map(|&g| a.row_cols(g).len()).sum();
+                ov.redundant_nnz += nnz * promotions;
+                ov.redundant_rows += cls.len() * promotions;
+            }
+        }
+        ext.push(classes);
+    }
+    CaPlan { ext, overheads: ov, p_m }
+}
+
+/// Output of [`ca_mpk`].
+pub struct CaOutput {
+    pub result: MpkResult,
+    pub overheads: CaOverheads,
+}
+
+/// Execute CA-MPK: one extended exchange, then purely local (redundant)
+/// computation. Requires the global matrix to extract external rows —
+/// exactly what a real implementation ships during setup.
+pub fn ca_mpk(dist: &DistMatrix, x: &[f64], p_m: usize) -> CaOutput {
+    // Reconstruct the global matrix from rank blocks for external rows.
+    // (Benchmarks pass the original matrix via `ca_mpk_with`; this
+    // convenience path rebuilds it.)
+    let a = reassemble_global(dist);
+    ca_mpk_with(&a, dist, x, p_m)
+}
+
+pub fn ca_mpk_with(a: &CsrMatrix, dist: &DistMatrix, x: &[f64], p_m: usize) -> CaOutput {
+    let plan = ca_plan(a, dist, p_m);
+    let mut comm = CommStats::default();
+    let mut flop_nnz = 0usize;
+    let n = a.n_rows();
+    let mut powers: Vec<Vec<f64>> = (0..=p_m).map(|_| vec![0.0; n]).collect();
+    powers[0].copy_from_slice(x);
+
+    // one "big" exchange: every rank receives x for all its external classes
+    comm.rounds = 1;
+    for (r, classes) in dist.ranks.iter().zip(&plan.ext) {
+        let _ = r;
+        let total: usize = classes.iter().map(|c| c.len()).sum();
+        if total > 0 {
+            // message count: one per (rank, peer owner) pair present
+            let mut owners: Vec<u32> = classes
+                .iter()
+                .flatten()
+                .map(|&g| dist.owner_of[g])
+                .collect();
+            owners.sort_unstable();
+            owners.dedup();
+            comm.messages += owners.len();
+            comm.bytes += total * std::mem::size_of::<f64>();
+        }
+    }
+
+    // local phase per rank: promote owned to p_m, E_k to p_m-1-k. We emulate
+    // rank locality by only reading values the rank legitimately holds;
+    // since every rank computes into disjoint `powers` slots for owned rows
+    // and recomputes external rows redundantly (same values), a shared
+    // global buffer reproduces the numerics exactly while the counters
+    // capture the redundancy.
+    for (r, classes) in dist.ranks.iter().zip(&plan.ext) {
+        for p in 1..=p_m {
+            // owned rows to power p
+            for &g in &r.owned {
+                powers[p][g] = row_dot(a, g, &powers[p - 1]);
+                flop_nnz += a.row_cols(g).len();
+            }
+            // E_k to power p_m-1-k: redundant work
+            for (k, cls) in classes.iter().enumerate() {
+                let target = p_m.saturating_sub(1).saturating_sub(k);
+                if p <= target {
+                    for &g in cls {
+                        powers[p][g] = row_dot(a, g, &powers[p - 1]);
+                        flop_nnz += a.row_cols(g).len();
+                    }
+                }
+            }
+        }
+    }
+
+    CaOutput {
+        result: MpkResult {
+            powers: powers.into_iter().skip(1).collect(),
+            comm,
+            flop_nnz,
+        },
+        overheads: plan.overheads,
+    }
+}
+
+#[inline]
+fn row_dot(a: &CsrMatrix, r: usize, x: &[f64]) -> f64 {
+    let mut sum = 0.0;
+    for k in a.rowptr[r]..a.rowptr[r + 1] {
+        sum += a.values[k] * x[a.colidx[k] as usize];
+    }
+    sum
+}
+
+/// Rebuild the global matrix from the rank-local blocks (inverse of
+/// `DistMatrix::build`; used by the convenience `ca_mpk` path and tests).
+pub fn reassemble_global(dist: &DistMatrix) -> CsrMatrix {
+    let n = dist.n_global;
+    let mut coo = crate::matrix::CooMatrix::new(n, n);
+    for r in &dist.ranks {
+        for lr in 0..r.n_local() {
+            let g = r.owned[lr];
+            for k in r.a.rowptr[lr]..r.a.rowptr[lr + 1] {
+                let lc = r.a.colidx[k] as usize;
+                let gc = if lc < r.n_local() {
+                    r.owned[lc]
+                } else {
+                    r.halo_globals[lc - r.n_local()]
+                };
+                coo.push(g, gc, r.a.values[k]);
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::mpk::{trad_mpk, NativeBackend};
+    use crate::partition::{partition, Method};
+
+    #[test]
+    fn ca_matches_trad() {
+        let a = gen::stencil_2d_5pt(10, 10);
+        let x: Vec<f64> = (0..100).map(|i| (i as f64 * 0.7).sin()).collect();
+        for np in [2, 4] {
+            let part = partition(&a, np, Method::Block);
+            let d = DistMatrix::build(&a, &part);
+            let want = trad_mpk(&d, &x, 3, &mut NativeBackend);
+            let got = ca_mpk_with(&a, &d, &x, 3);
+            for (gp, wp) in got.result.powers.iter().zip(&want.powers) {
+                for (u, v) in gp.iter().zip(wp) {
+                    assert!((u - v).abs() < 1e-11);
+                }
+            }
+            // CA does strictly more flops (redundant work), single round
+            assert!(got.result.flop_nnz > want.flop_nnz);
+            assert_eq!(got.result.comm.rounds, 1);
+        }
+    }
+
+    #[test]
+    fn reassemble_inverts_build() {
+        let a = gen::random_banded_sym(300, 8, 30, 4);
+        let part = partition(&a, 3, Method::GreedyGrow);
+        let d = DistMatrix::build(&a, &part);
+        assert_eq!(reassemble_global(&d), a);
+    }
+
+    #[test]
+    fn overheads_grow_with_power_and_ranks() {
+        let a = gen::stencil_2d_5pt(20, 20);
+        let ov = |np: usize, p_m: usize| {
+            let part = partition(&a, np, Method::Block);
+            let d = DistMatrix::build(&a, &part);
+            ca_plan(&a, &d, p_m).overheads
+        };
+        let o_p2 = ov(4, 2);
+        let o_p6 = ov(4, 6);
+        assert!(o_p6.extra_halo > o_p2.extra_halo);
+        assert!(o_p6.redundant_nnz > o_p2.redundant_nnz);
+        let o_n2 = ov(2, 4);
+        let o_n8 = ov(8, 4);
+        assert!(o_n8.extra_halo > o_n2.extra_halo);
+        // p_m = 1: no extra halo, no redundancy (single SpMV)
+        let o1 = ov(4, 1);
+        assert_eq!(o1.extra_halo, 0);
+        assert_eq!(o1.redundant_nnz, 0);
+    }
+
+    #[test]
+    fn e0_matches_trad_halo() {
+        let a = gen::stencil_2d_5pt(12, 12);
+        let part = partition(&a, 3, Method::Block);
+        let d = DistMatrix::build(&a, &part);
+        let plan = ca_plan(&a, &d, 4);
+        assert_eq!(plan.overheads.base_halo, d.total_halo());
+    }
+}

@@ -1,0 +1,567 @@
+//! DLB-MPK — the paper's Distributed Level-Blocked Matrix Power Kernel
+//! (paper §5, Alg. 2, Fig. 6).
+//!
+//! Three phases per rank:
+//!
+//! 1. **Initial halo exchange** of the input vector (identical to TRAD's
+//!    first exchange).
+//! 2. **Local level-blocked MPK**: a cache-blocked wavefront over
+//!    boundary-rooted BFS levels promotes the bulk `M` (distance ≥ p_m from
+//!    the halo) all the way to power `p_m`, and each distance class `I_k`
+//!    (k < p_m) up to power `k` — the maximum its halo dependencies permit.
+//! 3. **Iterative remainder**: `p_m − 1` rounds of {halo exchange of
+//!    `y_p`, promote every unfinished class by one power}. Round `p`
+//!    advances `I_k` from power `p + k − 1` to `p + k` for `k ≤ p_m − p`.
+//!
+//! Level structure: local vertices are labeled by graph distance from the
+//! halo (multi-source BFS seeded at halo slots), so distance class `I_k`
+//! *is* BFS level `k − 1`, and the distance shells continue inward through
+//! `M` — giving RACE-style levels for cache blocking and the class
+//! bookkeeping in one structure. Vertices unreachable from any halo (or all
+//! vertices, in a single-rank run) get ordinary BFS levels appended after
+//! the reachable ones; they belong to `M` and never interact with the halo.
+
+use crate::distsim::{exchange_halo, CommStats, DistMatrix, RankLocal};
+use crate::graph::distance::multi_source_distances;
+use crate::graph::{bfs_levels, Adjacency, Levels};
+use crate::mpk::{MpkResult, SpmvBackend};
+use crate::race::grouping::group_levels_solo_prefix;
+use crate::race::schedule::{wavefront_capped, Step};
+
+/// Tuning knobs mirroring the paper's RACE parameters (§6.2).
+#[derive(Clone, Copy, Debug)]
+pub struct DlbOptions {
+    /// Cache budget `C` in bytes (per rank).
+    pub cache_bytes: usize,
+    /// Maximum recursion stage `s_m` (bulky-level split cap).
+    pub s_m: usize,
+}
+
+impl Default for DlbOptions {
+    fn default() -> Self {
+        Self { cache_bytes: 32 << 20, s_m: 50 }
+    }
+}
+
+/// Per-rank preprocessing result (reusable across runs with the same
+/// matrix/partition/p_m — the paper's setup cost is likewise amortized).
+#[derive(Clone, Debug)]
+pub struct DlbRankPlan {
+    /// Permutation applied to the rank (perm[new] = old).
+    pub perm: Vec<usize>,
+    /// Levels of the permuted local matrix: level `k-1` = class `I_k` for
+    /// `k < p_m`; all later levels are the bulk `M`.
+    pub levels: Levels,
+    /// Group row ranges (permuted indexing).
+    pub ranges: Vec<(usize, usize)>,
+    /// Power cap per group for phase 2.
+    pub caps: Vec<usize>,
+    /// Phase-2 wavefront schedule.
+    pub schedule: Vec<Step>,
+    /// Row ranges of classes `I_1..I_{p_m-1}` (phase 3 work lists):
+    /// `class_ranges[k-1]` = rows of `I_k`; empty if the class is empty.
+    pub class_ranges: Vec<(usize, usize)>,
+    /// |M| — bulk size (for Eq. 2 overhead).
+    pub bulk_rows: usize,
+}
+
+/// The full distributed plan: permuted rank-locals + per-rank plans.
+pub struct DlbPlan {
+    pub dist: std::sync::Arc<DistMatrix>,
+    pub ranks: Vec<DlbRankPlan>,
+    pub p_m: usize,
+}
+
+/// p-independent preprocessing: boundary-distance levels + the local
+/// permutation, computed once per (matrix, partition). Re-plan cheaply for
+/// any `(p_m, C, s_m)` with [`plan_from_pre`] — mirrors how RACE amortizes
+/// its preprocessing across tuning runs (paper §6.2).
+pub struct DlbPre {
+    pub dist: std::sync::Arc<DistMatrix>,
+    levels: Vec<Levels>,
+}
+
+/// Output of [`dlb_mpk`]: the result plus the plan's overhead metrics.
+pub struct DlbOutput {
+    pub result: MpkResult,
+    /// Paper Eq. (3) global overhead.
+    pub overhead: f64,
+}
+
+/// Build the per-rank level/schedule plan and permute the local matrices.
+pub fn plan(dist: &DistMatrix, p_m: usize, opts: &DlbOptions) -> DlbPlan {
+    plan_from_pre(&preprocess(dist), p_m, opts)
+}
+
+/// Compute levels + permutation once (see [`DlbPre`]).
+pub fn preprocess(dist: &DistMatrix) -> DlbPre {
+    let mut dist = dist.clone();
+    let mut levels = Vec::with_capacity(dist.n_ranks());
+    for r in &mut dist.ranks {
+        levels.push(preprocess_rank(r));
+    }
+    DlbPre { dist: std::sync::Arc::new(dist), levels }
+}
+
+/// Build a plan for `(p_m, opts)` from shared preprocessing.
+pub fn plan_from_pre(pre: &DlbPre, p_m: usize, opts: &DlbOptions) -> DlbPlan {
+    assert!(p_m >= 1);
+    let plans = pre
+        .dist
+        .ranks
+        .iter()
+        .zip(&pre.levels)
+        .map(|(r, lv)| finish_rank_plan(r, lv, p_m, opts))
+        .collect();
+    DlbPlan { dist: pre.dist.clone(), ranks: plans, p_m }
+}
+
+/// Levels (boundary-rooted) + permutation for one rank; permutes `r`.
+fn preprocess_rank(r: &mut RankLocal) -> Levels {
+    let nl = r.n_local();
+    let nv = r.vec_len();
+
+    // adjacency over local + halo vertices (halo edges come from the local
+    // rows that reference them)
+    let g = if local_block_symmetric(&r.a, nl) {
+        Adjacency::from_local_block(&r.a, nl)
+    } else {
+        Adjacency::from_matrix(&padded_square(&r.a, nv))
+    };
+
+    // distance from halo; level k-1 = distance k
+    let level_of: Vec<u32> = if r.n_halo() == 0 {
+        // single rank / no halo: plain BFS levels, all bulk
+        let res = bfs_levels(&g, 0);
+        res.level_of[..nl].to_vec()
+    } else {
+        let sources: Vec<u32> = (nl as u32..nv as u32).collect();
+        let dist_from_halo = multi_source_distances(&g, &sources);
+        let max_d = (0..nl)
+            .map(|v| dist_from_halo[v])
+            .filter(|&d| d != u32::MAX)
+            .max()
+            .unwrap_or(0);
+        // unreachable vertices: plain BFS levels appended after max_d
+        let mut level_of = vec![0u32; nl];
+        let mut unreachable: Vec<u32> = Vec::new();
+        for v in 0..nl {
+            if dist_from_halo[v] == u32::MAX {
+                unreachable.push(v as u32);
+            } else {
+                level_of[v] = dist_from_halo[v] - 1;
+            }
+        }
+        if !unreachable.is_empty() {
+            // BFS restricted to unreachable set (no edges to reachable set
+            // exist, by definition of reachability)
+            let sub = bfs_levels_subset(&g, &unreachable);
+            for (i, &v) in unreachable.iter().enumerate() {
+                level_of[v as usize] = max_d + sub[i];
+            }
+        }
+        level_of
+    };
+    let n_levels = level_of.iter().copied().max().map_or(0, |m| m as usize + 1);
+    let levels = Levels::from_level_of(&level_of, n_levels);
+
+    // permute the rank so levels are contiguous
+    r.permute_local(&levels.perm);
+    levels
+}
+
+/// Grouping, caps, schedule, class ranges for one (p_m, opts) — cheap
+/// relative to [`preprocess_rank`].
+fn finish_rank_plan(r: &RankLocal, levels: &Levels, p_m: usize, opts: &DlbOptions) -> DlbRankPlan {
+    let nl = r.n_local();
+    let n_levels = levels.n_levels();
+
+    // caps: class I_k (level k-1) stops at power k when there IS a halo
+    let solo = if r.n_halo() == 0 { 0 } else { (p_m - 1).min(n_levels) };
+    let groups = group_levels_solo_prefix(&r.a, levels, p_m, opts.cache_bytes, opts.s_m, solo);
+    let caps: Vec<usize> = groups
+        .level_span
+        .iter()
+        .map(|&(lo, _)| if r.n_halo() == 0 { p_m } else { (lo + 1).min(p_m) })
+        .collect();
+    let schedule = wavefront_capped(&groups, n_levels, p_m, &caps);
+
+    // class row ranges for phase 3 (level k-1 = class k)
+    let class_ranges: Vec<(usize, usize)> = (0..p_m.saturating_sub(1))
+        .map(|k| {
+            if r.n_halo() == 0 || k >= n_levels {
+                (0, 0)
+            } else {
+                let rg = levels.rows(k);
+                (rg.start, rg.end)
+            }
+        })
+        .collect();
+    let bulk_rows = if r.n_halo() == 0 {
+        nl
+    } else {
+        let first_bulk = (p_m - 1).min(n_levels);
+        nl - levels.level_ptr[first_bulk]
+    };
+
+    DlbRankPlan {
+        perm: levels.perm.clone(),
+        levels: levels.clone(),
+        ranges: groups.ranges.clone(),
+        caps,
+        schedule,
+        class_ranges,
+        bulk_rows,
+    }
+}
+
+/// Check that the local-local sub-pattern is symmetric (fast-path guard).
+fn local_block_symmetric(a: &crate::matrix::CsrMatrix, nl: usize) -> bool {
+    for r in 0..nl {
+        for &c in a.row_cols(r) {
+            let c = c as usize;
+            if c < nl && c != r && a.row_cols(c).binary_search(&(r as u32)).is_err() {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Embed the rectangular local block (nl × nv) into an nv × nv square so the
+/// graph view covers halo vertices too (their rows are empty; symmetrization
+/// supplies the back-edges).
+fn padded_square(a: &crate::matrix::CsrMatrix, nv: usize) -> crate::matrix::CsrMatrix {
+    let mut rowptr = a.rowptr.clone();
+    rowptr.resize(nv + 1, *a.rowptr.last().unwrap());
+    crate::matrix::CsrMatrix {
+        n_rows: nv,
+        n_cols: nv,
+        rowptr,
+        colidx: a.colidx.clone(),
+        values: a.values.clone(),
+    }
+}
+
+/// BFS levels over an induced subset (restarting per component); returns the
+/// level of each subset vertex, aligned with `verts`.
+fn bfs_levels_subset(g: &Adjacency, verts: &[u32]) -> Vec<u32> {
+    let mut in_set = std::collections::HashMap::new();
+    for (i, &v) in verts.iter().enumerate() {
+        in_set.insert(v, i);
+    }
+    let mut level = vec![u32::MAX; verts.len()];
+    let mut next_level = 0u32;
+    for start in 0..verts.len() {
+        if level[start] != u32::MAX {
+            continue;
+        }
+        let mut frontier = vec![verts[start]];
+        level[start] = next_level;
+        let mut cur = next_level;
+        while !frontier.is_empty() {
+            let mut nf = Vec::new();
+            for &u in &frontier {
+                for &v in g.neighbors(u as usize) {
+                    if let Some(&i) = in_set.get(&v) {
+                        if level[i] == u32::MAX {
+                            level[i] = cur + 1;
+                            nf.push(v);
+                        }
+                    }
+                }
+            }
+            frontier = nf;
+            cur += 1;
+        }
+        next_level = cur + 1;
+    }
+    level
+}
+
+/// Which three-term structure the wavefront promotes (the dependency
+/// pattern is identical, so DLB applies unchanged — paper §7).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Recurrence {
+    /// `y_p = A y_{p-1}` — the matrix power kernel.
+    Power,
+    /// `y_p = 2 A y_{p-1} − y_{p-2}` — the Chebyshev recurrence (Eq. 6).
+    /// `y_{-1}` is supplied by the caller (`x_m1`); if absent, step 1 is the
+    /// wind-up `y_1 = A y_0` (Eq. 7).
+    Chebyshev,
+}
+
+/// Execute DLB-MPK with a prebuilt plan.
+pub fn execute(
+    plan: &DlbPlan,
+    x: &[f64],
+    backend: &mut dyn SpmvBackend,
+) -> MpkResult {
+    execute_recurrence(plan, x, None, Recurrence::Power, backend)
+}
+
+/// Reusable power-vector workspace: avoids re-allocating and re-zeroing
+/// `(p_m + 1) × ranks` vectors on every MPK invocation (the dominant
+/// overhead for repeated small/medium runs — EXPERIMENTS.md §Perf L3-1).
+#[derive(Default)]
+pub struct Workspace {
+    ys: Vec<Vec<Vec<f64>>>,
+    ym1: Vec<Vec<f64>>,
+}
+
+impl Workspace {
+    /// Ensure shape `(p_m + 1) × ranks × vec_len`; reuse existing buffers.
+    fn prepare(&mut self, dist: &DistMatrix, p_m: usize, need_ym1: bool) {
+        self.ys.resize_with(p_m + 1, Vec::new);
+        for pw in &mut self.ys {
+            pw.resize_with(dist.n_ranks(), Vec::new);
+            for (r, v) in dist.ranks.iter().zip(pw.iter_mut()) {
+                v.resize(r.vec_len(), 0.0);
+            }
+        }
+        if need_ym1 {
+            self.ym1.resize_with(dist.n_ranks(), Vec::new);
+            for (r, v) in dist.ranks.iter().zip(self.ym1.iter_mut()) {
+                v.resize(r.vec_len(), 0.0);
+            }
+        }
+    }
+
+    /// Scatter a global vector into the rank-local layout of `power`.
+    fn scatter_into(&mut self, dist: &DistMatrix, power: usize, x: &[f64]) {
+        for (r, v) in dist.ranks.iter().zip(self.ys[power].iter_mut()) {
+            for (l, &g) in r.owned.iter().enumerate() {
+                v[l] = x[g];
+            }
+        }
+    }
+}
+
+/// Generalized DLB driver over a three-term recurrence (see [`Recurrence`]).
+pub fn execute_recurrence(
+    plan: &DlbPlan,
+    x: &[f64],
+    x_m1: Option<&[f64]>,
+    rec: Recurrence,
+    backend: &mut dyn SpmvBackend,
+) -> MpkResult {
+    let mut ws = Workspace::default();
+    execute_recurrence_with(plan, x, x_m1, rec, backend, &mut ws)
+}
+
+/// Workspace-reusing variant of [`execute_recurrence`].
+pub fn execute_recurrence_with(
+    plan: &DlbPlan,
+    x: &[f64],
+    x_m1: Option<&[f64]>,
+    rec: Recurrence,
+    backend: &mut dyn SpmvBackend,
+    ws: &mut Workspace,
+) -> MpkResult {
+    let p_m = plan.p_m;
+    let dist = &plan.dist;
+    let nr = dist.n_ranks();
+
+    ws.prepare(dist, p_m, x_m1.is_some());
+    ws.scatter_into(dist, 0, x);
+    if let Some(v) = x_m1 {
+        for (r, w) in dist.ranks.iter().zip(ws.ym1.iter_mut()) {
+            for (l, &g) in r.owned.iter().enumerate() {
+                w[l] = v[g];
+            }
+        }
+    }
+    let (ys, ym1_store) = (&mut ws.ys, &ws.ym1);
+    let ym1: Option<&[Vec<f64>]> = x_m1.map(|_| ym1_store.as_slice());
+
+    let mut comm = CommStats::default();
+    let mut flop_nnz = 0usize;
+
+    let do_step = |ys: &mut [Vec<Vec<f64>>],
+                   ym1: &Option<&[Vec<f64>]>,
+                   flop_nnz: &mut usize,
+                   i: usize,
+                   lo: usize,
+                   hi: usize,
+                   p: usize,
+                   backend: &mut dyn SpmvBackend| {
+        let r = &dist.ranks[i];
+        {
+            let (prevs, cur) = ys.split_at_mut(p);
+            backend.spmv_range(&r.a, lo, hi, &prevs[p - 1][i], &mut cur[0][i]);
+            match rec {
+                Recurrence::Power => {}
+                Recurrence::Chebyshev => {
+                    // y_p = 2·(A y_{p-1}) − y_{p-2}
+                    let sub: Option<&[f64]> = if p >= 2 {
+                        Some(&prevs[p - 2][i])
+                    } else {
+                        ym1.map(|v| &v[i][..])
+                    };
+                    let out = &mut cur[0][i];
+                    if let Some(sub) = sub {
+                        for r in lo..hi {
+                            out[r] = 2.0 * out[r] - sub[r];
+                        }
+                    }
+                    // no y_{-1}: wind-up step y_1 = A y_0 (Eq. 7)
+                }
+            }
+        }
+        *flop_nnz += r.a.rowptr[hi] - r.a.rowptr[lo];
+    };
+
+    // ---- phase 1: initial halo exchange (same routine as TRAD)
+    exchange_halo(&dist.ranks, &mut ys[0], &mut comm);
+
+    // ---- phase 2: local level-blocked wavefront (cache-blocked)
+    for i in 0..nr {
+        let pl = &plan.ranks[i];
+        for s in &pl.schedule {
+            let (lo, hi) = pl.ranges[s.group];
+            do_step(ys, &ym1, &mut flop_nnz, i, lo, hi, s.power, backend);
+        }
+    }
+
+    // ---- phase 3: p_m - 1 rounds of {exchange, advance classes}
+    for p in 1..p_m {
+        exchange_halo(&dist.ranks, &mut ys[p], &mut comm);
+        for i in 0..nr {
+            let pl = &plan.ranks[i];
+            for k in 1..=(p_m - p) {
+                let (lo, hi) = pl.class_ranges[k - 1];
+                if lo == hi {
+                    continue;
+                }
+                // advance I_k from power p + k - 1 to p + k
+                do_step(ys, &ym1, &mut flop_nnz, i, lo, hi, p + k, backend);
+            }
+        }
+    }
+
+    MpkResult {
+        powers: (1..=p_m).map(|p| dist.gather(&ys[p])).collect(),
+        comm,
+        flop_nnz,
+    }
+}
+
+
+/// One-shot plan + execute (see [`plan`]/[`execute`] to amortize setup).
+pub fn dlb_mpk(
+    dist: &DistMatrix,
+    x: &[f64],
+    p_m: usize,
+    opts: &DlbOptions,
+    backend: &mut dyn SpmvBackend,
+) -> DlbOutput {
+    let pl = plan(dist, p_m, opts);
+    let overhead = crate::mpk::overheads::dlb_overhead_from_plan(&pl);
+    let result = execute(&pl, x, backend);
+    DlbOutput { result, overhead }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::mpk::{trad_mpk, NativeBackend};
+    use crate::partition::{partition, Method};
+
+    fn check_equiv(a: &crate::matrix::CsrMatrix, np: usize, p_m: usize, cache: usize) {
+        let x: Vec<f64> = (0..a.n_rows()).map(|i| ((i * 37 % 101) as f64) / 101.0).collect();
+        let part = partition(a, np, Method::Block);
+        let d = DistMatrix::build(a, &part);
+        let want = trad_mpk(&d, &x, p_m, &mut NativeBackend);
+        let opts = DlbOptions { cache_bytes: cache, s_m: 50 };
+        let got = dlb_mpk(&d, &x, p_m, &opts, &mut NativeBackend);
+        assert_eq!(got.result.powers.len(), p_m);
+        for (p, (gp, wp)) in got.result.powers.iter().zip(&want.powers).enumerate() {
+            for (r, (u, v)) in gp.iter().zip(wp).enumerate() {
+                assert!(
+                    (u - v).abs() < 1e-10 * (1.0 + v.abs()),
+                    "np={np} p_m={p_m} power={} row={r}: {u} vs {v}",
+                    p + 1
+                );
+            }
+        }
+        // identical communication volume (the paper's headline property)
+        assert_eq!(got.result.comm.bytes, want.comm.bytes, "DLB must match TRAD comm");
+        assert_eq!(got.result.comm.rounds, want.comm.rounds);
+        // zero redundant computation
+        assert_eq!(got.result.flop_nnz, want.flop_nnz, "DLB must not recompute");
+    }
+
+    #[test]
+    fn dlb_equals_trad_2d_stencil() {
+        let a = gen::stencil_2d_5pt(12, 10);
+        for np in [1, 2, 4] {
+            for p_m in [1, 2, 3, 5] {
+                check_equiv(&a, np, p_m, 8 << 10);
+            }
+        }
+    }
+
+    #[test]
+    fn dlb_equals_trad_tridiag_tiny_cache() {
+        let a = gen::tridiag(64);
+        check_equiv(&a, 2, 4, 1); // 1-byte budget: maximal splitting
+        check_equiv(&a, 3, 3, 1 << 20); // giant budget: single bulk group
+    }
+
+    #[test]
+    fn dlb_equals_trad_random_banded() {
+        let a = gen::random_banded_sym(600, 12, 40, 9);
+        for np in [1, 3] {
+            for p_m in [2, 4, 6] {
+                check_equiv(&a, np, p_m, 16 << 10);
+            }
+        }
+    }
+
+    #[test]
+    fn dlb_equals_trad_anderson() {
+        let cfg = crate::matrix::anderson::AndersonConfig::isotropic(8, 2.0, 5);
+        let a = crate::matrix::anderson::anderson(&cfg);
+        check_equiv(&a, 4, 4, 8 << 10);
+    }
+
+    #[test]
+    fn plan_classes_partition_local_rows() {
+        let a = gen::stencil_2d_5pt(16, 16);
+        let part = partition(&a, 4, Method::GreedyGrow);
+        let d = DistMatrix::build(&a, &part);
+        let p_m = 4;
+        let pl = plan(&d, p_m, &DlbOptions::default());
+        for (r, rp) in pl.dist.ranks.iter().zip(&pl.ranks) {
+            // class ranges are disjoint ascending and lie before the bulk
+            let mut prev_end = 0usize;
+            for &(lo, hi) in &rp.class_ranges {
+                if lo == hi {
+                    continue;
+                }
+                assert_eq!(lo, prev_end);
+                prev_end = hi;
+            }
+            assert_eq!(r.n_local() - rp.bulk_rows, prev_end);
+            // boundary rows (touch halo) are exactly class I_1
+            if r.n_halo() > 0 {
+                let (lo, hi) = rp.class_ranges[0];
+                let boundary = r.boundary_rows();
+                assert_eq!(boundary.len(), hi - lo);
+                assert!(boundary.iter().all(|&b| (b as usize) >= lo && (b as usize) < hi));
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_dlb_is_pure_lb_mpk() {
+        let a = gen::stencil_2d_5pt(20, 20);
+        let part = partition(&a, 1, Method::Block);
+        let d = DistMatrix::build(&a, &part);
+        let x = vec![1.0; 400];
+        let out = dlb_mpk(&d, &x, 3, &DlbOptions { cache_bytes: 4 << 10, s_m: 50 }, &mut NativeBackend);
+        assert_eq!(out.result.comm.bytes, 0);
+        assert_eq!(out.overhead, 0.0, "no halo -> zero DLB overhead");
+    }
+}

@@ -1,0 +1,70 @@
+//! The paper's overhead metrics (Eq. 1–3).
+
+use crate::distsim::DistMatrix;
+use crate::mpk::dlb::DlbPlan;
+
+/// Paper Eq. (1): `O_MPI = Σ_i N_{h,i} / N_r` — re-exported convenience.
+pub fn mpi_overhead(dist: &DistMatrix) -> f64 {
+    dist.mpi_overhead()
+}
+
+/// Paper Eq. (2): per-rank DLB overhead `1 − |M_i| / N_{i,r}`.
+pub fn dlb_local_overhead(bulk_rows: usize, n_local: usize) -> f64 {
+    if n_local == 0 {
+        0.0
+    } else {
+        1.0 - bulk_rows as f64 / n_local as f64
+    }
+}
+
+/// Paper Eq. (3): row-weighted global DLB overhead.
+pub fn dlb_overhead_from_plan(plan: &DlbPlan) -> f64 {
+    let n_r: usize = plan.dist.ranks.iter().map(|r| r.n_local()).sum();
+    if n_r == 0 {
+        return 0.0;
+    }
+    let weighted: f64 = plan
+        .dist
+        .ranks
+        .iter()
+        .zip(&plan.ranks)
+        .map(|(r, rp)| r.n_local() as f64 * dlb_local_overhead(rp.bulk_rows, r.n_local()))
+        .sum();
+    weighted / n_r as f64
+}
+
+/// Convenience: build a DLB plan just to measure Eq. (3).
+pub fn dlb_overhead(dist: &DistMatrix, p_m: usize, opts: &crate::mpk::DlbOptions) -> f64 {
+    dlb_overhead_from_plan(&crate::mpk::dlb::plan(dist, p_m, opts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::mpk::DlbOptions;
+    use crate::partition::{partition, Method};
+
+    #[test]
+    fn overhead_grows_with_p_and_ranks() {
+        let a = gen::stencil_2d_5pt(24, 24);
+        let mk = |np: usize, p_m: usize| {
+            let p = partition(&a, np, Method::Block);
+            let d = DistMatrix::build(&a, &p);
+            dlb_overhead(&d, p_m, &DlbOptions::default())
+        };
+        // growing power eats into the bulk (paper §6.4)
+        assert!(mk(2, 2) < mk(2, 6));
+        // more ranks -> more boundary -> more overhead
+        assert!(mk(2, 4) < mk(8, 4));
+        // single rank has zero overhead
+        assert_eq!(mk(1, 8), 0.0);
+    }
+
+    #[test]
+    fn local_overhead_formula() {
+        assert_eq!(dlb_local_overhead(75, 100), 0.25);
+        assert_eq!(dlb_local_overhead(100, 100), 0.0);
+        assert_eq!(dlb_local_overhead(0, 0), 0.0);
+    }
+}

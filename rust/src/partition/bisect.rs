@@ -1,0 +1,171 @@
+//! Recursive bisection with boundary Kernighan–Lin/Fiduccia–Mattheyses-style
+//! refinement — the highest-quality METIS stand-in in this crate.
+//!
+//! Each bisection splits a vertex subset in two halves along its BFS level
+//! order (a good starting cut for the banded matrices this paper targets),
+//! then sweeps boundary vertices with positive KL gain across the cut while
+//! balance permits.
+
+use crate::graph::Adjacency;
+use crate::matrix::CsrMatrix;
+use crate::partition::Partition;
+
+pub fn recursive_bisect(a: &CsrMatrix, n_parts: usize) -> Partition {
+    let g = Adjacency::from_matrix(a);
+    let mut part_of = vec![0u32; g.n];
+    let all: Vec<u32> = (0..g.n as u32).collect();
+    let mut next_id = 0u32;
+    bisect_rec(&g, &all, n_parts, &mut part_of, &mut next_id);
+    Partition { n_parts, part_of }
+}
+
+fn bisect_rec(g: &Adjacency, verts: &[u32], parts: usize, part_of: &mut [u32], next_id: &mut u32) {
+    if parts == 1 {
+        let id = *next_id;
+        *next_id += 1;
+        for &v in verts {
+            part_of[v as usize] = id;
+        }
+        return;
+    }
+    let left_parts = parts / 2;
+    let right_parts = parts - left_parts;
+    // target |left| proportional to its share of parts
+    let target_left = verts.len() * left_parts / parts;
+
+    // BFS order within this subset from its first vertex
+    let order = local_bfs_order(g, verts);
+    let mut side = vec![false; g.n]; // true = right
+    for (i, &v) in order.iter().enumerate() {
+        side[v as usize] = i >= target_left;
+    }
+    kl_refine(g, verts, &mut side, target_left);
+
+    let (mut left, mut right) = (Vec::new(), Vec::new());
+    for &v in verts {
+        if side[v as usize] {
+            right.push(v);
+        } else {
+            left.push(v);
+        }
+    }
+    // degenerate guard: never recurse on an empty side
+    if left.is_empty() {
+        left.push(right.pop().unwrap());
+    }
+    if right.is_empty() {
+        right.push(left.pop().unwrap());
+    }
+    bisect_rec(g, &left, left_parts, part_of, next_id);
+    bisect_rec(g, &right, right_parts, part_of, next_id);
+}
+
+/// BFS order over the induced subgraph (restarting on disconnection).
+fn local_bfs_order(g: &Adjacency, verts: &[u32]) -> Vec<u32> {
+    let mut in_set = vec![false; g.n];
+    for &v in verts {
+        in_set[v as usize] = true;
+    }
+    let mut seen = vec![false; g.n];
+    let mut order = Vec::with_capacity(verts.len());
+    let mut queue = std::collections::VecDeque::new();
+    let mut scan = 0usize;
+    while order.len() < verts.len() {
+        // find next unvisited vertex of the subset
+        while scan < verts.len() && seen[verts[scan] as usize] {
+            scan += 1;
+        }
+        let root = verts[scan];
+        seen[root as usize] = true;
+        queue.push_back(root);
+        while let Some(u) = queue.pop_front() {
+            order.push(u);
+            for &v in g.neighbors(u as usize) {
+                if in_set[v as usize] && !seen[v as usize] {
+                    seen[v as usize] = true;
+                    queue.push_back(v);
+                }
+            }
+        }
+    }
+    order
+}
+
+/// One KL/FM pass: move boundary vertices with positive gain, keeping the
+/// left side within ±5% of `target_left`.
+fn kl_refine(g: &Adjacency, verts: &[u32], side: &mut [bool], target_left: usize) {
+    let slack = (verts.len() / 20).max(1);
+    let mut left_count = verts.iter().filter(|&&v| !side[v as usize]).count();
+    for _pass in 0..4 {
+        let mut moved = 0usize;
+        for &v in verts {
+            let vu = v as usize;
+            // gain = external - internal edges
+            let (mut ext, mut int) = (0isize, 0isize);
+            for &u in g.neighbors(vu) {
+                // neighbors outside `verts` don't count; side[] defaults are
+                // fine because cut edges to other subsets are fixed costs
+                if side[u as usize] == side[vu] {
+                    int += 1;
+                } else {
+                    ext += 1;
+                }
+            }
+            if ext > int {
+                let to_right = !side[vu];
+                let new_left = if to_right { left_count - 1 } else { left_count + 1 };
+                if new_left.abs_diff(target_left) <= slack {
+                    side[vu] = !side[vu];
+                    left_count = new_left;
+                    moved += 1;
+                }
+            }
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::partition::stats::PartitionStats;
+
+    #[test]
+    fn bisect_grid_is_balanced() {
+        let a = gen::stencil_2d_5pt(16, 16);
+        let p = recursive_bisect(&a, 4);
+        p.validate(256).unwrap();
+        for &s in &p.part_sizes() {
+            assert!((44..=84).contains(&s), "size {s}");
+        }
+    }
+
+    #[test]
+    fn bisect_cut_beats_random() {
+        let a = gen::stencil_2d_5pt(24, 24);
+        let p = recursive_bisect(&a, 4);
+        let st = PartitionStats::compute(&a, &p);
+        // random 4-way cut of a grid ≈ 3/4 of edges; we need far better
+        assert!(st.edgecut < a.nnz() / 6, "edgecut {}", st.edgecut);
+    }
+
+    #[test]
+    fn works_for_non_power_of_two() {
+        let a = gen::stencil_2d_5pt(15, 14);
+        let p = recursive_bisect(&a, 3);
+        p.validate(210).unwrap();
+        for &s in &p.part_sizes() {
+            assert!((50..=90).contains(&s), "size {s}");
+        }
+    }
+
+    #[test]
+    fn one_part() {
+        let a = gen::tridiag(7);
+        let p = recursive_bisect(&a, 1);
+        assert!(p.part_of.iter().all(|&x| x == 0));
+    }
+}

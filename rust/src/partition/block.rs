@@ -1,0 +1,77 @@
+//! Contiguous block partitioning balanced by non-zeros.
+
+use crate::matrix::CsrMatrix;
+use crate::partition::Partition;
+
+/// Split rows into `n_parts` contiguous blocks with ~equal nnz (greedy
+/// cut: close a block once it reaches its fair share of the remainder).
+pub fn block_partition(a: &CsrMatrix, n_parts: usize) -> Partition {
+    let n = a.n_rows();
+    let total_nnz = a.nnz();
+    let mut part_of = vec![0u32; n];
+    let mut row = 0usize;
+    let mut used_nnz = 0usize;
+    for p in 0..n_parts {
+        let remaining_parts = n_parts - p;
+        let target = (total_nnz - used_nnz) / remaining_parts;
+        let mut acc = 0usize;
+        let start = row;
+        // leave enough rows for the remaining parts
+        let row_cap = n - (remaining_parts - 1);
+        while row < row_cap && (acc < target || row == start) {
+            acc += a.rowptr[row + 1] - a.rowptr[row];
+            part_of[row] = p as u32;
+            row += 1;
+            if acc >= target && row > start {
+                break;
+            }
+        }
+        used_nnz += acc;
+    }
+    // tail rows go to the last part
+    for r in row..n {
+        part_of[r] = (n_parts - 1) as u32;
+    }
+    Partition { n_parts, part_of }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    #[test]
+    fn blocks_are_contiguous_and_balanced() {
+        let a = gen::stencil_2d_5pt(32, 32);
+        let p = block_partition(&a, 4);
+        p.validate(a.n_rows()).unwrap();
+        // contiguity: part ids are non-decreasing
+        for w in p.part_of.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        // nnz balance within 25%
+        let mut nnz = vec![0usize; 4];
+        for r in 0..a.n_rows() {
+            nnz[p.part_of[r] as usize] += a.row_cols(r).len();
+        }
+        let avg = a.nnz() / 4;
+        for &z in &nnz {
+            assert!(z.abs_diff(avg) < avg / 4, "nnz {z} vs avg {avg}");
+        }
+    }
+
+    #[test]
+    fn single_part_takes_all() {
+        let a = gen::tridiag(10);
+        let p = block_partition(&a, 1);
+        assert!(p.part_of.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn n_parts_equals_rows() {
+        let a = gen::tridiag(5);
+        let p = block_partition(&a, 5);
+        p.validate(5).unwrap();
+        assert_eq!(p.part_sizes(), vec![1; 5]);
+    }
+}

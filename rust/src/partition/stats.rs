@@ -1,0 +1,90 @@
+//! Partition quality metrics: edge cut, imbalance, halo volume.
+
+use crate::matrix::CsrMatrix;
+use crate::partition::Partition;
+
+#[derive(Clone, Debug)]
+pub struct PartitionStats {
+    /// Number of non-zeros whose row and column live on different parts
+    /// (directed count — each cut coupling counted once per matrix entry).
+    pub edgecut: usize,
+    /// max(part rows) / mean(part rows).
+    pub row_imbalance: f64,
+    /// max(part nnz) / mean(part nnz).
+    pub nnz_imbalance: f64,
+    /// Total distinct remote x-elements needed across ranks = Σ_i N_{h,i}.
+    pub halo_elements: usize,
+}
+
+impl PartitionStats {
+    pub fn compute(a: &CsrMatrix, p: &Partition) -> Self {
+        let n = a.n_rows();
+        let mut edgecut = 0usize;
+        let mut rows = vec![0usize; p.n_parts];
+        let mut nnz = vec![0usize; p.n_parts];
+        // distinct remote columns per part
+        let mut halo_sets: Vec<std::collections::HashSet<u32>> =
+            vec![Default::default(); p.n_parts];
+        for r in 0..n {
+            let pr = p.part_of[r] as usize;
+            rows[pr] += 1;
+            for &c in a.row_cols(r) {
+                nnz[pr] += 1;
+                if p.part_of[c as usize] != pr as u32 {
+                    edgecut += 1;
+                    halo_sets[pr].insert(c);
+                }
+            }
+        }
+        let mean_rows = n as f64 / p.n_parts as f64;
+        let mean_nnz = a.nnz() as f64 / p.n_parts as f64;
+        PartitionStats {
+            edgecut,
+            row_imbalance: rows.iter().copied().max().unwrap_or(0) as f64 / mean_rows,
+            nnz_imbalance: nnz.iter().copied().max().unwrap_or(0) as f64 / mean_nnz,
+            halo_elements: halo_sets.iter().map(|s| s.len()).sum(),
+        }
+    }
+
+    /// Paper Eq. (1): O_MPI = Σ N_{h,i} / N_r.
+    pub fn mpi_overhead(&self, n_rows: usize) -> f64 {
+        self.halo_elements as f64 / n_rows as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::partition::{partition, Method};
+
+    #[test]
+    fn tridiag_two_blocks_cut_two() {
+        let a = gen::tridiag(10);
+        let p = partition(&a, 2, Method::Block);
+        let st = PartitionStats::compute(&a, &p);
+        // exactly one coupling pair crosses: entries (k, k+1) and (k+1, k)
+        assert_eq!(st.edgecut, 2);
+        assert_eq!(st.halo_elements, 2);
+        assert!((st.mpi_overhead(10) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_close_to_one_for_uniform() {
+        let a = gen::stencil_2d_5pt(20, 20);
+        let p = partition(&a, 4, Method::Block);
+        let st = PartitionStats::compute(&a, &p);
+        assert!(st.row_imbalance < 1.2);
+        assert!(st.nnz_imbalance < 1.2);
+    }
+
+    #[test]
+    fn methods_produce_comparable_cuts_on_grid() {
+        let a = gen::stencil_2d_5pt(24, 24);
+        for m in [Method::Block, Method::GreedyGrow, Method::RecursiveBisect] {
+            let p = partition(&a, 4, m);
+            let st = PartitionStats::compute(&a, &p);
+            assert!(st.edgecut > 0 && st.edgecut < a.nnz() / 6, "{m:?}: {}", st.edgecut);
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Streaming load-only bandwidth measurement (the likwid-bench `load`
+//! analogue used for paper Fig. 7).
+
+use std::hint::black_box;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BandwidthPoint {
+    pub bytes: usize,
+    pub gb_per_s: f64,
+}
+
+/// Measure load-only bandwidth for a working set of `bytes`, repeating the
+/// sweep until `min_time` elapsed (so small sets aren't noise-dominated).
+pub fn load_bandwidth(bytes: usize, min_time_s: f64) -> BandwidthPoint {
+    let n = (bytes / 8).max(1024);
+    let data: Vec<f64> = (0..n).map(|i| (i % 17) as f64).collect();
+    // warm-up sweep
+    let mut acc = 0.0f64;
+    for &v in &data {
+        acc += v;
+    }
+    black_box(acc);
+
+    let mut reps = 0u32;
+    let t0 = Instant::now();
+    let mut sum = 0.0f64;
+    loop {
+        // 8-way unrolled sum: keeps the core load-bound, not add-latency-bound
+        let mut s = [0.0f64; 8];
+        let chunks = data.chunks_exact(8);
+        let rem = chunks.remainder();
+        for c in chunks {
+            s[0] += c[0];
+            s[1] += c[1];
+            s[2] += c[2];
+            s[3] += c[3];
+            s[4] += c[4];
+            s[5] += c[5];
+            s[6] += c[6];
+            s[7] += c[7];
+        }
+        sum += s.iter().sum::<f64>() + rem.iter().sum::<f64>();
+        reps += 1;
+        if t0.elapsed().as_secs_f64() >= min_time_s {
+            break;
+        }
+    }
+    black_box(sum);
+    let secs = t0.elapsed().as_secs_f64();
+    let moved = (n * 8) as f64 * reps as f64;
+    BandwidthPoint { bytes: n * 8, gb_per_s: moved / secs / 1e9 }
+}
+
+/// Sweep working-set sizes (logarithmic ladder), Fig. 7 style.
+pub fn bandwidth_sweep(min_bytes: usize, max_bytes: usize, points_per_decade: usize) -> Vec<BandwidthPoint> {
+    let mut out = Vec::new();
+    let ratio = 10f64.powf(1.0 / points_per_decade as f64);
+    let mut b = min_bytes as f64;
+    while b <= max_bytes as f64 {
+        out.push(load_bandwidth(b as usize, 0.05));
+        b *= ratio;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_is_positive_and_sane() {
+        let p = load_bandwidth(1 << 20, 0.02);
+        assert!(p.gb_per_s > 0.5 && p.gb_per_s < 5000.0, "bw {}", p.gb_per_s);
+    }
+
+    #[test]
+    fn cache_faster_than_memory() {
+        // 32 KiB (L1-resident) must beat 256 MiB (memory-resident)
+        let l1 = load_bandwidth(32 << 10, 0.05);
+        let mem = load_bandwidth(256 << 20, 0.2);
+        assert!(
+            l1.gb_per_s > mem.gb_per_s,
+            "L1 {} <= mem {}",
+            l1.gb_per_s,
+            mem.gb_per_s
+        );
+    }
+}

@@ -1,0 +1,11 @@
+//! Performance modeling and measurement: the roofline bound (paper Eq. 4),
+//! streaming-bandwidth measurement (paper Fig. 7's likwid load-only kernel),
+//! and timing helpers.
+
+pub mod bandwidth;
+pub mod roofline;
+pub mod timer;
+
+pub use bandwidth::{load_bandwidth, BandwidthPoint};
+pub use roofline::{spmv_roofline_flops, spmv_roofline_gflops};
+pub use timer::{median_time, Timed};

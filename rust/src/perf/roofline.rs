@@ -1,0 +1,55 @@
+//! The paper's roofline performance bound for CRS SpMV (Eq. 4):
+//!
+//!   P = b_s / (6 B + 14 B / N_nzr)
+//!
+//! with `b_s` the saturated main-memory load bandwidth. Derivation (per
+//! non-zero): 8 B value + 4 B column index, halved to 6 B + … no — per flop:
+//! each non-zero contributes 2 flops and streams 12 B of matrix data, plus
+//! per-row 4 B rowptr and 8 B y-write + 8 B x-read amortized over N_nzr
+//! non-zeros; the paper's constants fold this to 6 B/flop + 14 B/(flop·N_nzr).
+
+/// Roofline flop/s bound for SpMV with mean row length `nnzr`, given
+/// bandwidth `bs_bytes_per_s`.
+pub fn spmv_roofline_flops(bs_bytes_per_s: f64, nnzr: f64) -> f64 {
+    bs_bytes_per_s / (6.0 + 14.0 / nnzr)
+}
+
+/// Same in Gflop/s with `bs` in GB/s (decimal, as the paper reports).
+pub fn spmv_roofline_gflops(bs_gb_per_s: f64, nnzr: f64) -> f64 {
+    spmv_roofline_flops(bs_gb_per_s * 1e9, nnzr) / 1e9
+}
+
+/// Flops of one SpMV: 2·nnz (multiply + add per non-zero).
+pub fn spmv_flops(nnz: usize) -> f64 {
+    2.0 * nnz as f64
+}
+
+/// Achieved Gflop/s for `nnz` non-zeros processed in `seconds`.
+pub fn gflops(nnz_processed: usize, seconds: f64) -> f64 {
+    spmv_flops(nnz_processed) / seconds / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roofline_monotone_in_nnzr() {
+        // wider rows amortize the per-row traffic -> higher bound
+        assert!(spmv_roofline_gflops(200.0, 80.0) > spmv_roofline_gflops(200.0, 10.0));
+    }
+
+    #[test]
+    fn paper_scale_sanity() {
+        // SPR: 241 GB/s, N_nzr ~ 46 (Serena) -> ~38 Gflop/s (paper Fig. 9
+        // shows TRAD around the upper-30s Gflop/s for such matrices)
+        let p = spmv_roofline_gflops(241.0, 46.3);
+        assert!((30.0..50.0).contains(&p), "P = {p}");
+    }
+
+    #[test]
+    fn limit_is_bandwidth_over_six() {
+        let inf = spmv_roofline_gflops(100.0, 1e12);
+        assert!((inf - 100.0 / 6.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,45 @@
+//! Minimal timing helpers (criterion is unavailable offline; benches use
+//! median-of-N wall-clock like the paper: "benchmarks are repeated several
+//! times, and the median performance is taken").
+
+use std::time::Instant;
+
+/// A measured run: median seconds plus spread.
+#[derive(Clone, Copy, Debug)]
+pub struct Timed {
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub reps: usize,
+}
+
+/// Run `f` `reps` times and report the median (paper §6.1.2 methodology).
+pub fn median_time<F: FnMut()>(reps: usize, mut f: F) -> Timed {
+    assert!(reps >= 1);
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Timed {
+        median_s: times[times.len() / 2],
+        min_s: times[0],
+        max_s: *times.last().unwrap(),
+        reps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_of_sleeps() {
+        let t = median_time(3, || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(t.median_s >= 0.002);
+        assert!(t.min_s <= t.median_s && t.median_s <= t.max_s);
+        assert_eq!(t.reps, 3);
+    }
+}

@@ -1,0 +1,249 @@
+//! Grouping consecutive BFS levels under the cache budget `C`.
+//!
+//! RACE's tuning parameters mirrored here (paper §6.2):
+//! * `cache_bytes` — the budget `C`; the grouping ensures any `p_m + 1`
+//!   consecutive groups hold at most `C` bytes of matrix data (so the
+//!   wavefront's working set stays cache-resident).
+//! * `s_m` — maximum recursion stage: a "bulky" level whose own data exceeds
+//!   the per-group share is split into at most `s_m` sub-blocks (a practical
+//!   stand-in for RACE's recursive sub-level coloring: sub-blocks of one
+//!   level are mutually independent w.r.t. the level invariant, because the
+//!   invariant constrains only *level* adjacency).
+
+use crate::graph::Levels;
+use crate::matrix::CsrMatrix;
+
+/// Groups of consecutive levels (and sub-blocks of bulky levels), stored as
+/// row ranges of the BFS-permuted matrix.
+#[derive(Clone, Debug)]
+pub struct LevelGroups {
+    /// Row range (permuted matrix) of each group, in level order.
+    pub ranges: Vec<(usize, usize)>,
+    /// For each group, the range of original level indices it covers
+    /// (sub-blocks of a split level share that level's index).
+    pub level_span: Vec<(usize, usize)>,
+    /// Matrix bytes (CRS accounting) per group.
+    pub bytes: Vec<usize>,
+}
+
+impl LevelGroups {
+    pub fn n_groups(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// The largest working set of `window` consecutive groups, in bytes.
+    pub fn max_window_bytes(&self, window: usize) -> usize {
+        if self.bytes.is_empty() {
+            return 0;
+        }
+        let w = window.min(self.bytes.len());
+        let mut sum: usize = self.bytes[..w].iter().sum();
+        let mut best = sum;
+        for i in w..self.bytes.len() {
+            sum += self.bytes[i];
+            sum -= self.bytes[i - w];
+            best = best.max(sum);
+        }
+        best
+    }
+
+    /// Validate group ranges tile `[0, n_rows)` contiguously.
+    pub fn validate(&self, n_rows: usize) -> Result<(), String> {
+        let mut next = 0usize;
+        for (i, &(lo, hi)) in self.ranges.iter().enumerate() {
+            if lo != next {
+                return Err(format!("group {i} starts at {lo}, expected {next}"));
+            }
+            if hi < lo {
+                return Err(format!("group {i} is reversed"));
+            }
+            next = hi;
+        }
+        if next != n_rows {
+            return Err(format!("groups end at {next}, expected {n_rows}"));
+        }
+        Ok(())
+    }
+}
+
+/// Group levels so that any `p_m + 1` consecutive groups hold ≤
+/// `cache_bytes` of matrix data (best effort: a single level bigger than the
+/// per-group share is split into ≤ `s_m` sub-blocks; if even a sub-block
+/// overflows, it is kept — cache blocking then degrades gracefully, exactly
+/// like RACE with an undersized `C`).
+///
+/// `b` must be the BFS-permuted matrix matching `levels`.
+pub fn group_levels(
+    b: &CsrMatrix,
+    levels: &Levels,
+    p_m: usize,
+    cache_bytes: usize,
+    s_m: usize,
+) -> LevelGroups {
+    group_levels_solo_prefix(b, levels, p_m, cache_bytes, s_m, 0)
+}
+
+/// Like [`group_levels`], but the first `solo_prefix` levels each form their
+/// own (unsplit, unmerged) group. DLB-MPK requires this for the boundary
+/// distance classes `I_k` (k < p_m): phase 3 promotes each class exactly one
+/// power per round, so a class must not share a group with rows of a
+/// different class (paper §5: classes are gathered contiguously in
+/// preprocessing).
+pub fn group_levels_solo_prefix(
+    b: &CsrMatrix,
+    levels: &Levels,
+    p_m: usize,
+    cache_bytes: usize,
+    s_m: usize,
+    solo_prefix: usize,
+) -> LevelGroups {
+    assert!(p_m >= 1);
+    let window = p_m + 1;
+    // Target bytes per group so that `window` consecutive groups fit in C.
+    let per_group = (cache_bytes / window).max(1);
+
+    let mut ranges = Vec::new();
+    let mut level_span = Vec::new();
+    let mut bytes = Vec::new();
+
+    let mut cur_lo = 0usize; // row where the open group starts
+    let mut cur_bytes = 0usize;
+    let mut cur_level_lo = 0usize;
+
+    let row_bytes = |lo: usize, hi: usize| -> usize {
+        crate::matrix::crs_bytes(hi - lo, b.rowptr[hi] - b.rowptr[lo])
+    };
+
+    let flush =
+        |ranges: &mut Vec<(usize, usize)>,
+         level_span: &mut Vec<(usize, usize)>,
+         bytes: &mut Vec<usize>,
+         cur_lo: &mut usize,
+         cur_bytes: &mut usize,
+         cur_level_lo: &mut usize,
+         row_hi: usize,
+         level_hi: usize| {
+            if row_hi > *cur_lo {
+                ranges.push((*cur_lo, row_hi));
+                level_span.push((*cur_level_lo, level_hi));
+                bytes.push(*cur_bytes);
+            }
+            *cur_lo = row_hi;
+            *cur_bytes = 0;
+            *cur_level_lo = level_hi;
+        };
+
+    for l in 0..levels.n_levels() {
+        let r = levels.rows(l);
+        let lb = row_bytes(r.start, r.end);
+        if l < solo_prefix {
+            // close any open group, then emit this level as its own group
+            flush(
+                &mut ranges, &mut level_span, &mut bytes, &mut cur_lo, &mut cur_bytes,
+                &mut cur_level_lo, r.start, l,
+            );
+            if r.end > r.start {
+                ranges.push((r.start, r.end));
+                level_span.push((l, l + 1));
+                bytes.push(lb);
+            }
+            cur_lo = r.end;
+            cur_bytes = 0;
+            cur_level_lo = l + 1;
+        } else if lb > per_group {
+            // bulky level: close the open group, then split this level
+            flush(
+                &mut ranges, &mut level_span, &mut bytes, &mut cur_lo, &mut cur_bytes,
+                &mut cur_level_lo, r.start, l,
+            );
+            let n_sub = lb.div_ceil(per_group).min(s_m.max(1));
+            let rows_per = (r.end - r.start).div_ceil(n_sub);
+            let mut lo = r.start;
+            while lo < r.end {
+                let hi = (lo + rows_per).min(r.end);
+                ranges.push((lo, hi));
+                level_span.push((l, l + 1));
+                bytes.push(row_bytes(lo, hi));
+                lo = hi;
+            }
+            cur_lo = r.end;
+            cur_bytes = 0;
+            cur_level_lo = l + 1;
+        } else if cur_bytes + lb > per_group && cur_bytes > 0 {
+            // close the open group before this level
+            flush(
+                &mut ranges, &mut level_span, &mut bytes, &mut cur_lo, &mut cur_bytes,
+                &mut cur_level_lo, r.start, l,
+            );
+            cur_bytes = lb;
+        } else {
+            cur_bytes += lb;
+        }
+    }
+    flush(
+        &mut ranges, &mut level_span, &mut bytes, &mut cur_lo, &mut cur_bytes,
+        &mut cur_level_lo, levels.n_rows(), levels.n_levels(),
+    );
+
+    let g = LevelGroups { ranges, level_span, bytes };
+    debug_assert!(g.validate(levels.n_rows()).is_ok());
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::levels::bfs_reorder;
+    use crate::matrix::gen;
+
+    #[test]
+    fn groups_tile_all_rows() {
+        let a = gen::stencil_2d_5pt(24, 24);
+        let (b, lv) = bfs_reorder(&a, 0);
+        let g = group_levels(&b, &lv, 4, 64 << 10, 50);
+        g.validate(b.n_rows()).unwrap();
+        assert!(g.n_groups() >= 2);
+        let total: usize = g.bytes.iter().sum();
+        assert_eq!(total, b.crs_bytes());
+    }
+
+    #[test]
+    fn window_fits_budget_when_feasible() {
+        let a = gen::stencil_2d_5pt(32, 32);
+        let (b, lv) = bfs_reorder(&a, 0);
+        let c = 32 << 10;
+        let g = group_levels(&b, &lv, 3, c, 50);
+        // per-level data is small here, so the guarantee must hold
+        assert!(g.max_window_bytes(4) <= c, "window {} > C {}", g.max_window_bytes(4), c);
+    }
+
+    #[test]
+    fn bulky_level_is_split() {
+        // 1D star-ish: one huge level. tridiag has 1-row levels; instead use
+        // a stencil and a tiny budget so every level is "bulky".
+        let a = gen::stencil_2d_5pt(64, 64);
+        let (b, lv) = bfs_reorder(&a, 0);
+        let g = group_levels(&b, &lv, 2, 4 << 10, 50);
+        g.validate(b.n_rows()).unwrap();
+        // middle levels have ~64 rows * ~60B > 1.3KiB per-group share
+        assert!(g.n_groups() > lv.n_levels(), "expected split groups");
+    }
+
+    #[test]
+    fn recursion_cap_limits_splitting() {
+        let a = gen::stencil_2d_5pt(64, 64);
+        let (b, lv) = bfs_reorder(&a, 0);
+        let g1 = group_levels(&b, &lv, 2, 2 << 10, 2);
+        let g2 = group_levels(&b, &lv, 2, 2 << 10, 64);
+        assert!(g2.n_groups() >= g1.n_groups());
+    }
+
+    #[test]
+    fn giant_budget_gives_one_group() {
+        let a = gen::stencil_2d_5pt(16, 16);
+        let (b, lv) = bfs_reorder(&a, 0);
+        let g = group_levels(&b, &lv, 2, usize::MAX / 8, 50);
+        assert_eq!(g.n_groups(), 1);
+        assert_eq!(g.ranges[0], (0, 256));
+    }
+}

@@ -1,0 +1,14 @@
+//! RACE-style level blocking: group BFS levels under a cache budget and
+//! schedule the Lp-diagram wavefront (paper §3).
+//!
+//! The cache-blocking argument: executing the Lp diagram in diagonal order
+//! (`group + power = const`), a level group's matrix data is re-touched after
+//! `p_m + 1` execution steps; if the bytes of `p_m + 1` consecutive groups
+//! fit in the cache budget `C`, every SpMV except the first streams its
+//! matrix data from cache.
+
+pub mod grouping;
+pub mod schedule;
+
+pub use grouping::{group_levels, LevelGroups};
+pub use schedule::{wavefront, Step};

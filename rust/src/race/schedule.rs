@@ -1,0 +1,240 @@
+//! The Lp-diagram wavefront schedule (paper §3, Fig. 2).
+//!
+//! Execution steps `(group, power)` are emitted in diagonal order
+//! (`group + power = const`, bottom-right to top-left within a diagonal, for
+//! increasing const) — the order that guarantees each step's dependencies
+//! (`A^{p-1}x` on the level and its two neighbor levels) are already done,
+//! while re-touching a group's matrix data after only `p_m + 1` steps.
+//!
+//! Dependencies are tracked at *level* granularity: when a bulky level was
+//! split into sub-block groups (race::grouping, `s_m`), the sub-blocks of
+//! one level may reference each other arbitrarily, so `(g, p)` is executable
+//! only when every group covering levels `span(g) ± 1` has completed power
+//! `p - 1`. For whole-level groups this reduces exactly to the paper's
+//! `{L(i-1), L(i), L(i+1)}` rule.
+
+use crate::race::LevelGroups;
+
+/// One execution step: promote all rows of `group` from power `power - 1`
+/// to `power`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Step {
+    pub group: usize,
+    pub power: usize,
+}
+
+/// Generate the wavefront schedule for `p_m` powers over `groups`.
+///
+/// Panics on deadlock, which cannot happen for groupings produced by
+/// [`crate::race::group_levels`] (dependencies are monotone in level order).
+pub fn wavefront(groups: &LevelGroups, n_levels: usize, p_m: usize) -> Vec<Step> {
+    let caps = vec![p_m; groups.n_groups()];
+    wavefront_capped(groups, n_levels, p_m, &caps)
+}
+
+/// Wavefront with a per-group power cap — the DLB-MPK phase-2 schedule
+/// (paper §5): the bulk `M` is promoted all the way to `p_m`, while each
+/// boundary class `I_k` stops at power `k` (its dependencies on the halo
+/// make higher powers impossible before the phase-3 exchanges).
+///
+/// A capped schedule is feasible iff `cap[g] <= cap[h] + 1` for every
+/// dependency group `h` — which holds by construction for boundary-distance
+/// caps (`cap = distance`).
+pub fn wavefront_capped(
+    groups: &LevelGroups,
+    n_levels: usize,
+    p_m: usize,
+    caps: &[usize],
+) -> Vec<Step> {
+    let n_groups = groups.n_groups();
+    assert_eq!(caps.len(), n_groups);
+    if n_groups == 0 || p_m == 0 {
+        return Vec::new();
+    }
+    let _ = n_levels;
+
+    // Super-nodes: consecutive groups sharing one level_span (the sub-blocks
+    // of a split level), or a single merged/solo group. The super-node chain
+    // has exact ±1 dependencies — sub-blocks of level l depend on levels
+    // {l−1, l, l+1}, i.e. super-nodes {i−1, i, i+1}; merged groups likewise —
+    // so the classic diagonal traversal is correct by construction and
+    // re-touches a node after p_m + 1 steps.
+    let mut nodes: Vec<(usize, usize)> = Vec::new(); // group index range
+    let mut node_cap: Vec<usize> = Vec::new();
+    let mut g = 0usize;
+    while g < n_groups {
+        let span = groups.level_span[g];
+        let mut h = g + 1;
+        while h < n_groups && groups.level_span[h] == span {
+            debug_assert_eq!(caps[h], caps[g], "sub-blocks must share a cap");
+            h += 1;
+        }
+        nodes.push((g, h));
+        node_cap.push(caps[g]);
+        g = h;
+    }
+
+    let n_nodes = nodes.len();
+    let total: usize = caps.iter().sum();
+    let mut steps = Vec::with_capacity(total);
+    // diagonal d = node + p, bottom-right to top-left (descending node)
+    for d in 1..=(n_nodes - 1 + p_m) {
+        let hi = (d - 1).min(n_nodes - 1);
+        for ni in (0..=hi).rev() {
+            let p = d - ni;
+            if p < 1 || p > node_cap[ni] {
+                continue;
+            }
+            for g in nodes[ni].0..nodes[ni].1 {
+                steps.push(Step { group: g, power: p });
+            }
+        }
+    }
+    debug_assert_eq!(steps.len(), total);
+    steps
+}
+
+/// Validate that a step order never violates dependencies (test harness for
+/// the scheduler and for alternative orders).
+pub fn validate_schedule(
+    groups: &LevelGroups,
+    n_levels: usize,
+    p_m: usize,
+    steps: &[Step],
+) -> Result<(), String> {
+    let n_groups = groups.n_groups();
+    let mut gl_lo = vec![usize::MAX; n_levels];
+    let mut gl_hi = vec![0usize; n_levels];
+    for (g, &(lo, hi)) in groups.level_span.iter().enumerate() {
+        for l in lo..hi {
+            gl_lo[l] = gl_lo[l].min(g);
+            gl_hi[l] = gl_hi[l].max(g);
+        }
+    }
+    let mut pow = vec![0usize; n_groups];
+    for (i, s) in steps.iter().enumerate() {
+        if s.power != pow[s.group] + 1 {
+            return Err(format!(
+                "step {i}: group {} jumps from power {} to {}",
+                s.group, pow[s.group], s.power
+            ));
+        }
+        let (lo, hi) = groups.level_span[s.group];
+        let dep_lo = lo.saturating_sub(1);
+        let dep_hi = (hi + 1).min(n_levels);
+        for l in dep_lo..dep_hi {
+            for h in gl_lo[l]..=gl_hi[l] {
+                if h != s.group && pow[h] < s.power - 1 {
+                    return Err(format!(
+                        "step {i}: group {} at power {} needs group {h} >= {}",
+                        s.group,
+                        s.power,
+                        s.power - 1
+                    ));
+                }
+            }
+        }
+        pow[s.group] = s.power;
+    }
+    if pow.iter().any(|&p| p != p_m) {
+        return Err("schedule incomplete".into());
+    }
+    Ok(())
+}
+
+/// Maximum reuse distance (in steps) between consecutive touches of the same
+/// group — the cache-blocking quality metric (paper: `p_m + 1` for the ideal
+/// diagonal traversal away from wind-up/wind-down).
+pub fn max_reuse_distance(steps: &[Step], n_groups: usize) -> usize {
+    let mut last = vec![usize::MAX; n_groups];
+    let mut worst = 0usize;
+    for (i, s) in steps.iter().enumerate() {
+        if last[s.group] != usize::MAX {
+            worst = worst.max(i - last[s.group]);
+        }
+        last[s.group] = i;
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::levels::bfs_reorder;
+    use crate::matrix::gen;
+    use crate::race::group_levels;
+
+    fn setup(nx: usize, p_m: usize, cache: usize) -> (LevelGroups, usize, Vec<Step>) {
+        let a = gen::stencil_2d_5pt(nx, nx);
+        let (b, lv) = bfs_reorder(&a, 0);
+        let g = group_levels(&b, &lv, p_m, cache, 50);
+        let s = wavefront(&g, lv.n_levels(), p_m);
+        (g, lv.n_levels(), s)
+    }
+
+    #[test]
+    fn schedule_is_complete_and_valid() {
+        let (g, nl, s) = setup(24, 4, 64 << 10);
+        assert_eq!(s.len(), g.n_groups() * 4);
+        validate_schedule(&g, nl, 4, &s).unwrap();
+    }
+
+    #[test]
+    fn one_level_per_group_reuse_is_pm_plus_one() {
+        // Whole-level groups with generous level count: interior groups are
+        // re-touched exactly p_m + 1 steps later (paper §3).
+        let a = gen::tridiag(64); // 64 single-row levels
+        let (b, lv) = bfs_reorder(&a, 0);
+        // tiny budget => one level per group
+        let g = group_levels(&b, &lv, 3, 1, 50);
+        assert_eq!(g.n_groups(), 64);
+        let s = wavefront(&g, lv.n_levels(), 3);
+        validate_schedule(&g, lv.n_levels(), 3, &s).unwrap();
+        assert_eq!(max_reuse_distance(&s, 64), 3 + 1);
+    }
+
+    #[test]
+    fn figure2_execution_order() {
+        // Paper Fig. 2: 10 levels, p_m = 5; first steps along diagonals:
+        // (L0,p1) then (L1,p1),(L0,p2), then (L2,p1),(L1,p2),(L0,p3) ...
+        let a = gen::tridiag(10);
+        let (b, lv) = bfs_reorder(&a, 0);
+        let g = group_levels(&b, &lv, 5, 1, 50);
+        let s = wavefront(&g, 10, 5);
+        validate_schedule(&g, 10, 5, &s).unwrap();
+        assert_eq!(&s[..6], &[
+            Step { group: 0, power: 1 },
+            Step { group: 1, power: 1 },
+            Step { group: 0, power: 2 },
+            Step { group: 2, power: 1 },
+            Step { group: 1, power: 2 },
+            Step { group: 0, power: 3 },
+        ]);
+    }
+
+    #[test]
+    fn split_levels_still_schedule_correctly() {
+        let (g, nl, s) = setup(48, 3, 2 << 10); // forces sub-block splits
+        validate_schedule(&g, nl, 3, &s).unwrap();
+    }
+
+    #[test]
+    fn validate_catches_bad_order() {
+        let (g, nl, mut s) = setup(16, 2, 32 << 10);
+        let last = s.len() - 1;
+        s.swap(0, last);
+        assert!(validate_schedule(&g, nl, 2, &s).is_err());
+    }
+
+    #[test]
+    fn single_group_runs_powers_in_order() {
+        let a = gen::stencil_2d_5pt(8, 8);
+        let (b, lv) = bfs_reorder(&a, 0);
+        let g = group_levels(&b, &lv, 4, usize::MAX / 8, 50);
+        let s = wavefront(&g, lv.n_levels(), 4);
+        assert_eq!(s.len(), 4);
+        for (i, st) in s.iter().enumerate() {
+            assert_eq!(st.power, i + 1);
+        }
+    }
+}

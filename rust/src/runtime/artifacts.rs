@@ -1,0 +1,128 @@
+//! `artifacts/manifest.json` parsing: the contract between the AOT exporter
+//! and the rust runtime (operand shapes, dtypes, entry kinds).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// `(vals f64[R,W], cols i32[R,W], x f64[N]) -> (y f64[R],)`
+    Spmv,
+    /// `(vals, cols, x) -> (ys f64[p_m, R],)`
+    Mpk,
+    /// `(vals, cols, v_re, v_im, vp_re, vp_im) -> (vn_re, vn_im)`
+    ChebStep,
+    /// `(a f64[], b f64[], x f64[N], y f64[N]) -> (z f64[N],)`
+    Axpby,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "spmv" => Self::Spmv,
+            "mpk" => Self::Mpk,
+            "cheb_step" => Self::ChebStep,
+            "axpby" => Self::Axpby,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub rows: usize,
+    pub width: usize,
+    pub xlen: usize,
+    pub p_m: usize,
+    pub path: PathBuf,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("read {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("parse manifest.json")?;
+        let obj = j.as_obj().context("manifest must be an object")?;
+        let mut entries = BTreeMap::new();
+        for (name, meta) in obj {
+            let kind = ArtifactKind::parse(
+                meta.get("kind").and_then(|k| k.as_str()).context("missing kind")?,
+            )?;
+            let get = |k: &str| meta.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+            let file = meta
+                .get("file")
+                .and_then(|f| f.as_str())
+                .with_context(|| format!("artifact {name} missing file"))?;
+            entries.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    kind,
+                    rows: get("rows"),
+                    width: get("width"),
+                    xlen: get("xlen"),
+                    p_m: get("p_m"),
+                    path: dir.join(file),
+                },
+            );
+        }
+        Ok(Self { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Find an artifact by kind + exact shape.
+    pub fn find(&self, kind: ArtifactKind, rows: usize, width: usize, xlen: usize) -> Option<&ArtifactMeta> {
+        self.entries
+            .values()
+            .find(|m| m.kind == kind && m.rows == rows && m.width == width && m.xlen == xlen)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "and32_spmv_32768x7": {"kind": "spmv", "rows": 32768, "width": 7,
+                              "xlen": 32768, "file": "a.hlo.txt", "chars": 10},
+      "axpby_32768": {"kind": "axpby", "xlen": 32768, "file": "b.hlo.txt"}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/arts"), SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let a = &m.entries["and32_spmv_32768x7"];
+        assert_eq!(a.kind, ArtifactKind::Spmv);
+        assert_eq!((a.rows, a.width, a.xlen), (32768, 7, 32768));
+        assert!(a.path.ends_with("a.hlo.txt"));
+    }
+
+    #[test]
+    fn find_by_shape() {
+        let m = Manifest::parse(Path::new("/x"), SAMPLE).unwrap();
+        assert!(m.find(ArtifactKind::Spmv, 32768, 7, 32768).is_some());
+        assert!(m.find(ArtifactKind::Spmv, 1, 7, 32768).is_none());
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        let bad = r#"{"x": {"kind": "frobnicate", "file": "f"}}"#;
+        assert!(Manifest::parse(Path::new("/x"), bad).is_err());
+    }
+}

@@ -1,0 +1,102 @@
+//! XLA-backed SpMV: route matrix chunks through the AOT Pallas kernel.
+//!
+//! This is the three-layer composition proof: the ELL chunk built in rust is
+//! executed by the Pallas `spmv_ell` kernel (Layer 1) inside the jax-lowered
+//! HLO (Layer 2) on the PJRT CPU client, driven from the rust coordinator
+//! (Layer 3). Used by `examples/quickstart.rs` and the end-to-end Chebyshev
+//! driver; the criterion-style benches use the native backend because
+//! interpret-mode Pallas timings are not meaningful (DESIGN.md §Backends).
+
+use anyhow::{Context, Result};
+
+use crate::matrix::EllChunk;
+
+use super::artifacts::ArtifactKind;
+use super::client::{lit_f64, lit_i32, vec_f64, Runtime};
+
+/// Executes whole-chunk SpMVs through a fixed-shape AOT artifact.
+pub struct XlaSpmv<'rt> {
+    rt: &'rt Runtime,
+    artifact: String,
+    rows: usize,
+    width: usize,
+    xlen: usize,
+}
+
+impl<'rt> XlaSpmv<'rt> {
+    /// Pick the artifact matching the chunk shape.
+    pub fn new(rt: &'rt Runtime, rows: usize, width: usize, xlen: usize) -> Result<Self> {
+        let meta = rt
+            .manifest()
+            .find(ArtifactKind::Spmv, rows, width, xlen)
+            .with_context(|| {
+                format!("no spmv artifact for rows={rows} width={width} xlen={xlen}; re-run `make artifacts` with --spmv rows={rows},width={width},xlen={xlen}")
+            })?;
+        Ok(Self {
+            rt,
+            artifact: meta.name.clone(),
+            rows,
+            width,
+            xlen,
+        })
+    }
+
+    /// `y = A x` with `A` as a padded ELL chunk (shape must match).
+    pub fn spmv(&self, ell: &EllChunk, x: &[f64]) -> Result<Vec<f64>> {
+        anyhow::ensure!(ell.rows == self.rows && ell.width == self.width, "chunk shape mismatch");
+        anyhow::ensure!(x.len() == self.xlen, "x length mismatch");
+        let vals = lit_f64(&ell.vals, &[self.rows as i64, self.width as i64])?;
+        let cols = lit_i32(&ell.cols, &[self.rows as i64, self.width as i64])?;
+        let xl = lit_f64(x, &[self.xlen as i64])?;
+        let out = self.rt.execute(&self.artifact, &[vals, cols, xl])?;
+        let mut y = vec_f64(&out[0])?;
+        y.truncate(ell.rows_valid);
+        Ok(y)
+    }
+}
+
+/// Executes the fused Chebyshev recurrence step artifact.
+pub struct XlaChebStep<'rt> {
+    rt: &'rt Runtime,
+    artifact: String,
+    pub rows: usize,
+    pub width: usize,
+    pub xlen: usize,
+}
+
+impl<'rt> XlaChebStep<'rt> {
+    pub fn new(rt: &'rt Runtime, rows: usize, width: usize, xlen: usize) -> Result<Self> {
+        let meta = rt
+            .manifest()
+            .find(ArtifactKind::ChebStep, rows, width, xlen)
+            .with_context(|| format!("no cheb_step artifact for {rows}x{width}, xlen {xlen}"))?;
+        Ok(Self { rt, artifact: meta.name.clone(), rows, width, xlen })
+    }
+
+    /// `(v_re', v_im') = 2·H(v) − v_prev` on both planes, one PJRT call.
+    pub fn step(
+        &self,
+        ell: &EllChunk,
+        v_re: &[f64],
+        v_im: &[f64],
+        vp_re: &[f64],
+        vp_im: &[f64],
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let dims = [self.rows as i64, self.width as i64];
+        let vals = lit_f64(&ell.vals, &dims)?;
+        let cols = lit_i32(&ell.cols, &dims)?;
+        let n = self.xlen as i64;
+        let out = self.rt.execute(
+            &self.artifact,
+            &[
+                vals,
+                cols,
+                lit_f64(v_re, &[n])?,
+                lit_f64(v_im, &[n])?,
+                lit_f64(vp_re, &[n])?,
+                lit_f64(vp_im, &[n])?,
+            ],
+        )?;
+        Ok((vec_f64(&out[0])?, vec_f64(&out[1])?))
+    }
+}

@@ -1,0 +1,79 @@
+//! PJRT client wrapper: compile HLO-text artifacts once, execute many times.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::{ArtifactMeta, Manifest};
+
+/// A compiled artifact registry on the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create the CPU client and eagerly compile every artifact in `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut exes = HashMap::new();
+        for (name, meta) in &manifest.entries {
+            let proto = xla::HloModuleProto::from_text_file(
+                meta.path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parse HLO text {}", meta.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile artifact {name}"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Self { client, manifest, exes })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.manifest.entries.get(name)
+    }
+
+    /// Execute artifact `name` with literal operands; returns the elements
+    /// of the result tuple.
+    pub fn execute(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.exes.get(name).with_context(|| format!("unknown artifact {name}"))?;
+        let out = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        // artifacts are lowered with return_tuple=True
+        decompose_tuple(out)
+    }
+}
+
+/// Unpack a tuple literal into its elements (1-tuples included).
+fn decompose_tuple(mut lit: xla::Literal) -> Result<Vec<xla::Literal>> {
+    Ok(lit.decompose_tuple()?)
+}
+
+/// Build an f64 literal of shape `dims` from a flat slice.
+pub fn lit_f64(data: &[f64], dims: &[i64]) -> Result<xla::Literal> {
+    let l = xla::Literal::vec1(data);
+    Ok(l.reshape(dims)?)
+}
+
+/// Build an i32 literal of shape `dims`.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let l = xla::Literal::vec1(data);
+    Ok(l.reshape(dims)?)
+}
+
+/// Extract a f64 vector from a literal.
+pub fn vec_f64(lit: &xla::Literal) -> Result<Vec<f64>> {
+    Ok(lit.to_vec::<f64>()?)
+}

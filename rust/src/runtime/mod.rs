@@ -1,0 +1,16 @@
+//! PJRT/XLA runtime: load and execute the AOT artifacts produced by
+//! `python/compile/aot.py` (Layer 2 + Layer 1 lowered to HLO text).
+//!
+//! Python never runs on this path — the artifacts are compiled once at
+//! startup (`HloModuleProto::from_text_file` → `client.compile`) and then
+//! executed with rust-owned buffers. HLO *text* is the interchange format
+//! (jax ≥ 0.5 emits 64-bit-id protos that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids — see /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod backend;
+pub mod client;
+
+pub use artifacts::{ArtifactKind, ArtifactMeta, Manifest};
+pub use backend::XlaSpmv;
+pub use client::Runtime;

@@ -1,0 +1,44 @@
+//! Small dependency-free utilities: seeded RNG, mini JSON parser, formatting.
+
+pub mod json;
+pub mod rng;
+
+/// Format a byte count as a human-readable string (binary units).
+pub fn fmt_bytes(bytes: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Round-to-nearest MiB, matching the paper's Table 4 convention.
+pub fn mib(bytes: usize) -> usize {
+    (bytes + (1 << 19)) >> 20
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert_eq!(fmt_bytes(3 << 20), "3.0 MiB");
+    }
+
+    #[test]
+    fn mib_rounds_to_nearest() {
+        assert_eq!(mib(1 << 20), 1);
+        assert_eq!(mib((1 << 20) + (1 << 19)), 2); // 1.5 MiB rounds up
+        assert_eq!(mib(100), 0);
+    }
+}

@@ -1,0 +1,136 @@
+//! Cross-variant equivalence on structured matrices (the paper's validation
+//! contract: all MPK variants compute identical powers; DLB adds no
+//! communication and no redundant flops).
+
+use dlb_mpk::distsim::DistMatrix;
+use dlb_mpk::matrix::anderson::{anderson, AndersonConfig};
+use dlb_mpk::matrix::gen;
+use dlb_mpk::mpk::dlb::{self, DlbOptions, Recurrence};
+use dlb_mpk::mpk::trad::trad_recurrence;
+use dlb_mpk::mpk::{ca, trad_mpk, NativeBackend};
+use dlb_mpk::partition::{partition, Method};
+
+fn assert_close(a: &[Vec<f64>], b: &[Vec<f64>], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: power count");
+    for (p, (u, v)) in a.iter().zip(b).enumerate() {
+        for (r, (x, y)) in u.iter().zip(v).enumerate() {
+            assert!(
+                (x - y).abs() < 1e-9 * (1.0 + y.abs()),
+                "{tag}: power {} row {r}: {x} vs {y}",
+                p + 1
+            );
+        }
+    }
+}
+
+#[test]
+fn all_variants_all_partitioners_stencil() {
+    let a = gen::stencil_2d_5pt(20, 17);
+    let x: Vec<f64> = (0..a.n_rows()).map(|i| ((i % 13) as f64 - 6.0) / 7.0).collect();
+    for method in [Method::Block, Method::GreedyGrow, Method::RecursiveBisect] {
+        for np in [1, 2, 5] {
+            let part = partition(&a, np, method);
+            let d = DistMatrix::build(&a, &part);
+            let p_m = 4;
+            let want = trad_mpk(&d, &x, p_m, &mut NativeBackend);
+            let dlb_out = dlb::dlb_mpk(
+                &d, &x, p_m,
+                &DlbOptions { cache_bytes: 4 << 10, s_m: 20 },
+                &mut NativeBackend,
+            );
+            let ca_out = ca::ca_mpk_with(&a, &d, &x, p_m);
+            let tag = format!("{method:?}/np={np}");
+            assert_close(&dlb_out.result.powers, &want.powers, &tag);
+            assert_close(&ca_out.result.powers, &want.powers, &tag);
+            assert_eq!(dlb_out.result.comm.bytes, want.comm.bytes, "{tag}: comm");
+            assert_eq!(dlb_out.result.flop_nnz, want.flop_nnz, "{tag}: flops");
+        }
+    }
+}
+
+#[test]
+fn anderson_aniso_high_power() {
+    let cfg = AndersonConfig { lx: 24, ly: 6, lz: 6, w: 2.0, t: 1.0, t_perp: 0.01, seed: 3 };
+    let mut h = anderson(&cfg);
+    h.scale(1.0 / h.inf_norm()); // keep powers bounded at p_m = 10
+    let x: Vec<f64> = (0..h.n_rows()).map(|i| (i as f64 * 0.1).sin()).collect();
+    let part = partition(&h, 6, Method::RecursiveBisect);
+    let d = DistMatrix::build(&h, &part);
+    let p_m = 10;
+    let want = trad_mpk(&d, &x, p_m, &mut NativeBackend);
+    let got = dlb::dlb_mpk(&d, &x, p_m, &DlbOptions { cache_bytes: 8 << 10, s_m: 50 }, &mut NativeBackend);
+    assert_close(&got.result.powers, &want.powers, "anderson p10");
+}
+
+#[test]
+fn chebyshev_recurrence_dlb_equals_trad() {
+    let a = gen::random_banded_sym(400, 10, 30, 8);
+    let x: Vec<f64> = (0..400).map(|i| ((i * 31 % 97) as f64) / 97.0).collect();
+    let xm1: Vec<f64> = (0..400).map(|i| ((i * 17 % 89) as f64) / 89.0).collect();
+    for np in [1, 3] {
+        let part = partition(&a, np, Method::Block);
+        let d = DistMatrix::build(&a, &part);
+        let p_m = 5;
+        let want = trad_recurrence(&d, &x, Some(&xm1), p_m, Recurrence::Chebyshev, &mut NativeBackend);
+        let plan = dlb::plan(&d, p_m, &DlbOptions { cache_bytes: 2 << 10, s_m: 50 });
+        let got = dlb::execute_recurrence(&plan, &x, Some(&xm1), Recurrence::Chebyshev, &mut NativeBackend);
+        assert_close(&got.powers, &want.powers, &format!("cheb np={np}"));
+        assert_eq!(got.comm.bytes, want.comm.bytes);
+    }
+}
+
+#[test]
+fn chebyshev_windup_without_vm1() {
+    let a = gen::tridiag(100);
+    let x: Vec<f64> = (0..100).map(|i| i as f64 / 100.0).collect();
+    let part = partition(&a, 2, Method::Block);
+    let d = DistMatrix::build(&a, &part);
+    let want = trad_recurrence(&d, &x, None, 3, Recurrence::Chebyshev, &mut NativeBackend);
+    let plan = dlb::plan(&d, 3, &DlbOptions { cache_bytes: 1, s_m: 50 });
+    let got = dlb::execute_recurrence(&plan, &x, None, Recurrence::Chebyshev, &mut NativeBackend);
+    assert_close(&got.powers, &want.powers, "windup");
+    // wind-up step 1 is plain SpMV: y1 = A x
+    let mut y1 = vec![0.0; 100];
+    a.spmv(&x, &mut y1);
+    for (u, v) in got.powers[0].iter().zip(&y1) {
+        assert!((u - v).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn disconnected_matrix_all_variants() {
+    // two disjoint stencil blocks — exercises BFS restarts and empty halos
+    let b1 = gen::stencil_2d_5pt(8, 8);
+    let mut coo = dlb_mpk::matrix::CooMatrix::new(128, 128);
+    for r in 0..64 {
+        for (c, v) in b1.row_cols(r).iter().zip(b1.row_vals(r)) {
+            coo.push(r, *c as usize, *v);
+            coo.push(r + 64, *c as usize + 64, *v);
+        }
+    }
+    let a = coo.to_csr();
+    let x = vec![1.0; 128];
+    for np in [1, 2, 3] {
+        let part = partition(&a, np, Method::GreedyGrow);
+        let d = DistMatrix::build(&a, &part);
+        let want = trad_mpk(&d, &x, 3, &mut NativeBackend);
+        let got = dlb::dlb_mpk(&d, &x, 3, &DlbOptions { cache_bytes: 1 << 10, s_m: 50 }, &mut NativeBackend);
+        assert_close(&got.result.powers, &want.powers, &format!("disconnected np={np}"));
+    }
+}
+
+#[test]
+fn pm_one_degenerates_to_single_spmv() {
+    let a = gen::stencil_2d_5pt(10, 10);
+    let x = vec![1.0; 100];
+    let part = partition(&a, 4, Method::Block);
+    let d = DistMatrix::build(&a, &part);
+    let want = trad_mpk(&d, &x, 1, &mut NativeBackend);
+    let got = dlb::dlb_mpk(&d, &x, 1, &DlbOptions::default(), &mut NativeBackend);
+    assert_close(&got.result.powers, &want.powers, "pm=1");
+    let mut y = vec![0.0; 100];
+    a.spmv(&x, &mut y);
+    for (u, v) in got.result.powers[0].iter().zip(&y) {
+        assert!((u - v).abs() < 1e-12);
+    }
+}

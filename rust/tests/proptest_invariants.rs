@@ -1,0 +1,211 @@
+//! Property-based invariant tests (seeded-random sweeps; proptest itself is
+//! unavailable offline, so this uses the crate's own RNG with many cases —
+//! same coverage philosophy: random structures, checked invariants).
+
+use dlb_mpk::distsim::DistMatrix;
+use dlb_mpk::graph::levels::bfs_reorder;
+use dlb_mpk::graph::Levels;
+use dlb_mpk::matrix::{gen, CooMatrix, CsrMatrix};
+use dlb_mpk::mpk::dlb::{self, DlbOptions};
+use dlb_mpk::mpk::{ca, trad_mpk, NativeBackend};
+use dlb_mpk::partition::{partition, Method, PartitionStats};
+use dlb_mpk::race::schedule::{validate_schedule, wavefront};
+use dlb_mpk::race::group_levels;
+use dlb_mpk::util::rng::Rng;
+
+/// Random connected-ish symmetric matrix with given size bounds.
+fn random_matrix(rng: &mut Rng) -> CsrMatrix {
+    let n = rng.range(8, 200);
+    let extra = rng.range(0, 4 * n);
+    let mut coo = CooMatrix::new(n, n);
+    for i in 0..n {
+        coo.push(i, i, 2.0 + rng.f64());
+        if i + 1 < n {
+            // chain keeps the graph connected
+            let v = -rng.f64();
+            coo.push(i, i + 1, v);
+            coo.push(i + 1, i, v);
+        }
+    }
+    for _ in 0..extra {
+        let a = rng.below(n);
+        let b = rng.below(n);
+        if a != b {
+            let v = rng.range_f64(-0.5, 0.5);
+            coo.push(a, b, v);
+            coo.push(b, a, v);
+        }
+    }
+    coo.to_csr()
+}
+
+#[test]
+fn prop_bfs_levels_satisfy_invariant() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..60 {
+        let a = random_matrix(&mut rng);
+        let root = rng.below(a.n_rows());
+        let (b, lv) = bfs_reorder(&a, root);
+        lv.validate(&b).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        // permutation bijective
+        let mut seen = vec![false; a.n_rows()];
+        for &p in &lv.perm {
+            assert!(!seen[p], "case {case}: duplicate perm entry");
+            seen[p] = true;
+        }
+        // levels tile the rows
+        assert_eq!(*lv.level_ptr.last().unwrap(), a.n_rows());
+    }
+}
+
+#[test]
+fn prop_wavefront_schedules_valid_for_random_budgets() {
+    let mut rng = Rng::new(0xCAFE);
+    for case in 0..40 {
+        let a = random_matrix(&mut rng);
+        let (b, lv) = bfs_reorder(&a, 0);
+        let p_m = rng.range(1, 7);
+        let budget = rng.range(1, b.crs_bytes() + 1);
+        let s_m = rng.range(1, 80);
+        let g = group_levels(&b, &lv, p_m, budget, s_m);
+        g.validate(b.n_rows()).unwrap();
+        let s = wavefront(&g, lv.n_levels(), p_m);
+        validate_schedule(&g, lv.n_levels(), p_m, &s)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+    }
+}
+
+#[test]
+fn prop_partitions_cover_and_stats_consistent() {
+    let mut rng = Rng::new(0xD00D);
+    for case in 0..40 {
+        let a = random_matrix(&mut rng);
+        let np = rng.range(1, a.n_rows().min(9));
+        let method = [Method::Block, Method::GreedyGrow, Method::RecursiveBisect][rng.below(3)];
+        let p = partition(&a, np, method);
+        p.validate(a.n_rows()).unwrap_or_else(|e| panic!("case {case} {method:?}: {e}"));
+        let st = PartitionStats::compute(&a, &p);
+        // halo never exceeds edgecut (distinct columns <= cut entries)
+        assert!(st.halo_elements <= st.edgecut.max(1), "case {case}");
+        // O_MPI consistent with DistMatrix
+        let d = DistMatrix::build(&a, &p);
+        assert_eq!(d.total_halo(), st.halo_elements, "case {case}");
+    }
+}
+
+#[test]
+fn prop_three_variants_agree_everywhere() {
+    let mut rng = Rng::new(0xF00D);
+    for case in 0..25 {
+        let a = random_matrix(&mut rng);
+        let np = rng.range(1, a.n_rows().min(7));
+        let p_m = rng.range(1, 6);
+        let cache = rng.range(1, 1 << 16);
+        let part = partition(&a, np, Method::GreedyGrow);
+        let d = DistMatrix::build(&a, &part);
+        let x: Vec<f64> = (0..a.n_rows()).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+
+        let want = trad_mpk(&d, &x, p_m, &mut NativeBackend);
+        let got_dlb = dlb::dlb_mpk(
+            &d,
+            &x,
+            p_m,
+            &DlbOptions { cache_bytes: cache, s_m: 50 },
+            &mut NativeBackend,
+        );
+        let got_ca = ca::ca_mpk_with(&a, &d, &x, p_m);
+
+        for (label, got) in [("dlb", &got_dlb.result), ("ca", &got_ca.result)] {
+            for (p, (gp, wp)) in got.powers.iter().zip(&want.powers).enumerate() {
+                for (r, (u, v)) in gp.iter().zip(wp).enumerate() {
+                    assert!(
+                        (u - v).abs() < 1e-9 * (1.0 + v.abs()),
+                        "case {case} {label} np={np} p_m={p_m} power={} row={r}: {u} vs {v}",
+                        p + 1
+                    );
+                }
+            }
+        }
+        // DLB: identical comm + flops as TRAD
+        assert_eq!(got_dlb.result.comm.bytes, want.comm.bytes, "case {case}");
+        assert_eq!(got_dlb.result.flop_nnz, want.flop_nnz, "case {case}");
+        // CA: never less work, never more rounds
+        assert!(got_ca.result.flop_nnz >= want.flop_nnz, "case {case}");
+        assert!(got_ca.result.comm.rounds <= 1, "case {case}");
+    }
+}
+
+#[test]
+fn prop_dlb_overheads_bounded() {
+    let mut rng = Rng::new(0xAB);
+    for _ in 0..20 {
+        let a = random_matrix(&mut rng);
+        let np = rng.range(1, a.n_rows().min(6));
+        let p_m = rng.range(1, 8);
+        let part = partition(&a, np, Method::RecursiveBisect);
+        let d = DistMatrix::build(&a, &part);
+        let o = dlb_mpk::mpk::overheads::dlb_overhead(
+            &d,
+            p_m,
+            &DlbOptions { cache_bytes: 1 << 14, s_m: 50 },
+        );
+        assert!((0.0..=1.0).contains(&o), "O_DLB = {o}");
+        if np == 1 {
+            assert_eq!(o, 0.0);
+        }
+    }
+}
+
+#[test]
+fn prop_ell_spmv_matches_csr() {
+    let mut rng = Rng::new(0x7777);
+    for _ in 0..30 {
+        let a = random_matrix(&mut rng);
+        let align = [1usize, 8, 64, 256][rng.below(4)];
+        let ell = dlb_mpk::matrix::EllChunk::from_csr(&a, align);
+        let x: Vec<f64> = (0..a.n_rows()).map(|_| rng.normal()).collect();
+        let mut y1 = vec![0.0; a.n_rows()];
+        let mut y2 = vec![0.0; a.n_rows()];
+        a.spmv(&x, &mut y1);
+        ell.spmv(&x, &mut y2);
+        for (u, v) in y1.iter().zip(&y2) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+}
+
+#[test]
+fn prop_levels_from_level_of_is_stable_sort() {
+    let mut rng = Rng::new(0x51);
+    for _ in 0..30 {
+        let n = rng.range(1, 300);
+        let n_levels = rng.range(1, 12);
+        let level_of: Vec<u32> = (0..n).map(|_| rng.below(n_levels) as u32).collect();
+        let lv = Levels::from_level_of(&level_of, n_levels);
+        // stability: within a level, original order preserved
+        for l in 0..n_levels {
+            let rows: Vec<usize> = lv.rows(l).map(|r| lv.perm[r]).collect();
+            let mut sorted = rows.clone();
+            sorted.sort_unstable();
+            assert_eq!(rows, sorted);
+            for &r in &rows {
+                assert_eq!(level_of[r] as usize, l);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_mm_roundtrip_random() {
+    let mut rng = Rng::new(0x99);
+    let dir = std::env::temp_dir().join("dlbmpk_prop_mm");
+    std::fs::create_dir_all(&dir).unwrap();
+    for case in 0..10 {
+        let a = random_matrix(&mut rng);
+        let p = dir.join(format!("m{case}.mtx"));
+        dlb_mpk::matrix::mm::write_matrix_market(&a, &p).unwrap();
+        let b = dlb_mpk::matrix::mm::read_matrix_market(&p).unwrap();
+        assert_eq!(a, b, "case {case}");
+    }
+    let _ = gen::tridiag(2);
+}

@@ -1,0 +1,72 @@
+//! Integration: the three-layer composition — rust-built ELL chunks executed
+//! by the AOT Pallas/JAX artifacts via PJRT, validated against the native
+//! CRS reference. Requires `make artifacts` (skips otherwise).
+
+use std::path::Path;
+
+use dlb_mpk::matrix::{gen, EllChunk};
+use dlb_mpk::runtime::backend::XlaChebStep;
+use dlb_mpk::runtime::{Runtime, XlaSpmv};
+use dlb_mpk::util::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let d = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    d.join("manifest.json").exists().then_some(d)
+}
+
+#[test]
+fn xla_spmv_matches_native_on_demo_stencil() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::load(&dir).expect("load runtime");
+    assert_eq!(rt.platform(), "cpu");
+
+    // demo artifact: 4096 rows, width 5, xlen 4096 = 64x64 5pt stencil
+    let a = gen::stencil_2d_5pt(64, 64);
+    let ell = EllChunk::from_csr_rows(&a, 0, a.n_rows(), 256, 5);
+    assert_eq!((ell.rows, ell.width), (4096, 5));
+    let xla = XlaSpmv::new(&rt, 4096, 5, 4096).unwrap();
+
+    let mut rng = Rng::new(42);
+    for _ in 0..3 {
+        let x: Vec<f64> = (0..4096).map(|_| rng.normal()).collect();
+        let got = xla.spmv(&ell, &x).unwrap();
+        let mut want = vec![0.0; 4096];
+        a.spmv(&x, &mut want);
+        for (u, v) in got.iter().zip(&want) {
+            assert!((u - v).abs() < 1e-12, "{u} vs {v}");
+        }
+    }
+}
+
+#[test]
+fn xla_cheb_step_matches_native() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::load(&dir).expect("load runtime");
+    // anderson 32^3 artifact
+    let cfg = dlb_mpk::matrix::anderson::AndersonConfig::isotropic(32, 1.0, 7);
+    let h = dlb_mpk::matrix::anderson::anderson(&cfg);
+    let n = h.n_rows();
+    let ell = EllChunk::from_csr_rows(&h, 0, n, 256, 7);
+    assert_eq!((ell.rows, ell.width), (32768, 7));
+    let step = XlaChebStep::new(&rt, n, 7, n).unwrap();
+
+    let mut rng = Rng::new(3);
+    let mk = |rng: &mut Rng| (0..n).map(|_| rng.normal()).collect::<Vec<f64>>();
+    let (vr, vi, pr, pi) = (mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng));
+    let (gr, gi) = step.step(&ell, &vr, &vi, &pr, &pi).unwrap();
+
+    let mut hr = vec![0.0; n];
+    let mut hi = vec![0.0; n];
+    h.spmv(&vr, &mut hr);
+    h.spmv(&vi, &mut hi);
+    for r in 0..n {
+        assert!((gr[r] - (2.0 * hr[r] - pr[r])).abs() < 1e-11);
+        assert!((gi[r] - (2.0 * hi[r] - pi[r])).abs() < 1e-11);
+    }
+}
