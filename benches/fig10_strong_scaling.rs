@@ -11,9 +11,10 @@
 
 use dlb_mpk::distsim::costmodel::halo_traffic;
 use dlb_mpk::distsim::{CommCostModel, DistMatrix};
+use dlb_mpk::exec;
 use dlb_mpk::matrix::gen;
-use dlb_mpk::mpk::dlb::{self, DlbOptions};
-use dlb_mpk::mpk::{overheads, NativeBackend};
+use dlb_mpk::mpk::dlb::{self, DlbOptions, Recurrence};
+use dlb_mpk::mpk::{overheads, trad_mpk, NativeBackend};
 use dlb_mpk::partition::{partition, Method};
 use dlb_mpk::perf::{median_time, roofline};
 
@@ -79,6 +80,68 @@ fn main() {
             }
         }
     }
+    measured_parallel(&matrices, if fast { vec![1, 2, 4] } else { vec![1, 2, 4, 8] }, reps);
+
     println!("\n(paper Fig. 10: ε ≥ 1 intra-node from added cache; O_MPI identical");
     println!(" for p = 4 and 6; O_DLB larger at p = 6; nlpkkt structure worse)");
+}
+
+/// Measured-parallel mode: true wall-clock of the threaded executor (one
+/// OS thread per rank, real channel halo exchange), TRAD vs DLB over
+/// 1..N threads — no cost model, just elapsed time.
+fn measured_parallel(
+    matrices: &[(&str, dlb_mpk::matrix::CsrMatrix)],
+    ranks: Vec<usize>,
+    reps: usize,
+) {
+    let p_m = 4;
+    for (name, a) in matrices {
+        println!("\n# Measured parallel wall-clock (threads executor), {name}, p_m = {p_m}");
+        println!(
+            "{:>7} {:>12} {:>12} {:>10} {:>10} {:>9}",
+            "threads", "T_trad_s", "T_dlb_s", "S_trad", "S_dlb", "dlb/trad"
+        );
+        let x = vec![1.0; a.n_rows()];
+        let (mut t_trad1, mut t_dlb1) = (0.0f64, 0.0f64);
+        for &np in &ranks {
+            let part = partition(a, np, Method::RecursiveBisect);
+            let dist = DistMatrix::build(a, &part);
+            let opts = DlbOptions { cache_bytes: 8 << 20, s_m: 50 };
+            let plan = dlb::plan(&dist, p_m, &opts);
+            let t_trad = if np == 1 {
+                // single rank: the sequential kernel IS the measured run
+                // (no channel/barrier overhead in the baseline)
+                median_time(reps, || {
+                    trad_mpk(&dist, &x, p_m, &mut NativeBackend);
+                })
+            } else {
+                median_time(reps, || {
+                    exec::trad_threaded(&dist, &x, None, p_m, Recurrence::Power);
+                })
+            };
+            let t_dlb = if np == 1 {
+                median_time(reps, || {
+                    dlb::execute(&plan, &x, &mut NativeBackend);
+                })
+            } else {
+                median_time(reps, || {
+                    exec::dlb_threaded(&plan, &x, None, Recurrence::Power);
+                })
+            };
+            if np == 1 {
+                t_trad1 = t_trad.median_s;
+                t_dlb1 = t_dlb.median_s;
+            }
+            println!(
+                "{np:>7} {:>12.4} {:>12.4} {:>9.2}x {:>9.2}x {:>8.2}x",
+                t_trad.median_s,
+                t_dlb.median_s,
+                t_trad1 / t_trad.median_s,
+                t_dlb1 / t_dlb.median_s,
+                t_trad.median_s / t_dlb.median_s,
+            );
+        }
+    }
+    println!("\n(S_* = wall-clock speed-up over 1 thread; dlb/trad = measured DLB");
+    println!(" advantage at the same thread count — comm overlapped with the wavefront)");
 }

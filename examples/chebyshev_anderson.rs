@@ -53,7 +53,9 @@ fn main() -> anyhow::Result<()> {
 
     // Part 2 — three-layer XLA path on the 32³ isotropic artifact shape.
     let art_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if art_dir.join("manifest.json").exists() {
+    if !cfg!(feature = "xla") {
+        println!("(built without the `xla` feature; skipping XLA path)");
+    } else if art_dir.join("manifest.json").exists() {
         println!("== Three-layer path: cheb_step artifact (Pallas/JAX → PJRT) ==");
         run_xla_path(&art_dir, if fast { 2 } else { 4 })?;
     } else {

@@ -50,7 +50,9 @@ fn main() -> anyhow::Result<()> {
 
     // Three-layer path: the same SpMV through the AOT Pallas kernel on PJRT.
     let art_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if art_dir.join("manifest.json").exists() {
+    if !cfg!(feature = "xla") {
+        println!("(built without the `xla` feature; skipping XLA path)");
+    } else if art_dir.join("manifest.json").exists() {
         let rt = Runtime::load(&art_dir)?;
         let ell = EllChunk::from_csr_rows(&a, 0, a.n_rows(), 256, 5);
         let xla = XlaSpmv::new(&rt, ell.rows, ell.width, a.n_rows())?;

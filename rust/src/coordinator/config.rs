@@ -1,5 +1,6 @@
 //! Run configuration (the paper's tunables in one place).
 
+use crate::exec::ExecutorKind;
 use crate::partition::Method;
 
 /// Which matrix to run on.
@@ -56,6 +57,10 @@ pub struct RunConfig {
     pub reps: usize,
     /// Validate DLB/CA against TRAD.
     pub validate: bool,
+    /// How to execute the kernels: `sim` (sequential counting simulator)
+    /// or `threads`/`threads(n)` (one OS thread per rank, measured
+    /// wall-clock; a nonzero `n` overrides [`RunConfig::n_ranks`]).
+    pub executor: ExecutorKind,
 }
 
 impl Default for RunConfig {
@@ -69,6 +74,7 @@ impl Default for RunConfig {
             s_m: 50,
             reps: 5,
             validate: true,
+            executor: ExecutorKind::Sim,
         }
     }
 }

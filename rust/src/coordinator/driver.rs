@@ -3,7 +3,8 @@
 use anyhow::Result;
 
 use crate::distsim::DistMatrix;
-use crate::mpk::dlb::{self, DlbOptions};
+use crate::exec::{self, ExecutorKind};
+use crate::mpk::dlb::{self, DlbOptions, Recurrence};
 use crate::mpk::{ca, trad_mpk, MpkResult, NativeBackend};
 use crate::partition::partition;
 use crate::perf::{median_time, roofline};
@@ -20,10 +21,14 @@ pub struct RunOutput {
     pub dlb_overhead: f64,
 }
 
-/// Execute TRAD and DLB (and validate) per `cfg`, timing both.
+/// Execute TRAD and DLB (and validate) per `cfg`, timing both under the
+/// configured executor (`sim` counts exactly; `threads` measures real
+/// parallel wall-clock).
 pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
     let a = cfg.matrix.build()?;
-    let part = partition(&a, cfg.n_ranks, cfg.partitioner);
+    // `threads(n)` with nonzero n sets the rank count directly
+    let n_ranks = cfg.executor.ranks(cfg.n_ranks);
+    let part = partition(&a, n_ranks, cfg.partitioner);
     let dist = DistMatrix::build(&a, &part);
     let x: Vec<f64> = (0..a.n_rows())
         .map(|i| 1.0 + ((i * 2654435761) % 1000) as f64 / 1000.0)
@@ -35,15 +40,24 @@ pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
     let o_mpi = dist.mpi_overhead();
 
     // timed runs
+    let threaded = matches!(cfg.executor, ExecutorKind::Threads { .. });
     let mut trad_out = None;
     let t_trad = median_time(cfg.reps, || {
-        trad_out = Some(trad_mpk(&dist, &x, cfg.p_m, &mut NativeBackend));
+        trad_out = Some(if threaded {
+            exec::trad_threaded(&dist, &x, None, cfg.p_m, Recurrence::Power)
+        } else {
+            trad_mpk(&dist, &x, cfg.p_m, &mut NativeBackend)
+        });
     });
     let trad_res = trad_out.unwrap();
 
     let mut dlb_out = None;
     let t_dlb = median_time(cfg.reps, || {
-        dlb_out = Some(dlb::execute(&plan, &x, &mut NativeBackend));
+        dlb_out = Some(if threaded {
+            exec::dlb_threaded(&plan, &x, None, Recurrence::Power)
+        } else {
+            dlb::execute(&plan, &x, &mut NativeBackend)
+        });
     });
     let dlb_res = dlb_out.unwrap();
 
@@ -53,12 +67,13 @@ pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
         None
     };
 
+    let label = cfg.executor.label();
     let mk = |name: &str, res: &MpkResult, t: crate::perf::Timed, o_dlb: f64, validated| Report {
-        variant: name.to_string(),
+        variant: format!("{name}@{label}"),
         n_rows: a.n_rows(),
         nnz: a.nnz(),
         crs_mib: mib(a.crs_bytes()),
-        n_ranks: cfg.n_ranks,
+        n_ranks,
         p_m: cfg.p_m,
         time: t,
         gflops: roofline::gflops(res.flop_nnz, t.median_s),
@@ -75,32 +90,40 @@ pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
     Ok(RunOutput { reports, trad: trad_res, dlb: dlb_res, dlb_overhead: o_dlb })
 }
 
-/// Also run CA-MPK and report its overheads (used by `fig5` and the CLI).
+/// Also run CA-MPK and report its overheads (used by `fig5` and the CLI),
+/// honoring the configured executor like [`run`] does.
 pub fn run_ca(cfg: &RunConfig) -> Result<(Report, ca::CaOverheads)> {
     let a = cfg.matrix.build()?;
-    let part = partition(&a, cfg.n_ranks, cfg.partitioner);
+    let n_ranks = cfg.executor.ranks(cfg.n_ranks);
+    let part = partition(&a, n_ranks, cfg.partitioner);
     let dist = DistMatrix::build(&a, &part);
     let x: Vec<f64> = (0..a.n_rows()).map(|i| (i % 7) as f64).collect();
+    let overheads = ca::ca_plan(&a, &dist, cfg.p_m).overheads;
+    let threaded = matches!(cfg.executor, ExecutorKind::Threads { .. });
     let mut out = None;
     let t = median_time(cfg.reps, || {
-        out = Some(ca::ca_mpk_with(&a, &dist, &x, cfg.p_m));
+        out = Some(if threaded {
+            exec::ca_threaded(&a, &dist, &x, cfg.p_m)
+        } else {
+            ca::ca_mpk_with(&a, &dist, &x, cfg.p_m).result
+        });
     });
-    let o = out.unwrap();
+    let res = out.unwrap();
     let rep = Report {
-        variant: "ca".into(),
+        variant: format!("ca@{}", cfg.executor.label()),
         n_rows: a.n_rows(),
         nnz: a.nnz(),
         crs_mib: mib(a.crs_bytes()),
-        n_ranks: cfg.n_ranks,
+        n_ranks,
         p_m: cfg.p_m,
         time: t,
-        gflops: roofline::gflops(o.result.flop_nnz, t.median_s),
-        comm: o.result.comm.clone(),
+        gflops: roofline::gflops(res.flop_nnz, t.median_s),
+        comm: res.comm.clone(),
         o_mpi: dist.mpi_overhead(),
         o_dlb: 0.0,
         validated: None,
     };
-    Ok((rep, o.overheads))
+    Ok((rep, overheads))
 }
 
 fn equal(a: &MpkResult, b: &MpkResult) -> bool {
@@ -134,6 +157,42 @@ mod tests {
     }
 
     #[test]
+    fn pipeline_threaded_executor_matches_sim() {
+        let cfg = RunConfig {
+            matrix: MatrixSpec::Stencil2D { nx: 20, ny: 20 },
+            n_ranks: 4,
+            p_m: 3,
+            reps: 1,
+            cache_bytes: 32 << 10,
+            executor: ExecutorKind::Threads { n: 0 },
+            ..Default::default()
+        };
+        let thr = run(&cfg).unwrap();
+        assert_eq!(thr.reports[1].validated, Some(true));
+        assert_eq!(thr.reports[0].variant, "trad@thr");
+        let sim = run(&RunConfig { executor: ExecutorKind::Sim, ..cfg }).unwrap();
+        assert_eq!(thr.trad.powers, sim.trad.powers);
+        assert_eq!(thr.dlb.powers, sim.dlb.powers);
+        assert_eq!(thr.trad.comm, sim.trad.comm);
+        assert_eq!(thr.dlb.comm, sim.dlb.comm);
+    }
+
+    #[test]
+    fn threads_n_overrides_rank_count() {
+        let cfg = RunConfig {
+            matrix: MatrixSpec::Stencil2D { nx: 16, ny: 16 },
+            n_ranks: 1,
+            p_m: 2,
+            reps: 1,
+            executor: ExecutorKind::Threads { n: 3 },
+            ..Default::default()
+        };
+        let out = run(&cfg).unwrap();
+        assert_eq!(out.reports[0].n_ranks, 3);
+        assert_eq!(out.reports[1].validated, Some(true));
+    }
+
+    #[test]
     fn ca_pipeline_reports_overheads() {
         let cfg = RunConfig {
             matrix: MatrixSpec::Stencil2D { nx: 16, ny: 16 },
@@ -143,7 +202,31 @@ mod tests {
             ..Default::default()
         };
         let (rep, ov) = run_ca(&cfg).unwrap();
-        assert_eq!(rep.variant, "ca");
+        assert_eq!(rep.variant, "ca@sim");
         assert!(ov.extra_halo > 0);
+    }
+
+    #[test]
+    fn ca_pipeline_honors_threaded_executor() {
+        let cfg = RunConfig {
+            matrix: MatrixSpec::Stencil2D { nx: 16, ny: 16 },
+            n_ranks: 1,
+            p_m: 3,
+            reps: 1,
+            executor: ExecutorKind::Threads { n: 2 },
+            ..Default::default()
+        };
+        let (rep, ov) = run_ca(&cfg).unwrap();
+        assert_eq!(rep.variant, "ca@thr");
+        assert_eq!(rep.n_ranks, 2);
+        assert!(ov.extra_halo > 0);
+        // same counters as the sequential path on the same partition
+        let (sim_rep, _) = run_ca(&RunConfig {
+            n_ranks: 2,
+            executor: ExecutorKind::Sim,
+            ..cfg
+        })
+        .unwrap();
+        assert_eq!(rep.comm, sim_rep.comm);
     }
 }

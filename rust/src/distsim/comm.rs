@@ -18,11 +18,33 @@ pub struct CommStats {
 }
 
 impl CommStats {
+    /// Accumulate stats of a *subsequent* run (rounds add up). For
+    /// combining the per-rank stats of one run use [`merge_rank_stats`],
+    /// where rounds must agree instead.
     pub fn merge(&mut self, other: &CommStats) {
         self.messages += other.messages;
         self.bytes += other.bytes;
         self.rounds += other.rounds;
     }
+}
+
+/// Merge the per-rank stats of a single run, deterministically: messages
+/// and bytes sum in ascending rank order; the bulk-synchronous `rounds`
+/// counter must agree across ranks (a divergence means an executor bug)
+/// and is taken once.
+pub fn merge_rank_stats(per_rank: &[CommStats]) -> CommStats {
+    let rounds = per_rank.first().map_or(0, |s| s.rounds);
+    let mut out = CommStats { rounds, ..CommStats::default() };
+    for (rank, s) in per_rank.iter().enumerate() {
+        assert_eq!(
+            s.rounds, rounds,
+            "rank {rank} performed {} exchange rounds, rank 0 performed {rounds}",
+            s.rounds
+        );
+        out.messages += s.messages;
+        out.bytes += s.bytes;
+    }
+    out
 }
 
 /// Execute one bulk-synchronous halo exchange over all ranks: for every
@@ -61,6 +83,23 @@ mod tests {
     use crate::distsim::DistMatrix;
     use crate::matrix::gen;
     use crate::partition::{partition, Method};
+
+    #[test]
+    fn merge_rank_stats_sums_and_keeps_rounds() {
+        let a = CommStats { messages: 2, bytes: 64, rounds: 3 };
+        let b = CommStats { messages: 1, bytes: 16, rounds: 3 };
+        let m = merge_rank_stats(&[a, b]);
+        assert_eq!(m, CommStats { messages: 3, bytes: 80, rounds: 3 });
+        assert_eq!(merge_rank_stats(&[]), CommStats::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "exchange rounds")]
+    fn merge_rank_stats_rejects_diverged_rounds() {
+        let a = CommStats { messages: 0, bytes: 0, rounds: 2 };
+        let b = CommStats { messages: 0, bytes: 0, rounds: 3 };
+        merge_rank_stats(&[a, b]);
+    }
 
     #[test]
     fn exchange_fills_halo_with_owner_values() {

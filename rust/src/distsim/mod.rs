@@ -11,13 +11,32 @@
 //! a halo tail appended to its local vectors. Halo slots are grouped by
 //! owner rank (ascending global id within an owner) so each receive is one
 //! contiguous segment — the standard MPI bulk-transfer layout.
+//!
+//! # Executors
+//!
+//! This module defines the *data* side of the distributed runtime (rank
+//! locals, halo plans, byte accounting); [`crate::exec`] defines the
+//! *execution* side. Two executors run the MPK kernels over these plans:
+//!
+//! * **Sim** — the original sequential lockstep loop, now expressed as
+//!   per-rank [`crate::exec::SimComm`] endpoints advanced round-by-round.
+//!   All counting (`CommStats`, halo bytes, rounds) is exact and
+//!   bit-identical to the original [`exchange_halo`] accounting; wall-clock
+//!   is single-threaded and multi-rank timings come from the α-β model.
+//! * **Threads** — one OS thread per rank with real channel messages
+//!   ([`crate::exec::ThreadComm`]); wall-clock is *measured*, and DLB's
+//!   remainder-round sends genuinely overlap its cache-blocked wavefront.
+//!
+//! [`exchange_halo`] remains as the direct all-ranks primitive for tests
+//! and micro-benchmarks; [`merge_rank_stats`] combines per-rank stats
+//! deterministically (asserting the ranks agree on the round count).
 
 pub mod build;
 pub mod comm;
 pub mod costmodel;
 
 pub use build::DistMatrix;
-pub use comm::{exchange_halo, CommStats};
+pub use comm::{exchange_halo, merge_rank_stats, CommStats};
 pub use costmodel::CommCostModel;
 
 /// Per-destination send plan: local row indices whose values this rank

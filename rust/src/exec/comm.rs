@@ -1,0 +1,457 @@
+//! The halo-exchange contract ([`Communicator`]) and its two transports:
+//! [`SimComm`] (sequential lockstep mailboxes — today's counting simulator)
+//! and [`ThreadComm`] (real `std::sync::mpsc` channels, one OS thread per
+//! rank).
+//!
+//! The trait mirrors the nonblocking MPI triple the paper's kernels are
+//! written against: `MPI_Isend` ([`Communicator::send`]), a matching
+//! tagged receive ([`Communicator::recv`], buffering out-of-order
+//! arrivals like an eager-protocol unexpected-message queue), and a round
+//! close ([`Communicator::end_round`], `MPI_Waitall` + barrier). On top of
+//! the primitives sit provided halo helpers that follow each rank's
+//! [`SendPlan`]/[`RecvPlan`]: [`Communicator::post_halo_sends`] and
+//! [`Communicator::wait_halo`]. Kernels that overlap communication with
+//! computation (DLB phase 3) call the post/wait halves separately; bulk-
+//! synchronous kernels use [`Communicator::exchange`].
+//!
+//! ## Accounting
+//!
+//! Statistics are **per rank** and receiver-side: every received message
+//! bumps `messages` once and `bytes` by the payload size, in recv-plan
+//! order; every `end_round` bumps `rounds`. Merging rank stats in
+//! ascending-rank order ([`crate::distsim::merge_rank_stats`]) therefore
+//! reproduces bit-identically the totals of the legacy sequential
+//! [`crate::distsim::exchange_halo`] loop, for both transports.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::distsim::{CommStats, RankLocal};
+
+/// Point-to-point halo communication endpoint of one rank.
+pub trait Communicator: Send {
+    fn rank(&self) -> usize;
+    fn n_ranks(&self) -> usize;
+
+    /// Nonblocking tagged send (the payload is copied out immediately,
+    /// like a buffered `MPI_Isend`).
+    fn send(&mut self, to: usize, tag: u64, payload: Vec<f64>);
+
+    /// Blocking tagged receive; arrivals with other tags are buffered.
+    fn recv(&mut self, from: usize, tag: u64) -> Vec<f64>;
+
+    /// Close one bulk-synchronous exchange round: bumps `rounds` and, on
+    /// threaded transports, synchronizes ranks and asserts the round
+    /// counters agree.
+    fn end_round(&mut self);
+
+    /// Per-rank accumulated statistics.
+    fn stats(&self) -> &CommStats;
+
+    /// Post this rank's halo sends of `x` for round `tag` (one message per
+    /// non-empty [`SendPlan`]).
+    fn post_halo_sends(&mut self, r: &RankLocal, tag: u64, x: &[f64]) {
+        for sp in &r.send {
+            let payload: Vec<f64> = sp.rows.iter().map(|&row| x[row as usize]).collect();
+            self.send(sp.to, tag, payload);
+        }
+    }
+
+    /// Receive every [`RecvPlan`] of round `tag` into the halo tail of `x`,
+    /// then close the round.
+    fn wait_halo(&mut self, r: &RankLocal, tag: u64, x: &mut [f64]) {
+        let nl = r.n_local();
+        for rp in &r.recv {
+            let payload = self.recv(rp.from, tag);
+            debug_assert_eq!(payload.len(), rp.slots.len(), "halo payload length");
+            x[nl + rp.slots.start..nl + rp.slots.end].copy_from_slice(&payload);
+        }
+        self.end_round();
+    }
+
+    /// Blocking bulk-synchronous halo exchange: post + wait.
+    fn exchange(&mut self, r: &RankLocal, tag: u64, x: &mut [f64]) {
+        self.post_halo_sends(r, tag, x);
+        self.wait_halo(r, tag, x);
+    }
+}
+
+fn account_recv(stats: &mut CommStats, len: usize) {
+    stats.messages += 1;
+    stats.bytes += len * std::mem::size_of::<f64>();
+}
+
+// ---------------------------------------------------------------------------
+// SimComm — sequential lockstep transport
+// ---------------------------------------------------------------------------
+
+type SimMailbox = HashMap<(usize, usize, u64), Vec<f64>>;
+
+/// Sequential transport: a shared mailbox keyed by `(from, to, tag)`.
+///
+/// `recv` never blocks — the lockstep executor posts every rank's sends for
+/// a round before any rank waits (see [`lockstep_halo_exchange`]), exactly
+/// like the legacy all-ranks `exchange_halo` loop. A missing message is a
+/// scheduling bug and panics.
+pub struct SimComm {
+    rank: usize,
+    n: usize,
+    mailbox: Arc<Mutex<SimMailbox>>,
+    stats: CommStats,
+}
+
+/// Build connected [`SimComm`] endpoints for `n` ranks.
+pub fn sim_comms(n: usize) -> Vec<SimComm> {
+    let mailbox = Arc::new(Mutex::new(SimMailbox::new()));
+    (0..n)
+        .map(|rank| SimComm { rank, n, mailbox: mailbox.clone(), stats: CommStats::default() })
+        .collect()
+}
+
+impl Communicator for SimComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn n_ranks(&self) -> usize {
+        self.n
+    }
+
+    fn send(&mut self, to: usize, tag: u64, payload: Vec<f64>) {
+        assert!(to < self.n && to != self.rank, "bad destination {to}");
+        let prev = self.mailbox.lock().unwrap().insert((self.rank, to, tag), payload);
+        assert!(prev.is_none(), "duplicate send {} -> {to} tag {tag}", self.rank);
+    }
+
+    fn recv(&mut self, from: usize, tag: u64) -> Vec<f64> {
+        let payload = self
+            .mailbox
+            .lock()
+            .unwrap()
+            .remove(&(from, self.rank, tag))
+            .unwrap_or_else(|| {
+                panic!(
+                    "SimComm: message {from} -> {} tag {tag} not posted; \
+                     the sequential executor must post all sends of a round first",
+                    self.rank
+                )
+            });
+        account_recv(&mut self.stats, payload.len());
+        payload
+    }
+
+    fn end_round(&mut self) {
+        self.stats.rounds += 1;
+    }
+
+    fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+}
+
+/// One lockstep bulk-synchronous halo exchange over all ranks: post every
+/// rank's sends, then complete every rank's receives — the sequential
+/// executor's replacement for the legacy global `exchange_halo`.
+pub fn lockstep_halo_exchange<C: Communicator>(
+    comms: &mut [C],
+    ranks: &[RankLocal],
+    tag: u64,
+    xs: &mut [Vec<f64>],
+) {
+    assert_eq!(comms.len(), ranks.len());
+    assert_eq!(comms.len(), xs.len());
+    for ((c, r), x) in comms.iter_mut().zip(ranks).zip(xs.iter()) {
+        c.post_halo_sends(r, tag, x);
+    }
+    for ((c, r), x) in comms.iter_mut().zip(ranks).zip(xs.iter_mut()) {
+        c.wait_halo(r, tag, x);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ThreadComm — channel transport, one OS thread per rank
+// ---------------------------------------------------------------------------
+
+/// `(from, tag, payload)`.
+type Msg = (usize, u64, Vec<f64>);
+
+/// A dying rank broadcasts this tag so peers blocked in `recv` fail fast
+/// instead of hanging (kernel tags are small round numbers, never this).
+const POISON_TAG: u64 = u64::MAX;
+
+/// Rendezvous barrier with two extras over `std::sync::Barrier`: every
+/// waiter passes its round counter and the barrier asserts all ranks
+/// agree (one lock, no second pass), and a panicking rank can mark itself
+/// dead to wake the waiters — std's barrier has no poisoning, so a
+/// per-rank panic would otherwise turn into a silent hang.
+struct RoundBarrier {
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+    n: usize,
+}
+
+#[derive(Default)]
+struct BarrierState {
+    arrived: usize,
+    generation: u64,
+    /// Round counter of the first arriver this cycle; later arrivers must
+    /// match it.
+    round: usize,
+    dead: usize,
+}
+
+impl RoundBarrier {
+    fn new(n: usize) -> Self {
+        Self { state: Mutex::new(BarrierState::default()), cv: Condvar::new(), n }
+    }
+
+    /// Meet all ranks, asserting everyone arrives with the same `rounds`.
+    fn wait(&self, rounds: usize) {
+        let mut st = self.state.lock().unwrap();
+        assert_eq!(st.dead, 0, "a rank thread died; aborting round barrier");
+        if st.arrived == 0 {
+            st.round = rounds;
+        } else {
+            assert_eq!(
+                rounds, st.round,
+                "round diverged: this rank at {rounds}, first arriver at {}",
+                st.round
+            );
+        }
+        st.arrived += 1;
+        if st.arrived == self.n {
+            st.arrived = 0;
+            st.generation = st.generation.wrapping_add(1);
+            self.cv.notify_all();
+            return;
+        }
+        let gen = st.generation;
+        while st.generation == gen {
+            st = self.cv.wait(st).unwrap();
+            assert_eq!(st.dead, 0, "a rank thread died while waiting at the round barrier");
+        }
+    }
+
+    fn mark_dead(&self) {
+        // Runs from a Drop during panic: must not panic again even if the
+        // mutex was poisoned by the rank that died holding it.
+        let mut st = match self.state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        st.dead += 1;
+        self.cv.notify_all();
+    }
+}
+
+/// Threaded transport: every rank owns one unbounded mpsc receiver; every
+/// peer holds a sender clone to it. Receives match on `(from, tag)` and
+/// buffer everything else, so a fast neighbor may run several rounds ahead
+/// without corrupting this rank's halo. `end_round` is a full barrier that
+/// also asserts the per-rank round counters agree. If a rank thread
+/// panics, its endpoint poisons the barrier and all peers on drop so the
+/// whole run fails loudly instead of deadlocking.
+pub struct ThreadComm {
+    rank: usize,
+    n: usize,
+    /// `txs[peer]`; `None` at `self.rank`.
+    txs: Vec<Option<Sender<Msg>>>,
+    rx: Receiver<Msg>,
+    /// Unexpected-message queue, keyed by `(from, tag)`.
+    pending: HashMap<(usize, u64), Vec<f64>>,
+    stats: CommStats,
+    barrier: Arc<RoundBarrier>,
+}
+
+/// Build connected [`ThreadComm`] endpoints for `n` ranks (move each into
+/// its rank's thread).
+pub fn thread_comms(n: usize) -> Vec<ThreadComm> {
+    let mut txs = Vec::with_capacity(n);
+    let mut rxs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel::<Msg>();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    let barrier = Arc::new(RoundBarrier::new(n));
+    rxs.into_iter()
+        .enumerate()
+        .map(|(rank, rx)| ThreadComm {
+            rank,
+            n,
+            txs: txs
+                .iter()
+                .enumerate()
+                .map(|(p, tx)| (p != rank).then(|| tx.clone()))
+                .collect(),
+            rx,
+            pending: HashMap::new(),
+            stats: CommStats::default(),
+            barrier: barrier.clone(),
+        })
+        .collect()
+}
+
+impl Drop for ThreadComm {
+    fn drop(&mut self) {
+        // A panicking rank must not strand its peers at the barrier or in
+        // a blocking recv — poison both so the failure cascades and the
+        // executor's joins report it.
+        if std::thread::panicking() {
+            self.barrier.mark_dead();
+            for tx in self.txs.iter().flatten() {
+                let _ = tx.send((self.rank, POISON_TAG, Vec::new()));
+            }
+        }
+    }
+}
+
+impl Communicator for ThreadComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn n_ranks(&self) -> usize {
+        self.n
+    }
+
+    fn send(&mut self, to: usize, tag: u64, payload: Vec<f64>) {
+        self.txs[to]
+            .as_ref()
+            .unwrap_or_else(|| panic!("rank {} sending to itself", self.rank))
+            .send((self.rank, tag, payload))
+            .expect("peer rank hung up");
+    }
+
+    fn recv(&mut self, from: usize, tag: u64) -> Vec<f64> {
+        let key = (from, tag);
+        let payload = loop {
+            if let Some(p) = self.pending.remove(&key) {
+                break p;
+            }
+            let (f, t, p) = self.rx.recv().expect("all peer ranks hung up");
+            assert_ne!(t, POISON_TAG, "peer rank {f} died mid-run");
+            let prev = self.pending.insert((f, t), p);
+            assert!(prev.is_none(), "duplicate message {f} -> {} tag {t}", self.rank);
+        };
+        account_recv(&mut self.stats, payload.len());
+        payload
+    }
+
+    fn end_round(&mut self) {
+        self.stats.rounds += 1;
+        self.barrier.wait(self.stats.rounds);
+    }
+
+    fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distsim::{exchange_halo, merge_rank_stats, DistMatrix};
+    use crate::matrix::gen;
+    use crate::partition::{partition, Method};
+
+    fn setup(np: usize) -> (DistMatrix, Vec<Vec<f64>>, Vec<f64>) {
+        let a = gen::stencil_2d_5pt(8, 7);
+        let p = partition(&a, np, Method::Block);
+        let d = DistMatrix::build(&a, &p);
+        let x: Vec<f64> = (0..a.n_rows()).map(|i| 3.0 + i as f64).collect();
+        let xs = d.scatter(&x);
+        (d, xs, x)
+    }
+
+    #[test]
+    fn sim_lockstep_matches_legacy_exchange_bit_for_bit() {
+        let (d, xs0, _) = setup(3);
+
+        let mut xs_old = xs0.clone();
+        let mut st_old = CommStats::default();
+        exchange_halo(&d.ranks, &mut xs_old, &mut st_old);
+        exchange_halo(&d.ranks, &mut xs_old, &mut st_old);
+
+        let mut xs_new = xs0;
+        let mut comms = sim_comms(d.n_ranks());
+        lockstep_halo_exchange(&mut comms, &d.ranks, 0, &mut xs_new);
+        lockstep_halo_exchange(&mut comms, &d.ranks, 1, &mut xs_new);
+
+        assert_eq!(xs_old, xs_new);
+        let per_rank: Vec<CommStats> = comms.iter().map(|c| c.stats().clone()).collect();
+        assert_eq!(merge_rank_stats(&per_rank), st_old);
+    }
+
+    #[test]
+    fn threaded_exchange_fills_halo_with_owner_values() {
+        let (d, xs, x) = setup(4);
+        let comms = thread_comms(d.n_ranks());
+        let filled: Vec<(Vec<f64>, CommStats)> = std::thread::scope(|s| {
+            let joins: Vec<_> = comms
+                .into_iter()
+                .zip(&d.ranks)
+                .zip(xs)
+                .map(|((mut c, r), mut xv)| {
+                    s.spawn(move || {
+                        c.exchange(r, 0, &mut xv);
+                        let st = c.stats().clone();
+                        (xv, st)
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().expect("rank thread panicked")).collect()
+        });
+        for (r, (xv, _)) in d.ranks.iter().zip(&filled) {
+            for (slot, &g) in r.halo_globals.iter().enumerate() {
+                assert_eq!(xv[r.n_local() + slot], x[g], "rank {} slot {slot}", r.rank);
+            }
+        }
+        let per_rank: Vec<CommStats> = filled.iter().map(|(_, s)| s.clone()).collect();
+        let merged = merge_rank_stats(&per_rank);
+        assert_eq!(merged.rounds, 1);
+        assert_eq!(merged.bytes, d.total_halo() * 8);
+    }
+
+    #[test]
+    fn threaded_recv_buffers_rounds_ahead() {
+        // rank 0 sends two rounds before rank 1 receives either.
+        let mut comms = thread_comms(2);
+        let mut c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        let t = std::thread::spawn(move || {
+            c0.send(1, 0, vec![1.0]);
+            c0.send(1, 1, vec![2.0]);
+            c0.end_round();
+            c0.end_round();
+        });
+        // receive out of posting order: tag 1 first
+        assert_eq!(c1.recv(0, 1), vec![2.0]);
+        assert_eq!(c1.recv(0, 0), vec![1.0]);
+        c1.end_round();
+        c1.end_round();
+        t.join().unwrap();
+        assert_eq!(c1.stats().messages, 2);
+        assert_eq!(c1.stats().bytes, 16);
+        assert_eq!(c1.stats().rounds, 2);
+    }
+
+    #[test]
+    fn panicking_rank_fails_peers_instead_of_hanging() {
+        let mut comms = thread_comms(2);
+        let c1 = comms.pop().unwrap();
+        let c0 = comms.pop().unwrap();
+        let t0 = std::thread::spawn(move || {
+            let _guard = c0; // dropped while panicking -> poisons barrier + peers
+            panic!("rank 0 exploded");
+        });
+        let t1 = std::thread::spawn(move || {
+            let mut c1 = c1;
+            // must abort via the poisoned barrier, not deadlock
+            c1.end_round();
+        });
+        assert!(t0.join().is_err());
+        assert!(t1.join().is_err(), "peer must fail fast when a rank dies");
+    }
+}

@@ -1,0 +1,276 @@
+//! The threaded rank executor: one OS thread per rank, each running the
+//! single-rank kernel of its MPK variant against a [`ThreadComm`] endpoint,
+//! plus the `sim | threads(n)` dispatch knob ([`ExecutorKind`]).
+//!
+//! Results are assembled deterministically: per-rank stats merge in
+//! ascending rank order ([`merge_rank_stats`] asserts the round counters
+//! agree), flops sum in rank order, and powers gather by ownership — so a
+//! threaded run is bitwise-comparable to the sequential simulator no matter
+//! how the OS interleaved the rank threads.
+
+use crate::distsim::{merge_rank_stats, CommStats, DistMatrix};
+use crate::mpk::dlb::{DlbPlan, Recurrence};
+use crate::mpk::{ca, dlb, trad, MpkResult, MpkVariant, NativeBackend};
+
+use super::comm::{thread_comms, ThreadComm};
+use super::RankRun;
+
+/// Which executor runs the distributed kernels (`sim | threads(n)`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutorKind {
+    /// Sequential lockstep simulator (exact counters, no parallelism).
+    Sim,
+    /// One OS thread per rank. `n == 0` means "one per configured rank";
+    /// a nonzero `n` *sets* the rank count (`threads(8)` = run 8 ranks on
+    /// 8 threads, overriding `--ranks`) — see [`ExecutorKind::ranks`].
+    Threads { n: usize },
+}
+
+impl ExecutorKind {
+    /// Parse `"sim"`, `"threads"`, or `"threads(N)"`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "sim" => Some(Self::Sim),
+            "threads" => Some(Self::Threads { n: 0 }),
+            _ => {
+                let inner = s.strip_prefix("threads(")?.strip_suffix(')')?;
+                Some(Self::Threads { n: inner.parse().ok()? })
+            }
+        }
+    }
+
+    /// Short label for reports (`sim` / `thr`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Sim => "sim",
+            Self::Threads { .. } => "thr",
+        }
+    }
+
+    /// Effective rank count: `threads(n)` with nonzero `n` overrides the
+    /// configured default (one thread per rank either way).
+    pub fn ranks(&self, default: usize) -> usize {
+        match self {
+            Self::Threads { n } if *n > 0 => *n,
+            _ => default,
+        }
+    }
+
+    /// Check the knob against an already-built distributed matrix (for
+    /// callers that cannot re-partition, like [`run`]).
+    pub fn validate(&self, n_ranks: usize) -> anyhow::Result<()> {
+        if let Self::Threads { n } = self {
+            anyhow::ensure!(
+                *n == 0 || *n == n_ranks,
+                "executor threads({n}) does not match the matrix's {n_ranks} ranks"
+            );
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for ExecutorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Sim => write!(f, "sim"),
+            Self::Threads { n: 0 } => write!(f, "threads"),
+            Self::Threads { n } => write!(f, "threads({n})"),
+        }
+    }
+}
+
+/// Spawn one thread per rank, run `body(rank, comm)` on each, and join in
+/// rank order.
+fn run_ranks<F>(n: usize, body: F) -> Vec<(RankRun, CommStats)>
+where
+    F: Fn(usize, ThreadComm) -> (RankRun, CommStats) + Sync,
+{
+    let comms = thread_comms(n);
+    std::thread::scope(|s| {
+        let joins: Vec<_> = comms
+            .into_iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let body = &body;
+                s.spawn(move || body(i, c))
+            })
+            .collect();
+        joins
+            .into_iter()
+            .map(|j| j.join().expect("rank thread panicked"))
+            .collect()
+    })
+}
+
+/// Gather per-rank outputs into a global [`MpkResult`] (deterministic
+/// rank-ascending merge).
+fn assemble(dist: &DistMatrix, p_m: usize, outs: Vec<(RankRun, CommStats)>) -> MpkResult {
+    let per_rank: Vec<CommStats> = outs.iter().map(|(_, s)| s.clone()).collect();
+    let comm = merge_rank_stats(&per_rank);
+    let flop_nnz = outs.iter().map(|(run, _)| run.flop_nnz).sum();
+    let mut powers = vec![vec![0.0; dist.n_global]; p_m];
+    for (r, (run, _)) in dist.ranks.iter().zip(&outs) {
+        for (pw, ys) in powers.iter_mut().zip(run.ys.iter().skip(1)) {
+            for (l, &g) in r.owned.iter().enumerate() {
+                pw[g] = ys[l];
+            }
+        }
+    }
+    MpkResult { powers, comm, flop_nnz }
+}
+
+/// TRAD-MPK under the threaded executor (measured parallel wall-clock).
+pub fn trad_threaded(
+    dist: &DistMatrix,
+    x: &[f64],
+    x_m1: Option<&[f64]>,
+    p_m: usize,
+    rec: Recurrence,
+) -> MpkResult {
+    let xs = dist.scatter(x);
+    let xm1s = x_m1.map(|v| dist.scatter(v));
+    let outs = run_ranks(dist.n_ranks(), |i, mut comm| {
+        let r = &dist.ranks[i];
+        let xm1 = xm1s.as_ref().map(|v| v[i].as_slice());
+        let mut backend = NativeBackend;
+        let run = trad::trad_rank(r, &xs[i], xm1, p_m, rec, &mut comm, &mut backend);
+        let stats = comm.stats().clone();
+        (run, stats)
+    });
+    assemble(dist, p_m, outs)
+}
+
+/// DLB-MPK under the threaded executor, with the remainder-round sends
+/// overlapped with the wavefront (paper §5). Reuses a prebuilt [`DlbPlan`]
+/// so setup cost amortizes exactly like the sequential path.
+pub fn dlb_threaded(
+    plan: &DlbPlan,
+    x: &[f64],
+    x_m1: Option<&[f64]>,
+    rec: Recurrence,
+) -> MpkResult {
+    let dist = &plan.dist;
+    let xs = dist.scatter(x);
+    let xm1s = x_m1.map(|v| dist.scatter(v));
+    let outs = run_ranks(dist.n_ranks(), |i, mut comm| {
+        let r = &dist.ranks[i];
+        let xm1 = xm1s.as_ref().map(|v| v[i].as_slice());
+        let mut backend = NativeBackend;
+        let run = dlb::dlb_rank(
+            r,
+            &plan.ranks[i],
+            plan.p_m,
+            &xs[i],
+            xm1,
+            rec,
+            &mut comm,
+            &mut backend,
+        );
+        let stats = comm.stats().clone();
+        (run, stats)
+    });
+    assemble(dist, plan.p_m, outs)
+}
+
+/// CA-MPK under the threaded executor: one extended exchange of the input,
+/// then embarrassingly parallel redundant computation per rank.
+pub fn ca_threaded(
+    a: &crate::matrix::CsrMatrix,
+    dist: &DistMatrix,
+    x: &[f64],
+    p_m: usize,
+) -> MpkResult {
+    let plan = ca::ca_exec_plan(a, dist, p_m);
+    let xs = dist.scatter(x);
+    let outs = run_ranks(dist.n_ranks(), |i, mut comm| {
+        let r = &dist.ranks[i];
+        let run = ca::ca_rank(
+            a,
+            r,
+            &plan.sends[i],
+            &plan.recvs[i],
+            &plan.ext[i],
+            &xs[i],
+            p_m,
+            &mut comm,
+        );
+        let stats = comm.stats().clone();
+        (run, stats)
+    });
+    assemble(dist, p_m, outs)
+}
+
+/// Variant dispatcher over both executors, mirroring [`crate::mpk::run`]
+/// (like it, the DLB branch plans with default options apart from the
+/// cache budget; use [`dlb_threaded`] with an explicit plan for tuned
+/// `s_m` or amortized setup).
+///
+/// # Panics
+///
+/// If `kind` is `threads(n)` with a nonzero `n` that does not match the
+/// prebuilt matrix's rank count (the matrix cannot be re-partitioned
+/// here — apply [`ExecutorKind::ranks`] before building it, as the
+/// coordinator does).
+pub fn run(
+    dist: &DistMatrix,
+    x: &[f64],
+    p_m: usize,
+    variant: MpkVariant,
+    kind: ExecutorKind,
+) -> MpkResult {
+    kind.validate(dist.n_ranks()).expect("executor/rank mismatch");
+    match kind {
+        ExecutorKind::Sim => crate::mpk::run(dist, x, p_m, variant),
+        ExecutorKind::Threads { .. } => match variant {
+            MpkVariant::Trad => trad_threaded(dist, x, None, p_m, Recurrence::Power),
+            MpkVariant::Ca => {
+                let a = ca::reassemble_global(dist);
+                ca_threaded(&a, dist, x, p_m)
+            }
+            MpkVariant::Dlb { cache_bytes } => {
+                let opts = dlb::DlbOptions { cache_bytes, ..dlb::DlbOptions::default() };
+                let plan = dlb::plan(dist, p_m, &opts);
+                dlb_threaded(&plan, x, None, Recurrence::Power)
+            }
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::mpk::trad_mpk;
+    use crate::partition::{partition, Method};
+
+    #[test]
+    fn executor_kind_parses() {
+        assert_eq!(ExecutorKind::parse("sim"), Some(ExecutorKind::Sim));
+        assert_eq!(ExecutorKind::parse("threads"), Some(ExecutorKind::Threads { n: 0 }));
+        assert_eq!(ExecutorKind::parse("threads(4)"), Some(ExecutorKind::Threads { n: 4 }));
+        assert_eq!(ExecutorKind::parse("mpi"), None);
+        assert_eq!(ExecutorKind::parse("threads(x)"), None);
+        assert_eq!(format!("{}", ExecutorKind::Threads { n: 4 }), "threads(4)");
+        assert!(ExecutorKind::Threads { n: 3 }.validate(4).is_err());
+        assert!(ExecutorKind::Threads { n: 0 }.validate(4).is_ok());
+        // nonzero n overrides the configured rank count
+        assert_eq!(ExecutorKind::Threads { n: 3 }.ranks(8), 3);
+        assert_eq!(ExecutorKind::Threads { n: 0 }.ranks(8), 8);
+        assert_eq!(ExecutorKind::Sim.ranks(8), 8);
+    }
+
+    #[test]
+    fn threaded_trad_matches_sim_bitwise() {
+        let a = gen::stencil_2d_5pt(10, 9);
+        let x: Vec<f64> = (0..a.n_rows()).map(|i| ((i % 11) as f64 - 5.0) / 3.0).collect();
+        for np in [1, 3, 4] {
+            let part = partition(&a, np, Method::Block);
+            let d = DistMatrix::build(&a, &part);
+            let sim = trad_mpk(&d, &x, 3, &mut NativeBackend);
+            let thr = trad_threaded(&d, &x, None, 3, Recurrence::Power);
+            assert_eq!(sim.powers, thr.powers, "np={np}");
+            assert_eq!(sim.comm, thr.comm, "np={np}");
+            assert_eq!(sim.flop_nnz, thr.flop_nnz, "np={np}");
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! Rank executors: actually *run* the distributed MPK variants.
+//!
+//! The [`crate::distsim`] layer defines what a rank owns and what must move
+//! between ranks; the [`crate::mpk`] kernels are written as **single-rank
+//! functions** against the [`Communicator`] halo-exchange contract
+//! (`trad_rank`, `dlb_rank`, `ca_rank`). This module supplies the two ways
+//! to execute them:
+//!
+//! * **Sim** ([`SimComm`] + [`lockstep_halo_exchange`]) — all ranks advance
+//!   round-by-round inside one thread, exactly like the original counting
+//!   simulator. Byte/message/round accounting is bit-identical to the
+//!   legacy `exchange_halo` loop, so every figure and counter in the repo
+//!   is unchanged.
+//! * **Threads** ([`ThreadComm`] + [`trad_threaded`]/[`dlb_threaded`]/
+//!   [`ca_threaded`]) — one OS thread per rank, real point-to-point
+//!   messages over `std::sync::mpsc` channels, a round barrier, and
+//!   *measured* parallel wall-clock. DLB's remainder-round sends are posted
+//!   as soon as their payload rows are final, overlapping communication
+//!   with the cache-blocked wavefront (paper §5).
+//!
+//! Both executors produce bitwise-identical `powers` and identical merged
+//! [`crate::distsim::CommStats`] (cross-validated in
+//! `rust/tests/exec_equivalence.rs`); only wall-clock differs.
+//!
+//! Entry points: [`ExecutorKind`] is the `sim | threads(n)` knob wired
+//! through [`crate::coordinator::RunConfig`] and the CLI; [`run`] is the
+//! variant dispatcher mirroring [`crate::mpk::run`].
+
+pub mod comm;
+pub mod executor;
+
+pub use comm::{
+    lockstep_halo_exchange, sim_comms, thread_comms, Communicator, SimComm, ThreadComm,
+};
+pub use executor::{ca_threaded, dlb_threaded, run, trad_threaded, ExecutorKind};
+
+/// What a single-rank kernel produces: the local power vectors plus the
+/// rank's share of the flop count. `ys[p]` is the local vector of power
+/// `p` (`ys[0]` = the input); only the first `n_local` entries of each are
+/// meaningful to the caller (halo tails are scratch).
+pub struct RankRun {
+    pub ys: Vec<Vec<f64>>,
+    pub flop_nnz: usize,
+}

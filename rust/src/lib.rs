@@ -22,6 +22,10 @@
 //!   recursive bisection + KL refinement) standing in for METIS.
 //! * [`distsim`] — simulated-MPI runtime: rank-local matrices, halo plans,
 //!   byte-accurate communication accounting, comm cost model.
+//! * [`exec`] — rank executors: the `Communicator` halo-exchange contract
+//!   with sequential (`SimComm`) and multi-threaded (`ThreadComm`, one OS
+//!   thread per rank over mpsc channels) transports, and the threaded
+//!   drivers measuring real parallel wall-clock.
 //! * [`mpk`] — the three MPK variants: `trad`, `ca` (baseline from
 //!   Mohiyuddin et al. 2009), and `dlb` (the paper's contribution).
 //! * [`cachesim`] — LRU cache simulator replaying MPK reference streams to
@@ -35,6 +39,7 @@ pub mod apps;
 pub mod cachesim;
 pub mod coordinator;
 pub mod distsim;
+pub mod exec;
 pub mod graph;
 pub mod matrix;
 pub mod mpk;

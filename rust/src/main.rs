@@ -16,6 +16,7 @@
 use anyhow::{bail, Context, Result};
 
 use dlb_mpk::coordinator::{self, MatrixSpec, Report, RunConfig};
+use dlb_mpk::exec::ExecutorKind;
 use dlb_mpk::matrix::gen;
 use dlb_mpk::partition::Method;
 use dlb_mpk::util::mib;
@@ -72,6 +73,9 @@ fn include_str_usage() -> &'static str {
        --pm P           power p_m (default 4)\n\
        --cache-mib C    DLB cache budget (default 16)\n\
        --partitioner M  block | greedy | bisect (default bisect)\n\
+       --executor E     sim | threads | threads(N)  (default sim; threads =\n\
+                        one OS thread per rank, measured wall-clock;\n\
+                        threads(N) runs N ranks/threads, overriding --ranks)\n\
        --reps R         timing repetitions (default 5)\n\
        --no-validate    skip TRAD/DLB equivalence check\n"
 }
@@ -170,6 +174,8 @@ fn config(flags: &Flags) -> Result<RunConfig> {
     let matrix = parse_matrix(flags.get("matrix").unwrap_or("stencil2d:256,256"))?;
     let partitioner = Method::parse(flags.get("partitioner").unwrap_or("bisect"))
         .context("--partitioner must be block|greedy|bisect")?;
+    let executor = ExecutorKind::parse(flags.get("executor").unwrap_or("sim"))
+        .context("--executor must be sim|threads|threads(N)")?;
     Ok(RunConfig {
         matrix,
         n_ranks: flags.usize("ranks", 1)?,
@@ -179,6 +185,7 @@ fn config(flags: &Flags) -> Result<RunConfig> {
         s_m: flags.usize("sm", 50)?,
         reps: flags.usize("reps", 5)?,
         validate: !flags.has("no-validate"),
+        executor,
     })
 }
 
@@ -190,7 +197,7 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         r.print_row();
     }
     let speedup = out.reports[0].time.median_s / out.reports[1].time.median_s;
-    println!("\nDLB speedup over TRAD: {speedup:.2}x");
+    println!("\nexecutor: {} | DLB speedup over TRAD: {speedup:.2}x", cfg.executor);
     Ok(())
 }
 

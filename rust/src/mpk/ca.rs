@@ -12,7 +12,8 @@
 
 use std::collections::HashMap;
 
-use crate::distsim::{CommStats, DistMatrix};
+use crate::distsim::{CommStats, DistMatrix, RankLocal};
+use crate::exec::{Communicator, RankRun};
 use crate::matrix::CsrMatrix;
 use crate::mpk::MpkResult;
 
@@ -154,21 +155,9 @@ pub fn ca_mpk_with(a: &CsrMatrix, dist: &DistMatrix, x: &[f64], p_m: usize) -> C
     // capture the redundancy.
     for (r, classes) in dist.ranks.iter().zip(&plan.ext) {
         for p in 1..=p_m {
-            // owned rows to power p
-            for &g in &r.owned {
-                powers[p][g] = row_dot(a, g, &powers[p - 1]);
-                flop_nnz += a.row_cols(g).len();
-            }
-            // E_k to power p_m-1-k: redundant work
-            for (k, cls) in classes.iter().enumerate() {
-                let target = p_m.saturating_sub(1).saturating_sub(k);
-                if p <= target {
-                    for &g in cls {
-                        powers[p][g] = row_dot(a, g, &powers[p - 1]);
-                        flop_nnz += a.row_cols(g).len();
-                    }
-                }
-            }
+            let (prevs, curs) = powers.split_at_mut(p);
+            flop_nnz +=
+                ca_promote_round(a, &r.owned, classes, p_m, p, &prevs[p - 1], &mut curs[0]);
         }
     }
 
@@ -180,6 +169,141 @@ pub fn ca_mpk_with(a: &CsrMatrix, dist: &DistMatrix, x: &[f64], p_m: usize) -> C
         },
         overheads: plan.overheads,
     }
+}
+
+/// Per-rank communication plan for the executable CA kernel: who ships
+/// which input values to whom for the single up-front extended exchange.
+/// Derived once from the global [`CaPlan`] (in a real implementation this
+/// handshake happens during setup).
+pub struct CaExecPlan {
+    pub p_m: usize,
+    /// `sends[rank]` = (peer, local rows of the input to ship), ascending
+    /// peer.
+    pub sends: Vec<Vec<(usize, Vec<u32>)>>,
+    /// `recvs[rank]` = (peer, global ids received from it), ascending peer;
+    /// ids sorted by global id within a peer.
+    pub recvs: Vec<Vec<(usize, Vec<usize>)>>,
+    /// `ext[rank]` = external classes `E_0..E_{p_m-1}` (global ids), as in
+    /// [`CaPlan::ext`].
+    pub ext: Vec<Vec<Vec<usize>>>,
+}
+
+/// Build the per-rank exec plan from the global CA plan.
+pub fn ca_exec_plan(a: &CsrMatrix, dist: &DistMatrix, p_m: usize) -> CaExecPlan {
+    let plan = ca_plan(a, dist, p_m);
+    let nr = dist.n_ranks();
+    let mut recvs: Vec<Vec<(usize, Vec<usize>)>> = vec![Vec::new(); nr];
+    let mut sends: Vec<Vec<(usize, Vec<u32>)>> = vec![Vec::new(); nr];
+    for (i, classes) in plan.ext.iter().enumerate() {
+        let mut wanted: Vec<usize> = classes.iter().flatten().copied().collect();
+        wanted.sort_unstable_by_key(|&g| (dist.owner_of[g], g));
+        let mut s = 0usize;
+        while s < wanted.len() {
+            let owner = dist.owner_of[wanted[s]] as usize;
+            let mut e = s;
+            while e < wanted.len() && dist.owner_of[wanted[e]] as usize == owner {
+                e += 1;
+            }
+            let gids = wanted[s..e].to_vec();
+            sends[owner].push((i, gids.iter().map(|&g| dist.local_of[g]).collect()));
+            recvs[i].push((owner, gids));
+            s = e;
+        }
+    }
+    for sp in &mut sends {
+        sp.sort_by_key(|&(peer, _)| peer);
+    }
+    CaExecPlan { p_m, sends, recvs, ext: plan.ext }
+}
+
+/// One CA promotion round: owned rows to power `p`, plus every external
+/// class `E_k` still below its target `p_m − 1 − k`, reading power `p − 1`
+/// values from `prev` and writing `cur`. Returns the non-zeros touched.
+///
+/// Shared by the sequential driver ([`ca_mpk_with`]) and the per-rank
+/// kernel ([`ca_rank`]) so the two execution paths cannot drift — same
+/// role [`crate::mpk::kernel_step`] plays for TRAD/DLB.
+fn ca_promote_round(
+    a: &CsrMatrix,
+    owned: &[usize],
+    ext: &[Vec<usize>],
+    p_m: usize,
+    p: usize,
+    prev: &[f64],
+    cur: &mut [f64],
+) -> usize {
+    let mut flop_nnz = 0usize;
+    for &g in owned {
+        cur[g] = row_dot(a, g, prev);
+        flop_nnz += a.row_cols(g).len();
+    }
+    for (k, cls) in ext.iter().enumerate() {
+        let target = p_m.saturating_sub(1).saturating_sub(k);
+        if p <= target {
+            for &g in cls {
+                cur[g] = row_dot(a, g, prev);
+                flop_nnz += a.row_cols(g).len();
+            }
+        }
+    }
+    flop_nnz
+}
+
+/// Single-rank CA kernel over a [`Communicator`]: one extended exchange of
+/// the input vector (tag 0), then purely local redundant computation —
+/// identical operation order to [`ca_mpk_with`] (shared
+/// [`ca_promote_round`]), so results and counters are bitwise equal across
+/// executors.
+///
+/// The rank works in a global-index workspace but only two rotating
+/// buffers of it (power `p` reads nothing older than `p − 1`), and only
+/// ever reads rows in its owned ∪ external closure (the CA invariant), so
+/// per-rank memory is `2 × N` instead of `(p_m + 1) × N`.
+#[allow(clippy::too_many_arguments)]
+pub fn ca_rank(
+    a: &CsrMatrix,
+    r: &RankLocal,
+    sends: &[(usize, Vec<u32>)],
+    recvs: &[(usize, Vec<usize>)],
+    ext: &[Vec<usize>],
+    x0: &[f64],
+    p_m: usize,
+    comm: &mut dyn Communicator,
+) -> RankRun {
+    let n = a.n_rows();
+    let mut prev = vec![0.0; n];
+    let mut cur = vec![0.0; n];
+    for (l, &g) in r.owned.iter().enumerate() {
+        prev[g] = x0[l];
+    }
+
+    // one "big" exchange: ship input values peers fetch, receive all
+    // external classes
+    for (peer, rows) in sends {
+        let payload: Vec<f64> = rows.iter().map(|&l| x0[l as usize]).collect();
+        comm.send(*peer, 0, payload);
+    }
+    for (peer, gids) in recvs {
+        let payload = comm.recv(*peer, 0);
+        debug_assert_eq!(payload.len(), gids.len());
+        for (&g, &v) in gids.iter().zip(&payload) {
+            prev[g] = v;
+        }
+    }
+    comm.end_round();
+
+    // local phase: promote owned to p_m, E_k to p_m-1-k (redundantly),
+    // extracting the rank's owned slice of each power as it completes
+    let extract = |buf: &[f64]| -> Vec<f64> { r.owned.iter().map(|&g| buf[g]).collect() };
+    let mut ys: Vec<Vec<f64>> = Vec::with_capacity(p_m + 1);
+    ys.push(extract(&prev));
+    let mut flop_nnz = 0usize;
+    for p in 1..=p_m {
+        flop_nnz += ca_promote_round(a, &r.owned, ext, p_m, p, &prev, &mut cur);
+        ys.push(extract(&cur));
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    RankRun { ys, flop_nnz }
 }
 
 #[inline]

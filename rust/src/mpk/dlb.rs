@@ -21,10 +21,12 @@
 //! vertices, in a single-rank run) get ordinary BFS levels appended after
 //! the reachable ones; they belong to `M` and never interact with the halo.
 
-use crate::distsim::{exchange_halo, CommStats, DistMatrix, RankLocal};
+use crate::distsim::{merge_rank_stats, DistMatrix, RankLocal};
+use crate::exec::comm::{lockstep_halo_exchange, sim_comms, Communicator};
+use crate::exec::RankRun;
 use crate::graph::distance::multi_source_distances;
 use crate::graph::{bfs_levels, Adjacency, Levels};
-use crate::mpk::{MpkResult, SpmvBackend};
+use crate::mpk::{kernel_step, MpkResult, SpmvBackend};
 use crate::race::grouping::group_levels_solo_prefix;
 use crate::race::schedule::{wavefront_capped, Step};
 
@@ -374,9 +376,11 @@ pub fn execute_recurrence_with(
     let (ys, ym1_store) = (&mut ws.ys, &ws.ym1);
     let ym1: Option<&[Vec<f64>]> = x_m1.map(|_| ym1_store.as_slice());
 
-    let mut comm = CommStats::default();
+    let mut comms = sim_comms(nr);
     let mut flop_nnz = 0usize;
 
+    // One wavefront/class step for rank `i`: y_p[lo..hi] from y_{p-1} (and
+    // y_{p-2} for Chebyshev) via the shared compute primitive.
     let do_step = |ys: &mut [Vec<Vec<f64>>],
                    ym1: &Option<&[Vec<f64>]>,
                    flop_nnz: &mut usize,
@@ -386,33 +390,18 @@ pub fn execute_recurrence_with(
                    p: usize,
                    backend: &mut dyn SpmvBackend| {
         let r = &dist.ranks[i];
-        {
-            let (prevs, cur) = ys.split_at_mut(p);
-            backend.spmv_range(&r.a, lo, hi, &prevs[p - 1][i], &mut cur[0][i]);
-            match rec {
-                Recurrence::Power => {}
-                Recurrence::Chebyshev => {
-                    // y_p = 2·(A y_{p-1}) − y_{p-2}
-                    let sub: Option<&[f64]> = if p >= 2 {
-                        Some(&prevs[p - 2][i])
-                    } else {
-                        ym1.map(|v| &v[i][..])
-                    };
-                    let out = &mut cur[0][i];
-                    if let Some(sub) = sub {
-                        for r in lo..hi {
-                            out[r] = 2.0 * out[r] - sub[r];
-                        }
-                    }
-                    // no y_{-1}: wind-up step y_1 = A y_0 (Eq. 7)
-                }
-            }
-        }
-        *flop_nnz += r.a.rowptr[hi] - r.a.rowptr[lo];
+        let (prevs, cur) = ys.split_at_mut(p);
+        let prev2: Option<&[f64]> = if p >= 2 {
+            Some(&prevs[p - 2][i][..])
+        } else {
+            ym1.map(|v| &v[i][..])
+        };
+        *flop_nnz +=
+            kernel_step(&r.a, rec, prev2, &prevs[p - 1][i], &mut cur[0][i], lo, hi, backend);
     };
 
     // ---- phase 1: initial halo exchange (same routine as TRAD)
-    exchange_halo(&dist.ranks, &mut ys[0], &mut comm);
+    lockstep_halo_exchange(&mut comms, &dist.ranks, 0, &mut ys[0]);
 
     // ---- phase 2: local level-blocked wavefront (cache-blocked)
     for i in 0..nr {
@@ -425,7 +414,7 @@ pub fn execute_recurrence_with(
 
     // ---- phase 3: p_m - 1 rounds of {exchange, advance classes}
     for p in 1..p_m {
-        exchange_halo(&dist.ranks, &mut ys[p], &mut comm);
+        lockstep_halo_exchange(&mut comms, &dist.ranks, p as u64, &mut ys[p]);
         for i in 0..nr {
             let pl = &plan.ranks[i];
             for k in 1..=(p_m - p) {
@@ -439,11 +428,116 @@ pub fn execute_recurrence_with(
         }
     }
 
+    let per_rank: Vec<_> = comms.iter().map(|c| c.stats().clone()).collect();
     MpkResult {
         powers: (1..=p_m).map(|p| dist.gather(&ys[p])).collect(),
-        comm,
+        comm: merge_rank_stats(&per_rank),
         flop_nnz,
     }
+}
+
+/// Single-rank DLB kernel over a [`Communicator`] — what each OS thread
+/// runs under the threaded executor.
+///
+/// Same three phases as the lockstep driver, with one crucial difference:
+/// the halo **sends** of each remainder round are posted as soon as their
+/// payload rows are final, so the messages travel while this rank is still
+/// computing — `y_1`'s sends go out mid-wavefront (overlapping the bulk of
+/// phase 2), and round `p+1`'s sends go out right after the class-`I_1`
+/// advance of round `p` (overlapping the deeper-class advances). This
+/// realizes the paper's §5 communication/computation overlap with real
+/// nonblocking messages. Tags: phase 1 uses `0`, remainder round `p` uses
+/// `p`.
+#[allow(clippy::too_many_arguments)]
+pub fn dlb_rank(
+    r: &RankLocal,
+    pl: &DlbRankPlan,
+    p_m: usize,
+    x0: &[f64],
+    x_m1: Option<&[f64]>,
+    rec: Recurrence,
+    comm: &mut dyn Communicator,
+    backend: &mut dyn SpmvBackend,
+) -> RankRun {
+    assert!(p_m >= 1);
+    let mut ys: Vec<Vec<f64>> = Vec::with_capacity(p_m + 1);
+    ys.push(x0.to_vec());
+    for _ in 0..p_m {
+        ys.push(r.new_vec());
+    }
+    let mut flop_nnz = 0usize;
+
+    // ---- phase 1: initial halo exchange
+    comm.exchange(r, 0, &mut ys[0]);
+
+    // ---- phase 2: cache-blocked wavefront, y_1 sends posted the moment
+    // every send-plan row has reached power 1
+    let send_max_row = r
+        .send
+        .iter()
+        .flat_map(|sp| sp.rows.iter())
+        .map(|&row| row as usize + 1)
+        .max()
+        .unwrap_or(0);
+    let mut await_post = p_m >= 2;
+    let mut groups_left = pl.ranges.iter().filter(|&&(lo, _)| lo < send_max_row).count();
+    if await_post && groups_left == 0 {
+        comm.post_halo_sends(r, 1, &ys[1]);
+        await_post = false;
+    }
+    for s in &pl.schedule {
+        let (lo, hi) = pl.ranges[s.group];
+        let p = s.power;
+        {
+            let (prevs, cur) = ys.split_at_mut(p);
+            let prev2: Option<&[f64]> = if p >= 2 { Some(&prevs[p - 2][..]) } else { x_m1 };
+            flop_nnz +=
+                kernel_step(&r.a, rec, prev2, &prevs[p - 1], &mut cur[0], lo, hi, backend);
+        }
+        if await_post && p == 1 && lo < send_max_row {
+            groups_left -= 1;
+            if groups_left == 0 {
+                comm.post_halo_sends(r, 1, &ys[1]);
+                await_post = false;
+            }
+        }
+    }
+    if await_post {
+        comm.post_halo_sends(r, 1, &ys[1]);
+    }
+
+    // ---- phase 3: p_m - 1 rounds of {wait halo, advance classes}, with
+    // the next round's sends posted right after the I_1 advance
+    for p in 1..p_m {
+        comm.wait_halo(r, p as u64, &mut ys[p]);
+        for k in 1..=(p_m - p) {
+            let (lo, hi) = pl.class_ranges[k - 1];
+            if lo != hi {
+                // advance I_k from power p + k - 1 to p + k
+                let (prevs, cur) = ys.split_at_mut(p + k);
+                let prev2: Option<&[f64]> =
+                    if p + k >= 2 { Some(&prevs[p + k - 2][..]) } else { x_m1 };
+                flop_nnz += kernel_step(
+                    &r.a,
+                    rec,
+                    prev2,
+                    &prevs[p + k - 1],
+                    &mut cur[0],
+                    lo,
+                    hi,
+                    backend,
+                );
+            }
+            if k == 1 && p + 1 < p_m {
+                // y_{p+1} is now final on every send row (deeper classes
+                // reached power ≥ p+1 earlier): ship it while the deeper
+                // classes of this round are still being advanced.
+                comm.post_halo_sends(r, (p + 1) as u64, &ys[p + 1]);
+            }
+        }
+    }
+
+    RankRun { ys, flop_nnz }
 }
 
 

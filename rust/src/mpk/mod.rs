@@ -11,6 +11,13 @@
 //!
 //! All variants produce bitwise-comparable results (same floating-point
 //! operation order per row) and are cross-validated in `rust/tests/`.
+//!
+//! Each variant exists in two executable forms sharing the same compute
+//! helpers (so numerics are bit-identical): the original all-ranks
+//! sequential drivers here (now routed through [`crate::exec::SimComm`]
+//! lockstep exchanges), and single-rank kernels (`trad_rank`, `dlb_rank`,
+//! `ca_rank`) over [`crate::exec::Communicator`] that the threaded
+//! executor ([`crate::exec`]) runs with one OS thread per rank.
 
 pub mod ca;
 pub mod dlb;
@@ -44,6 +51,33 @@ pub struct MpkResult {
     /// Total SpMV row-nonzero products executed (redundant work shows up
     /// here: CA > TRAD == DLB).
     pub flop_nnz: usize,
+}
+
+/// One row-range step of a three-term recurrence: `cur[lo..hi] =
+/// (A prev)[lo..hi]`, then for Chebyshev `cur <- 2·cur − prev2` (no `prev2`
+/// = the wind-up step, Eq. 7). Returns the non-zeros touched.
+///
+/// This is the single compute primitive shared by the sequential drivers
+/// and the per-rank kernels — keeping both execution paths bitwise equal.
+pub(crate) fn kernel_step(
+    a: &crate::matrix::CsrMatrix,
+    rec: dlb::Recurrence,
+    prev2: Option<&[f64]>,
+    prev: &[f64],
+    cur: &mut [f64],
+    lo: usize,
+    hi: usize,
+    backend: &mut dyn SpmvBackend,
+) -> usize {
+    backend.spmv_range(a, lo, hi, prev, cur);
+    if rec == dlb::Recurrence::Chebyshev {
+        if let Some(sub) = prev2 {
+            for r in lo..hi {
+                cur[r] = 2.0 * cur[r] - sub[r];
+            }
+        }
+    }
+    a.rowptr[hi] - a.rowptr[lo]
 }
 
 /// Convenience dispatcher over the three variants with the native backend.

@@ -1,10 +1,19 @@
 //! Traditional distributed MPK (paper Alg. 1): back-to-back SpMVs, one halo
 //! exchange per power, full local sweep per SpMV. The matrix streams from
 //! main memory `p_m` times — the baseline DLB-MPK beats by cache blocking.
+//!
+//! Two executable forms over the same compute primitive
+//! ([`crate::mpk::kernel_step`]): [`trad_rank`] is the single-rank kernel
+//! over a [`Communicator`] (what each OS thread runs under the threaded
+//! executor), and [`trad_recurrence`] is the sequential all-ranks driver
+//! that advances every rank in lockstep over [`SimComm`] endpoints —
+//! today's exact byte accounting.
 
-use crate::distsim::{exchange_halo, CommStats, DistMatrix};
+use crate::distsim::{merge_rank_stats, DistMatrix, RankLocal};
+use crate::exec::comm::{lockstep_halo_exchange, sim_comms, Communicator};
+use crate::exec::RankRun;
 use crate::mpk::dlb::Recurrence;
-use crate::mpk::{MpkResult, SpmvBackend};
+use crate::mpk::{kernel_step, MpkResult, SpmvBackend};
 
 pub fn trad_mpk(
     dist: &DistMatrix,
@@ -15,9 +24,38 @@ pub fn trad_mpk(
     trad_recurrence(dist, x, None, p_m, Recurrence::Power, backend)
 }
 
+/// Single-rank TRAD kernel: `p_m` rounds of {halo exchange of `y_{p-1}`,
+/// full local SpMV}. `x0` is this rank's scattered input (halo tail
+/// ignored); round `p` uses message tag `p - 1`.
+pub fn trad_rank(
+    r: &RankLocal,
+    x0: &[f64],
+    x_m1: Option<&[f64]>,
+    p_m: usize,
+    rec: Recurrence,
+    comm: &mut dyn Communicator,
+    backend: &mut dyn SpmvBackend,
+) -> RankRun {
+    assert!(p_m >= 1);
+    let nl = r.n_local();
+    let mut ys: Vec<Vec<f64>> = Vec::with_capacity(p_m + 1);
+    ys.push(x0.to_vec());
+    for _ in 0..p_m {
+        ys.push(r.new_vec());
+    }
+    let mut flop_nnz = 0usize;
+    for p in 1..=p_m {
+        let (prevs, cur) = ys.split_at_mut(p);
+        comm.exchange(r, (p - 1) as u64, &mut prevs[p - 1]);
+        let prev2: Option<&[f64]> = if p >= 2 { Some(&prevs[p - 2][..]) } else { x_m1 };
+        flop_nnz += kernel_step(&r.a, rec, prev2, &prevs[p - 1], &mut cur[0], 0, nl, backend);
+    }
+    RankRun { ys, flop_nnz }
+}
+
 /// TRAD generalized over a three-term recurrence (Chebyshev baseline for
 /// paper §7: "previous state-of-the-art implementations … perform
-/// back-to-back SpMVs").
+/// back-to-back SpMVs"). Sequential lockstep execution over [`SimComm`].
 pub fn trad_recurrence(
     dist: &DistMatrix,
     x: &[f64],
@@ -36,36 +74,37 @@ pub fn trad_recurrence(
     }
     let ym1: Option<Vec<Vec<f64>>> = x_m1.map(|v| dist.scatter(v));
 
-    let mut comm = CommStats::default();
+    let mut comms = sim_comms(nr);
     let mut flop_nnz = 0usize;
     for p in 1..=p_m {
         // y[:, p-1] <- haloComm(y[:, p-1])
-        exchange_halo(&dist.ranks, &mut ys[p - 1], &mut comm);
+        lockstep_halo_exchange(&mut comms, &dist.ranks, (p - 1) as u64, &mut ys[p - 1]);
         // y[:, p] <- SpMV(y[:, p-1], A_i) (+ recurrence combine)
         let (prevs, cur) = ys.split_at_mut(p);
         for i in 0..nr {
             let r = &dist.ranks[i];
-            backend.spmv_range(&r.a, 0, r.n_local(), &prevs[p - 1][i], &mut cur[0][i]);
-            if rec == Recurrence::Chebyshev {
-                let sub: Option<&[f64]> = if p >= 2 {
-                    Some(&prevs[p - 2][i])
-                } else {
-                    ym1.as_ref().map(|v| &v[i][..])
-                };
-                if let Some(sub) = sub {
-                    let out = &mut cur[0][i];
-                    for rr in 0..r.n_local() {
-                        out[rr] = 2.0 * out[rr] - sub[rr];
-                    }
-                }
-            }
-            flop_nnz += r.a.nnz();
+            let prev2: Option<&[f64]> = if p >= 2 {
+                Some(&prevs[p - 2][i][..])
+            } else {
+                ym1.as_ref().map(|v| &v[i][..])
+            };
+            flop_nnz += kernel_step(
+                &r.a,
+                rec,
+                prev2,
+                &prevs[p - 1][i],
+                &mut cur[0][i],
+                0,
+                r.n_local(),
+                backend,
+            );
         }
     }
 
+    let per_rank: Vec<_> = comms.iter().map(|c| c.stats().clone()).collect();
     MpkResult {
         powers: (1..=p_m).map(|p| dist.gather(&ys[p])).collect(),
-        comm,
+        comm: merge_rank_stats(&per_rank),
         flop_nnz,
     }
 }

@@ -7,10 +7,29 @@
 //! (jax ≥ 0.5 emits 64-bit-id protos that xla_extension 0.5.1 rejects; the
 //! text parser reassigns ids — see /opt/xla-example/README.md).
 
+//! ## Feature gating
+//!
+//! The PJRT path needs the external `xla` crate, which is not available in
+//! offline builds. With the default feature set, [`stub`] provides the same
+//! public types (`Runtime`, `XlaSpmv`, `XlaChebStep`) whose constructors
+//! fail with a clear message, so everything downstream still compiles and
+//! artifact-probing callers skip gracefully. Build with `--features xla`
+//! (and an `xla` crate on the path) for the real runtime.
+
 pub mod artifacts;
+
+#[cfg(feature = "xla")]
 pub mod backend;
+#[cfg(feature = "xla")]
 pub mod client;
 
+#[cfg(not(feature = "xla"))]
+mod stub;
+#[cfg(not(feature = "xla"))]
+pub use self::stub as backend;
+#[cfg(not(feature = "xla"))]
+pub use self::stub as client;
+
 pub use artifacts::{ArtifactKind, ArtifactMeta, Manifest};
-pub use backend::XlaSpmv;
-pub use client::Runtime;
+pub use self::backend::XlaSpmv;
+pub use self::client::Runtime;

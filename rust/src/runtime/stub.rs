@@ -1,0 +1,80 @@
+//! API-compatible stand-ins for the PJRT/XLA runtime when the crate is
+//! built without the `xla` feature (the default in offline environments —
+//! the `xla` crate is not vendored).
+//!
+//! Every constructor fails with a clear message. Callers that can skip
+//! (the integration tests and examples) check `cfg!(feature = "xla")`
+//! before probing for artifacts; anything else surfaces the load error.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::matrix::EllChunk;
+
+use super::artifacts::{ArtifactMeta, Manifest};
+
+/// Stub for `runtime::client::Runtime`: always fails to load.
+pub struct Runtime {
+    manifest: Manifest,
+}
+
+impl Runtime {
+    pub fn load(_dir: &Path) -> Result<Self> {
+        bail!("built without the `xla` feature: PJRT runtime unavailable (rebuild with `--features xla`)")
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".into()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.manifest.entries.get(name)
+    }
+}
+
+/// Stub for `runtime::backend::XlaSpmv`.
+pub struct XlaSpmv<'rt> {
+    #[allow(dead_code)]
+    rt: &'rt Runtime,
+}
+
+impl<'rt> XlaSpmv<'rt> {
+    pub fn new(_rt: &'rt Runtime, _rows: usize, _width: usize, _xlen: usize) -> Result<Self> {
+        bail!("built without the `xla` feature: XlaSpmv unavailable")
+    }
+
+    pub fn spmv(&self, _ell: &EllChunk, _x: &[f64]) -> Result<Vec<f64>> {
+        bail!("built without the `xla` feature: XlaSpmv unavailable")
+    }
+}
+
+/// Stub for `runtime::backend::XlaChebStep`.
+pub struct XlaChebStep<'rt> {
+    #[allow(dead_code)]
+    rt: &'rt Runtime,
+    pub rows: usize,
+    pub width: usize,
+    pub xlen: usize,
+}
+
+impl<'rt> XlaChebStep<'rt> {
+    pub fn new(_rt: &'rt Runtime, _rows: usize, _width: usize, _xlen: usize) -> Result<Self> {
+        bail!("built without the `xla` feature: XlaChebStep unavailable")
+    }
+
+    pub fn step(
+        &self,
+        _ell: &EllChunk,
+        _v_re: &[f64],
+        _v_im: &[f64],
+        _vp_re: &[f64],
+        _vp_im: &[f64],
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        bail!("built without the `xla` feature: XlaChebStep unavailable")
+    }
+}

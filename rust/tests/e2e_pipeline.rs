@@ -25,6 +25,7 @@ fn coordinator_full_pipeline_all_specs() {
             s_m: 50,
             reps: 1,
             validate: true,
+            ..Default::default()
         };
         let out = coordinator::run(&cfg).expect("pipeline");
         assert_eq!(out.reports[1].validated, Some(true));

@@ -1,0 +1,188 @@
+//! Executor cross-validation: the threaded executor (one OS thread per
+//! rank, real channel halo exchange) must be *bitwise* identical to the
+//! sequential lockstep simulator — same `powers`, same merged `CommStats`,
+//! same flop counts — for all three MPK variants, across rank counts and
+//! matrix structures. Plus a seeded-random ("proptest-style", see
+//! proptest_invariants.rs) sweep checking the threaded halo exchange
+//! delivers every `SendPlan` row exactly once.
+
+use dlb_mpk::distsim::{merge_rank_stats, CommStats, DistMatrix};
+use dlb_mpk::exec::{self, thread_comms, Communicator};
+use dlb_mpk::matrix::{gen, CsrMatrix};
+use dlb_mpk::mpk::dlb::{self, DlbOptions, Recurrence};
+use dlb_mpk::mpk::{ca, trad_mpk, NativeBackend};
+use dlb_mpk::partition::{partition, Method};
+use dlb_mpk::util::rng::Rng;
+
+const RANKS: [usize; 4] = [1, 2, 4, 7];
+
+fn test_vector(n: usize) -> Vec<f64> {
+    (0..n).map(|i| ((i * 37 % 101) as f64 - 50.0) / 101.0).collect()
+}
+
+fn assert_bitwise(a: &[Vec<f64>], b: &[Vec<f64>], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: power count");
+    for (p, (u, v)) in a.iter().zip(b).enumerate() {
+        assert_eq!(u.len(), v.len(), "{tag}: power {} length", p + 1);
+        for (r, (x, y)) in u.iter().zip(v).enumerate() {
+            assert!(
+                x.to_bits() == y.to_bits(),
+                "{tag}: power {} row {r}: {x:?} != {y:?} (bitwise)",
+                p + 1
+            );
+        }
+    }
+}
+
+fn check_all_variants(a: &CsrMatrix, np: usize, p_m: usize, cache: usize) {
+    let x = test_vector(a.n_rows());
+    let part = partition(a, np, Method::Block);
+    let d = DistMatrix::build(a, &part);
+    let tag = format!("np={np} p_m={p_m}");
+
+    // TRAD
+    let sim = trad_mpk(&d, &x, p_m, &mut NativeBackend);
+    let thr = exec::trad_threaded(&d, &x, None, p_m, Recurrence::Power);
+    assert_bitwise(&sim.powers, &thr.powers, &format!("trad {tag}"));
+    assert_eq!(sim.comm, thr.comm, "trad stats {tag}");
+    assert_eq!(sim.flop_nnz, thr.flop_nnz, "trad flops {tag}");
+
+    // DLB (same plan drives both executors)
+    let opts = DlbOptions { cache_bytes: cache, s_m: 50 };
+    let plan = dlb::plan(&d, p_m, &opts);
+    let sim = dlb::execute(&plan, &x, &mut NativeBackend);
+    let thr = exec::dlb_threaded(&plan, &x, None, Recurrence::Power);
+    assert_bitwise(&sim.powers, &thr.powers, &format!("dlb {tag}"));
+    assert_eq!(sim.comm, thr.comm, "dlb stats {tag}");
+    assert_eq!(sim.flop_nnz, thr.flop_nnz, "dlb flops {tag}");
+
+    // CA
+    let sim = ca::ca_mpk_with(a, &d, &x, p_m);
+    let thr = exec::ca_threaded(a, &d, &x, p_m);
+    assert_bitwise(&sim.result.powers, &thr.powers, &format!("ca {tag}"));
+    assert_eq!(sim.result.comm, thr.comm, "ca stats {tag}");
+    assert_eq!(sim.result.flop_nnz, thr.flop_nnz, "ca flops {tag}");
+}
+
+#[test]
+fn sim_and_threads_agree_on_stencil() {
+    let a = gen::stencil_2d_5pt(14, 11);
+    for np in RANKS {
+        for p_m in [1, 3, 4] {
+            check_all_variants(&a, np, p_m, 8 << 10);
+        }
+    }
+}
+
+#[test]
+fn sim_and_threads_agree_on_random_banded() {
+    let a = gen::random_banded_sym(240, 9, 30, 5);
+    for np in RANKS {
+        check_all_variants(&a, np, 4, 4 << 10);
+    }
+}
+
+#[test]
+fn sim_and_threads_agree_on_chebyshev_recurrence() {
+    use dlb_mpk::mpk::trad::trad_recurrence;
+    let a = gen::stencil_2d_5pt(12, 12);
+    let n = a.n_rows();
+    let x = test_vector(n);
+    let xm1: Vec<f64> = (0..n).map(|i| ((i * 13 % 29) as f64) / 29.0).collect();
+    for np in [2, 4] {
+        let part = partition(&a, np, Method::Block);
+        let d = DistMatrix::build(&a, &part);
+        let p_m = 3;
+        let sim = trad_recurrence(&d, &x, Some(&xm1), p_m, Recurrence::Chebyshev, &mut NativeBackend);
+        let thr = exec::trad_threaded(&d, &x, Some(&xm1), p_m, Recurrence::Chebyshev);
+        assert_bitwise(&sim.powers, &thr.powers, "cheb trad");
+        assert_eq!(sim.comm, thr.comm);
+
+        let plan = dlb::plan(&d, p_m, &DlbOptions { cache_bytes: 8 << 10, s_m: 50 });
+        let sim = dlb::execute_recurrence(&plan, &x, Some(&xm1), Recurrence::Chebyshev, &mut NativeBackend);
+        let thr = exec::dlb_threaded(&plan, &x, Some(&xm1), Recurrence::Chebyshev);
+        assert_bitwise(&sim.powers, &thr.powers, "cheb dlb");
+        assert_eq!(sim.comm, thr.comm);
+    }
+}
+
+#[test]
+fn dispatcher_agrees_across_executors_for_all_variants() {
+    use dlb_mpk::exec::ExecutorKind;
+    use dlb_mpk::mpk::MpkVariant;
+    let a = gen::stencil_2d_5pt(10, 10);
+    let x = test_vector(a.n_rows());
+    let part = partition(&a, 3, Method::Block);
+    let d = DistMatrix::build(&a, &part);
+    for variant in [
+        MpkVariant::Trad,
+        MpkVariant::Ca,
+        MpkVariant::Dlb { cache_bytes: 8 << 10 },
+    ] {
+        let sim = exec::run(&d, &x, 3, variant, ExecutorKind::Sim);
+        let thr = exec::run(&d, &x, 3, variant, ExecutorKind::Threads { n: 0 });
+        assert_bitwise(&sim.powers, &thr.powers, &format!("dispatch {variant:?}"));
+        assert_eq!(sim.comm, thr.comm, "dispatch {variant:?}");
+    }
+}
+
+/// Proptest-style sweep: for random symmetric banded matrices and rank
+/// counts, one threaded halo exchange must deliver the owner's value of
+/// every `SendPlan` row to the matching halo slot exactly once — message
+/// and byte counts equal the plan totals exactly (duplicates would trip
+/// the ThreadComm pending-queue assertion and inflate the counters).
+#[test]
+fn threaded_exchange_delivers_every_send_plan_row_exactly_once() {
+    let mut rng = Rng::new(0xD15C0);
+    for case in 0..25 {
+        let n = rng.range(20, 260);
+        let nnzr = rng.range(3, 9);
+        let band = rng.range(2, 1 + n / 3);
+        let a = gen::random_banded_sym(n, nnzr, band, rng.next_u64());
+        let np = rng.range(1, 8);
+        let part = partition(&a, np, Method::Block);
+        let d = DistMatrix::build(&a, &part);
+        // unique sentinel per global row
+        let x: Vec<f64> = (0..n).map(|g| 1.0 + g as f64).collect();
+        let xs = d.scatter(&x);
+
+        let comms = thread_comms(d.n_ranks());
+        let outs: Vec<(Vec<f64>, CommStats)> = std::thread::scope(|s| {
+            let joins: Vec<_> = comms
+                .into_iter()
+                .zip(&d.ranks)
+                .zip(xs)
+                .map(|((mut c, r), mut xv)| {
+                    s.spawn(move || {
+                        c.exchange(r, 0, &mut xv);
+                        let st = c.stats().clone();
+                        (xv, st)
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().expect("rank panicked")).collect()
+        });
+
+        let mut delivered = 0usize;
+        for (r, (xv, _)) in d.ranks.iter().zip(&outs) {
+            for (slot, &g) in r.halo_globals.iter().enumerate() {
+                assert_eq!(
+                    xv[r.n_local() + slot],
+                    x[g],
+                    "case {case}: rank {} halo slot {slot} (global {g})",
+                    r.rank
+                );
+                delivered += 1;
+            }
+        }
+        assert_eq!(delivered, d.total_halo(), "case {case}");
+
+        let per_rank: Vec<CommStats> = outs.iter().map(|(_, s)| s.clone()).collect();
+        let merged = merge_rank_stats(&per_rank);
+        let planned_msgs: usize = d.ranks.iter().map(|r| r.recv.len()).sum();
+        let planned_rows: usize = d.ranks.iter().flat_map(|r| &r.send).map(|sp| sp.rows.len()).sum();
+        assert_eq!(merged.messages, planned_msgs, "case {case}: one message per plan");
+        assert_eq!(merged.bytes, planned_rows * 8, "case {case}: every row exactly once");
+        assert_eq!(merged.rounds, 1, "case {case}");
+    }
+}
