@@ -7,16 +7,34 @@
 //! (DESIGN.md §Substitutions). Expected shape: O_MPI constant in p, O_DLB
 //! grows with p and ranks; nlpkkt's worse structure costs more.
 //!
+//! The measured-parallel section times the threads executor both ways —
+//! spawn-per-sweep (`exec::trad_threaded`/`dlb_threaded`) vs the engine's
+//! persistent rank pool — and writes the results to `BENCH_fig10.json`
+//! (variant, ranks, mode, median seconds) so the perf trajectory is
+//! machine-readable across PRs.
+//!
 //! Run: `cargo bench --bench fig10_strong_scaling`
 
 use dlb_mpk::distsim::costmodel::halo_traffic;
 use dlb_mpk::distsim::{CommCostModel, DistMatrix};
-use dlb_mpk::exec;
+use dlb_mpk::engine::{MpkEngine, Variant};
+use dlb_mpk::exec::{self, ExecutorKind};
 use dlb_mpk::matrix::gen;
 use dlb_mpk::mpk::dlb::{self, DlbOptions, Recurrence};
-use dlb_mpk::mpk::{overheads, trad_mpk, NativeBackend};
+use dlb_mpk::mpk::{overheads, NativeBackend};
 use dlb_mpk::partition::{partition, Method};
 use dlb_mpk::perf::{median_time, roofline};
+
+/// One machine-readable measurement row of the measured-parallel section.
+struct Rec {
+    matrix: String,
+    variant: &'static str,
+    ranks: usize,
+    /// `spawn` = one OS thread per rank spawned per sweep;
+    /// `pool` = the engine's persistent rank pool (spawned once).
+    mode: &'static str,
+    median_s: f64,
+}
 
 fn main() {
     let fast = std::env::var("DLB_BENCH_FAST").is_ok();
@@ -80,68 +98,108 @@ fn main() {
             }
         }
     }
-    measured_parallel(&matrices, if fast { vec![1, 2, 4] } else { vec![1, 2, 4, 8] }, reps);
+    let mut recs = Vec::new();
+    measured_parallel(
+        &matrices,
+        if fast { vec![1, 2, 4] } else { vec![1, 2, 4, 8] },
+        reps,
+        &mut recs,
+    );
+    match write_json(&recs) {
+        Ok(path) => println!("\nwrote {} measurement rows to {path}", recs.len()),
+        Err(e) => eprintln!("\nfailed to write BENCH_fig10.json: {e}"),
+    }
 
     println!("\n(paper Fig. 10: ε ≥ 1 intra-node from added cache; O_MPI identical");
     println!(" for p = 4 and 6; O_DLB larger at p = 6; nlpkkt structure worse)");
 }
 
-/// Measured-parallel mode: true wall-clock of the threaded executor (one
-/// OS thread per rank, real channel halo exchange), TRAD vs DLB over
-/// 1..N threads — no cost model, just elapsed time.
+/// Measured-parallel mode: true wall-clock of the threads executor, TRAD vs
+/// DLB over 1..N ranks, spawn-per-sweep vs the engine's persistent rank
+/// pool — no cost model, just elapsed time.
 fn measured_parallel(
     matrices: &[(&str, dlb_mpk::matrix::CsrMatrix)],
     ranks: Vec<usize>,
     reps: usize,
+    recs: &mut Vec<Rec>,
 ) {
     let p_m = 4;
     for (name, a) in matrices {
         println!("\n# Measured parallel wall-clock (threads executor), {name}, p_m = {p_m}");
         println!(
-            "{:>7} {:>12} {:>12} {:>10} {:>10} {:>9}",
-            "threads", "T_trad_s", "T_dlb_s", "S_trad", "S_dlb", "dlb/trad"
+            "{:>7} {:>12} {:>12} {:>12} {:>12} {:>11}",
+            "threads", "trad_spawn", "trad_pool", "dlb_spawn", "dlb_pool", "pool/spawn"
         );
         let x = vec![1.0; a.n_rows()];
-        let (mut t_trad1, mut t_dlb1) = (0.0f64, 0.0f64);
         for &np in &ranks {
             let part = partition(a, np, Method::RecursiveBisect);
             let dist = DistMatrix::build(a, &part);
             let opts = DlbOptions { cache_bytes: 8 << 20, s_m: 50 };
             let plan = dlb::plan(&dist, p_m, &opts);
-            let t_trad = if np == 1 {
-                // single rank: the sequential kernel IS the measured run
-                // (no channel/barrier overhead in the baseline)
-                median_time(reps, || {
-                    trad_mpk(&dist, &x, p_m, &mut NativeBackend);
-                })
-            } else {
-                median_time(reps, || {
-                    exec::trad_threaded(&dist, &x, None, p_m, Recurrence::Power);
-                })
-            };
-            let t_dlb = if np == 1 {
-                median_time(reps, || {
-                    dlb::execute(&plan, &x, &mut NativeBackend);
-                })
-            } else {
-                median_time(reps, || {
-                    exec::dlb_threaded(&plan, &x, None, Recurrence::Power);
-                })
-            };
-            if np == 1 {
-                t_trad1 = t_trad.median_s;
-                t_dlb1 = t_dlb.median_s;
-            }
+
+            // spawn-per-sweep: every rep pays n_ranks thread spawns + joins
+            let t_trad_spawn = median_time(reps, || {
+                exec::trad_threaded(&dist, &x, None, p_m, Recurrence::Power);
+            });
+            let t_dlb_spawn = median_time(reps, || {
+                exec::dlb_threaded(&plan, &x, None, Recurrence::Power);
+            });
+
+            // persistent pool: threads spawned once at engine build
+            let mut trad_eng = MpkEngine::builder(&dist)
+                .p_m(p_m)
+                .variant(Variant::Trad)
+                .executor(ExecutorKind::Threads { n: 0 })
+                .build()
+                .expect("engine builds");
+            let t_trad_pool = median_time(reps, || {
+                trad_eng.sweep(&x, None, Recurrence::Power);
+            });
+            let mut dlb_eng = MpkEngine::builder(&dist)
+                .p_m(p_m)
+                .variant(Variant::Dlb(opts))
+                .executor(ExecutorKind::Threads { n: 0 })
+                .build()
+                .expect("engine builds");
+            let t_dlb_pool = median_time(reps, || {
+                dlb_eng.sweep(&x, None, Recurrence::Power);
+            });
+
             println!(
-                "{np:>7} {:>12.4} {:>12.4} {:>9.2}x {:>9.2}x {:>8.2}x",
-                t_trad.median_s,
-                t_dlb.median_s,
-                t_trad1 / t_trad.median_s,
-                t_dlb1 / t_dlb.median_s,
-                t_trad.median_s / t_dlb.median_s,
+                "{np:>7} {:>12.4} {:>12.4} {:>12.4} {:>12.4} {:>10.2}x",
+                t_trad_spawn.median_s,
+                t_trad_pool.median_s,
+                t_dlb_spawn.median_s,
+                t_dlb_pool.median_s,
+                t_dlb_spawn.median_s / t_dlb_pool.median_s,
             );
+            for (variant, mode, t) in [
+                ("trad", "spawn", t_trad_spawn.median_s),
+                ("trad", "pool", t_trad_pool.median_s),
+                ("dlb", "spawn", t_dlb_spawn.median_s),
+                ("dlb", "pool", t_dlb_pool.median_s),
+            ] {
+                recs.push(Rec { matrix: name.to_string(), variant, ranks: np, mode, median_s: t });
+            }
         }
     }
-    println!("\n(S_* = wall-clock speed-up over 1 thread; dlb/trad = measured DLB");
-    println!(" advantage at the same thread count — comm overlapped with the wavefront)");
+    println!("\n(pool/spawn = DLB spawn-per-sweep time over persistent-pool time at the");
+    println!(" same rank count — the pool amortizes thread/comm setup across sweeps)");
+}
+
+/// Emit the measured rows as `BENCH_fig10.json` so the perf trajectory is
+/// machine-comparable across PRs.
+fn write_json(recs: &[Rec]) -> std::io::Result<&'static str> {
+    let mut s = String::from("{\n  \"bench\": \"fig10\",\n  \"p_m\": 4,\n  \"results\": [\n");
+    for (i, r) in recs.iter().enumerate() {
+        let sep = if i + 1 < recs.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"matrix\": \"{}\", \"variant\": \"{}\", \"ranks\": {}, \"mode\": \"{}\", \"median_s\": {}}}{sep}\n",
+            r.matrix, r.variant, r.ranks, r.mode, r.median_s
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    let path = "BENCH_fig10.json";
+    std::fs::write(path, s)?;
+    Ok(path)
 }

@@ -8,11 +8,12 @@
 //!
 //! Run: `cargo bench --bench fig12_weak_scaling`
 
-use dlb_mpk::apps::chebyshev::{wave_packet, ChebyshevConfig, ChebyshevPropagator, Engine};
+use dlb_mpk::apps::chebyshev::{wave_packet, ChebyshevConfig, ChebyshevPropagator};
 use dlb_mpk::distsim::DistMatrix;
+use dlb_mpk::engine::{EngineConfig, Variant};
 use dlb_mpk::matrix::anderson::{anderson, weak_scaling_configs};
 use dlb_mpk::mpk::dlb::DlbOptions;
-use dlb_mpk::mpk::{overheads, NativeBackend};
+use dlb_mpk::mpk::overheads;
 use dlb_mpk::partition::{partition, Method};
 use dlb_mpk::perf::median_time;
 use std::f64::consts::FRAC_PI_2;
@@ -40,16 +41,19 @@ fn main() {
         let psi0 = wave_packet(cfg, base_l as f64 / 6.0, [FRAC_PI_2, 0.0, 0.0]);
 
         let mut times = [0.0f64; 2];
-        for (i, engine) in [Engine::Trad, Engine::Dlb].into_iter().enumerate() {
+        let variants = [
+            Variant::Trad,
+            Variant::Dlb(DlbOptions { cache_bytes: 8 << 20, s_m: 50 }),
+        ];
+        for (i, variant) in variants.into_iter().enumerate() {
             let ccfg = ChebyshevConfig {
                 dt: 0.5,
                 p_m,
-                engine,
-                dlb: DlbOptions { cache_bytes: 8 << 20, s_m: 50 },
+                engine: EngineConfig { variant, ..EngineConfig::default() },
             };
-            let mut prop = ChebyshevPropagator::new(&h, &dist, ccfg);
+            let mut prop = ChebyshevPropagator::new(&h, &dist, ccfg).expect("engine builds");
             let t = median_time(reps, || {
-                let _ = prop.step(&psi0, &mut NativeBackend);
+                let _ = prop.step(&psi0);
             });
             times[i] = t.median_s;
         }

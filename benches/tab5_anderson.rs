@@ -1,26 +1,51 @@
 //! Table 5 reproduction: the Anderson weak-scaling matrix ladder
 //! (per-domain CRS size held constant by doubling one dimension per step,
-//! innermost x last).
+//! innermost x last) — plus a measured MPK sweep per rung through a
+//! prepared `MpkEngine` on the threads executor (one rank thread per
+//! domain, persistent pool), so the ladder is exercised end-to-end rather
+//! than only sized.
 //!
 //! Run: `cargo bench --bench tab5_anderson`
 
+use dlb_mpk::distsim::DistMatrix;
+use dlb_mpk::engine::{MpkEngine, Variant};
+use dlb_mpk::exec::ExecutorKind;
 use dlb_mpk::matrix::anderson::{anderson, weak_scaling_configs};
+use dlb_mpk::mpk::dlb::{DlbOptions, Recurrence};
+use dlb_mpk::partition::{partition, Method};
+use dlb_mpk::perf::median_time;
 use dlb_mpk::util::mib;
 
 fn main() {
     let fast = std::env::var("DLB_BENCH_FAST").is_ok();
     let base_l = if fast { 16 } else { 40 };
     let domains: Vec<usize> = if fast { vec![1, 2, 4] } else { vec![1, 2, 4, 8, 16] };
+    let reps = if fast { 1 } else { 3 };
+    let p_m = 4;
     let cfgs = weak_scaling_configs(base_l, &domains, 1.0, 42);
     println!("# Table 5 (Anderson ladder, base L = {base_l}; paper base L = 160)");
     println!(
-        "{:>8} {:>16} {:>12} {:>14} {:>7} {:>9} {:>12}",
-        "domains", "(Lx,Ly,Lz)", "N_r", "N_nz", "N_nzr", "CRS MiB", "MiB/domain"
+        "{:>8} {:>16} {:>12} {:>14} {:>7} {:>9} {:>12} {:>11}",
+        "domains", "(Lx,Ly,Lz)", "N_r", "N_nz", "N_nzr", "CRS MiB", "MiB/domain", "T_dlb_s"
     );
     for (d, cfg) in domains.iter().zip(&cfgs) {
         let a = anderson(cfg);
+        // one DLB sweep per rung on the threads executor (one rank thread
+        // per domain, spawned once into the engine's pool)
+        let part = partition(&a, *d, Method::RecursiveBisect);
+        let dist = DistMatrix::build(&a, &part);
+        let mut eng = MpkEngine::builder(&dist)
+            .p_m(p_m)
+            .variant(Variant::Dlb(DlbOptions { cache_bytes: 8 << 20, s_m: 50 }))
+            .executor(ExecutorKind::Threads { n: 0 })
+            .build()
+            .expect("engine builds");
+        let x = vec![1.0; a.n_rows()];
+        let t = median_time(reps, || {
+            eng.sweep(&x, None, Recurrence::Power);
+        });
         println!(
-            "{:>8} {:>16} {:>12} {:>14} {:>7.1} {:>9} {:>12}",
+            "{:>8} {:>16} {:>12} {:>14} {:>7.1} {:>9} {:>12} {:>11.4}",
             d,
             format!("({},{},{})", cfg.lx, cfg.ly, cfg.lz),
             a.n_rows(),
@@ -28,7 +53,9 @@ fn main() {
             a.nnzr(),
             mib(a.crs_bytes()),
             mib(a.crs_bytes()) / d,
+            t.median_s,
         );
     }
-    println!("\n(paper: 342 MiB per ccNUMA domain held constant up to 64 domains)");
+    println!("\n(paper: 342 MiB per ccNUMA domain held constant up to 64 domains;");
+    println!(" T_dlb = p_m = {p_m} powers per sweep, persistent rank pool)");
 }

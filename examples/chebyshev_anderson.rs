@@ -18,13 +18,14 @@
 
 use std::f64::consts::FRAC_PI_2;
 
-use dlb_mpk::apps::chebyshev::{wave_packet, ChebyshevConfig, ChebyshevPropagator, Engine, State};
+use dlb_mpk::apps::chebyshev::{wave_packet, ChebyshevConfig, ChebyshevPropagator, State};
 use dlb_mpk::apps::observables::center_of_mass;
 use dlb_mpk::distsim::DistMatrix;
+use dlb_mpk::engine::{EngineConfig, Variant};
+use dlb_mpk::exec::ExecutorKind;
 use dlb_mpk::matrix::anderson::{anderson, AndersonConfig};
 use dlb_mpk::matrix::EllChunk;
 use dlb_mpk::mpk::dlb::DlbOptions;
-use dlb_mpk::mpk::NativeBackend;
 use dlb_mpk::partition::{partition, Method};
 use dlb_mpk::perf::median_time;
 
@@ -62,8 +63,10 @@ fn main() -> anyhow::Result<()> {
         println!("(artifacts not built; skipping XLA path — run `make artifacts`)");
     }
 
-    // Part 3 — performance: TRAD vs DLB engine on a big lattice.
-    println!("\n== Engine comparison (TRAD vs DLB) ==");
+    // Part 3 — performance: TRAD vs DLB engines on a big lattice, driven
+    // through real rank threads (the engine's persistent pool — the
+    // recurrence's thousands of sweeps reuse one set of spawned threads).
+    println!("\n== Engine comparison (TRAD vs DLB, threads executor) ==");
     let l = if fast { 48 } else { 96 };
     let acfg = AndersonConfig { lx: l * 4, ly: l / 2, lz: l / 2, w: 1.0, t: 1.0, t_perp: 1.0, seed: 7 };
     let h = anderson(&acfg);
@@ -75,21 +78,33 @@ fn main() -> anyhow::Result<()> {
     let dist = DistMatrix::build(&h, &part);
     let psi0 = wave_packet(&acfg, 6.0, [FRAC_PI_2, 0.0, 0.0]);
     let mut times = Vec::new();
-    for engine in [Engine::Trad, Engine::Dlb] {
+    let variants = [
+        ("trad", Variant::Trad),
+        ("dlb", Variant::Dlb(DlbOptions { cache_bytes: 24 << 20, s_m: 50 })),
+    ];
+    for (name, variant) in variants {
         let ccfg = ChebyshevConfig {
             dt: 0.5,
             p_m: 8,
-            engine,
-            dlb: DlbOptions { cache_bytes: 24 << 20, s_m: 50 },
+            engine: EngineConfig {
+                variant,
+                executor: ExecutorKind::Threads { n: 0 },
+                ..EngineConfig::default()
+            },
         };
-        let mut prop = ChebyshevPropagator::new(&h, &dist, ccfg);
+        let mut prop = ChebyshevPropagator::new(&h, &dist, ccfg)?;
         let mut out = State::zeros(0);
         let t = median_time(if fast { 1 } else { 3 }, || {
-            out = prop.step(&psi0, &mut NativeBackend);
+            out = prop.step(&psi0);
         });
+        let pool = prop.engine().pool_stats().expect("threads executor keeps a pool");
         println!(
-            "{:?}: {:.3}s/step ({} Chebyshev terms), norm² = {:.9}",
-            engine, t.median_s, prop.n_terms, out.norm2()
+            "{name}: {:.3}s/step ({} Chebyshev terms), norm² = {:.9}, pool {} threads / {} sweeps",
+            t.median_s,
+            prop.n_terms,
+            out.norm2(),
+            pool.threads,
+            pool.sweeps
         );
         times.push(t.median_s);
     }
@@ -105,14 +120,16 @@ fn propagate_native(cfg: &AndersonConfig, dt: f64, steps: usize) -> anyhow::Resu
     let ccfg = ChebyshevConfig {
         dt,
         p_m: 6,
-        engine: Engine::Dlb,
-        dlb: DlbOptions { cache_bytes: 8 << 20, s_m: 50 },
+        engine: EngineConfig {
+            variant: Variant::Dlb(DlbOptions { cache_bytes: 8 << 20, s_m: 50 }),
+            ..EngineConfig::default()
+        },
     };
-    let mut prop = ChebyshevPropagator::new(&h, &dist, ccfg);
+    let mut prop = ChebyshevPropagator::new(&h, &dist, ccfg)?;
     let mut psi = wave_packet(cfg, 10.0, [FRAC_PI_2, 0.0, 0.0]);
     let mut traj = Vec::with_capacity(steps);
     for _ in 0..steps {
-        psi = prop.step(&psi, &mut NativeBackend);
+        psi = prop.step(&psi);
         traj.push(center_of_mass(cfg, &psi.density())[0]);
     }
     Ok(traj)

@@ -1,18 +1,19 @@
 //! Polynomial-preconditioned CG on DLB-MPK — the solver pattern the paper's
 //! introduction motivates (CA-Krylov, Loe et al. polynomial preconditioning):
-//! every preconditioner application is one cache-blocked MPK sweep.
+//! every preconditioner application is one sweep of a prepared `MpkEngine`,
+//! and the CG loop's own `A·p` product runs through the same engine backend.
 //!
 //! Run: `cargo run --release --example poly_cg`
 
 use dlb_mpk::apps::poly_cg::{pcg, ChebyshevPreconditioner};
 use dlb_mpk::distsim::DistMatrix;
+use dlb_mpk::engine::{EngineConfig, Variant};
 use dlb_mpk::matrix::gen;
 use dlb_mpk::mpk::dlb::DlbOptions;
-use dlb_mpk::mpk::NativeBackend;
 use dlb_mpk::partition::{partition, Method};
 use dlb_mpk::perf::median_time;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let a = gen::stencil_2d_5pt(192, 192); // SPD Laplacian, 36 864 unknowns
     println!("solve A x = b: {} rows, {} nnz ({} MiB)", a.n_rows(), a.nnz(), a.crs_bytes() >> 20);
     let part = partition(&a, 4, Method::RecursiveBisect);
@@ -24,18 +25,22 @@ fn main() {
     let n = 192f64;
     let lmin = 4.0 * ((std::f64::consts::PI / (2.0 * (n + 1.0))).sin().powi(2)) * 2.0;
     let lmax = a.inf_norm();
-    let opts = DlbOptions { cache_bytes: 4 << 20, s_m: 50 };
+    let engine_cfg = EngineConfig {
+        variant: Variant::Dlb(DlbOptions { cache_bytes: 4 << 20, s_m: 50 }),
+        ..EngineConfig::default()
+    };
 
     println!("\n{:>7} {:>7} {:>10} {:>12}", "degree", "iters", "resid", "time_s");
     for degree in [1usize, 2, 4, 8, 12] {
-        let mut pre = ChebyshevPreconditioner::new(&dist, lmin, lmax, degree, true, &opts);
+        let mut pre = ChebyshevPreconditioner::new(&dist, lmin, lmax, degree, &engine_cfg)?;
         let mut result = (vec![], 0usize, 0.0f64);
         let t = median_time(1, || {
-            result = pcg(&dist, &a, &b, &mut pre, 1e-10, 2000, &mut NativeBackend);
+            result = pcg(&a, &b, &mut pre, 1e-10, 2000);
         });
         println!("{:>7} {:>7} {:>10.2e} {:>12.3}", degree, result.1, result.2, t.median_s);
     }
     println!("\n(higher-degree Chebyshev preconditioners trade SpMVs-per-apply for");
     println!(" fewer CG iterations; DLB-MPK makes the extra SpMVs nearly free by");
     println!(" keeping the matrix cache-resident across the polynomial sweep)");
+    Ok(())
 }

@@ -1,16 +1,22 @@
-//! Quickstart: the DLB-MPK public API in ~60 lines.
+//! Quickstart: the DLB-MPK public API in ~70 lines.
 //!
 //! 1. Build a sparse matrix (2D 5-point stencil).
 //! 2. Partition row-wise and distribute over simulated MPI ranks.
-//! 3. Compute y_p = A^p x for p = 1..4 with TRAD and DLB-MPK; compare.
-//! 4. Route the same SpMV through the AOT Pallas/JAX artifact via PJRT
+//! 3. Build one `MpkEngine` per variant — the prepare-once/apply-many
+//!    session object — and sweep `y_p = A^p x` for p = 1..4; compare.
+//! 4. Rebuild the DLB engine on the threads executor: same numbers, real
+//!    OS-thread ranks behind a persistent pool (spawned once, reused by
+//!    every sweep).
+//! 5. Route the same SpMV through the AOT Pallas/JAX artifact via PJRT
 //!    (the three-layer path; requires `make artifacts`).
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use dlb_mpk::distsim::DistMatrix;
+use dlb_mpk::engine::{MpkEngine, Variant};
+use dlb_mpk::exec::ExecutorKind;
 use dlb_mpk::matrix::{gen, EllChunk};
-use dlb_mpk::mpk::{self, MpkVariant};
+use dlb_mpk::mpk::dlb::{DlbOptions, Recurrence};
 use dlb_mpk::partition::{partition, Method};
 use dlb_mpk::runtime::{Runtime, XlaSpmv};
 
@@ -29,11 +35,17 @@ fn main() -> anyhow::Result<()> {
     let dist = DistMatrix::build(&a, &part);
     println!("partitioned over {} ranks, O_MPI = {:.4}", dist.n_ranks(), dist.mpi_overhead());
 
-    // Matrix power kernel: y_p = A^p x, p = 1..=4.
+    // Matrix power kernel: y_p = A^p x, p = 1..=4, via prepared engines.
+    // Building pays for planning (levels, permutation, schedule) once;
+    // every sweep after that reuses it.
     let x = vec![1.0; a.n_rows()];
     let p_m = 4;
-    let trad = mpk::run(&dist, &x, p_m, MpkVariant::Trad);
-    let dlb = mpk::run(&dist, &x, p_m, MpkVariant::Dlb { cache_bytes: 1 << 20 });
+    let dlb_opts = DlbOptions { cache_bytes: 1 << 20, s_m: 50 };
+    let mut trad_eng = MpkEngine::builder(&dist).p_m(p_m).variant(Variant::Trad).build()?;
+    let mut dlb_eng =
+        MpkEngine::builder(&dist).p_m(p_m).variant(Variant::Dlb(dlb_opts)).build()?;
+    let trad = trad_eng.sweep(&x, None, Recurrence::Power);
+    let dlb = dlb_eng.sweep(&x, None, Recurrence::Power);
 
     let max_diff: f64 = trad
         .powers
@@ -46,6 +58,22 @@ fn main() -> anyhow::Result<()> {
     println!(
         "comm: TRAD {} B in {} rounds | DLB {} B in {} rounds (identical by design)",
         trad.comm.bytes, trad.comm.rounds, dlb.comm.bytes, dlb.comm.rounds
+    );
+
+    // Same engine API on the threads executor: one OS thread per rank,
+    // parked in a persistent pool — several sweeps, one spawn.
+    let mut thr_eng = MpkEngine::builder(&dist)
+        .p_m(p_m)
+        .variant(Variant::Dlb(dlb_opts))
+        .executor(ExecutorKind::Threads { n: 0 })
+        .build()?;
+    let t1 = thr_eng.sweep(&x, None, Recurrence::Power);
+    let _t2 = thr_eng.sweep(&x, None, Recurrence::Power);
+    let pool = thr_eng.pool_stats().expect("threads executor keeps a pool");
+    assert_eq!(t1.powers, dlb.powers, "threads executor is bitwise-identical to sim");
+    println!(
+        "threads executor: {} rank threads spawned once, {} sweeps dispatched, bitwise equal to sim",
+        pool.threads, pool.sweeps
     );
 
     // Three-layer path: the same SpMV through the AOT Pallas kernel on PJRT.

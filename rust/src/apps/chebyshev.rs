@@ -6,44 +6,38 @@
 //!
 //! with `H` rescaled to spectral radius ≤ 1 (`H_s = (H − b)/a`, `z = a·δτ`),
 //! `v_{k+1} = 2 H_s v_k − v_{k−1}` (Eq. 6). The recurrence is a sequence of
-//! `M` SpMVs with the *same* matrix — exactly the shape DLB-MPK accelerates:
-//! the propagator blocks the recurrence in chunks of `p_m` steps and runs
-//! each chunk through the cache-blocked distributed wavefront.
+//! `M` SpMVs with the *same* matrix — exactly the shape
+//! [`crate::engine::MpkEngine`] amortizes: the propagator builds one engine
+//! at construction (plan, workspaces, and — under the threads executor —
+//! the persistent rank pool), then blocks the recurrence in chunks of `p_m`
+//! steps and drives each chunk through [`MpkEngine::sweep_len`]. Tail
+//! blocks (`M` not a multiple of `p_m`) hit the engine's plan cache, so
+//! thousands of time steps construct exactly two plans.
 //!
 //! The complex state is carried as two real planes (`H` is real), so one
-//! recurrence step is two SpMVs — matching the fused `cheb_step` AOT
+//! recurrence step is two sweeps — matching the fused `cheb_step` AOT
 //! artifact on the XLA path.
 
 use crate::distsim::{CommStats, DistMatrix};
+use crate::engine::{EngineConfig, MpkEngine, Variant};
 use crate::matrix::CsrMatrix;
-use crate::mpk::dlb::{self, DlbOptions, DlbPlan, Recurrence, Workspace};
-use crate::mpk::trad::trad_recurrence;
-use crate::mpk::SpmvBackend;
+use crate::mpk::dlb::Recurrence;
 
 use super::bessel::{bessel_j_array, chebyshev_terms};
 
-/// Which MPK engine drives the recurrence.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Engine {
-    /// Back-to-back SpMVs (the paper's baseline TRAD implementation).
-    Trad,
-    /// Cache-blocked DLB-MPK (the paper's contribution).
-    Dlb,
-}
-
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ChebyshevConfig {
     /// Physical time step δτ.
     pub dt: f64,
     /// Recurrence block size p_m (paper §7: p_m « M, tuned like Fig. 8).
     pub p_m: usize,
-    pub engine: Engine,
-    pub dlb: DlbOptions,
+    /// Which MPK variant/executor/backend drives the recurrence.
+    pub engine: EngineConfig,
 }
 
 impl Default for ChebyshevConfig {
     fn default() -> Self {
-        Self { dt: 0.5, p_m: 8, engine: Engine::Dlb, dlb: DlbOptions::default() }
+        Self { dt: 0.5, p_m: 8, engine: EngineConfig::default() }
     }
 }
 
@@ -82,8 +76,8 @@ impl State {
     }
 }
 
-/// The propagator: holds the rescaled Hamiltonian, the DLB plan, and the
-/// expansion coefficients.
+/// The propagator: holds the prepared [`MpkEngine`] over the rescaled
+/// Hamiltonian plus the expansion coefficients.
 pub struct ChebyshevPropagator {
     pub cfg: ChebyshevConfig,
     /// Spectral scale `a` (H_s = (H − b)/a; b = 0 for the Anderson model's
@@ -93,9 +87,7 @@ pub struct ChebyshevPropagator {
     pub n_terms: usize,
     /// `J_k(a·δτ)` for k = 0..=M.
     pub coeffs: Vec<f64>,
-    plan: DlbPlan,
-    dist_trad: DistMatrix,
-    ws: Workspace,
+    engine: MpkEngine,
     pub comm: CommStats,
 }
 
@@ -103,8 +95,14 @@ impl ChebyshevPropagator {
     /// Build from the (unscaled) Hamiltonian distributed over `dist`.
     ///
     /// `h` is consumed conceptually: the propagator re-scales a copy of the
-    /// distributed blocks by `1/a` with `a = ‖H‖_∞` (Gershgorin bound).
-    pub fn new(h: &CsrMatrix, dist: &DistMatrix, cfg: ChebyshevConfig) -> Self {
+    /// distributed blocks by `1/a` with `a = ‖H‖_∞` (Gershgorin bound) and
+    /// prepares the engine (plans, workspaces, rank pool) once.
+    pub fn new(h: &CsrMatrix, dist: &DistMatrix, cfg: ChebyshevConfig) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            !matches!(cfg.engine.variant, Variant::Ca),
+            "ChebyshevPropagator runs a three-term recurrence; the CA variant \
+             supports only plain powers — use Variant::Trad or Variant::Dlb"
+        );
         let a = h.inf_norm().max(f64::MIN_POSITIVE);
         // scale local blocks
         let mut dist = dist.clone();
@@ -114,22 +112,27 @@ impl ChebyshevPropagator {
         let z = a * cfg.dt;
         let n_terms = chebyshev_terms(z).max(cfg.p_m + 1);
         let coeffs = bessel_j_array(n_terms, z);
-        let plan = dlb::plan(&dist, cfg.p_m, &cfg.dlb);
-        Self {
+        // hand our scaled clone to the engine outright (from_config would
+        // deep-clone it again for the TRAD variant)
+        let engine = MpkEngine::from_shared(std::sync::Arc::new(dist), cfg.p_m, &cfg.engine)?;
+        Ok(Self {
             cfg,
             scale_a: a,
             n_terms,
             coeffs,
-            dist_trad: dist,
-            plan,
-            ws: Workspace::default(),
+            engine,
             comm: CommStats::default(),
-        }
+        })
+    }
+
+    /// The underlying prepared session (plan cache, pool counters).
+    pub fn engine(&self) -> &MpkEngine {
+        &self.engine
     }
 
     /// One δτ step: ψ ← e^{−iδτH_s·a} ψ (global phase e^{−iδτ·b} omitted;
     /// b = 0 here, and a global phase is unobservable anyway).
-    pub fn step(&mut self, psi: &State, backend: &mut dyn SpmvBackend) -> State {
+    pub fn step(&mut self, psi: &State) -> State {
         let n = psi.re.len();
         let mut out = State::zeros(n);
         // k = 0 term: J_0 · v_0
@@ -149,33 +152,9 @@ impl ChebyshevPropagator {
                     None => (&psi.re, &psi.im, None, None), // wind-up: v1 = H v0
                     Some(vc) => (&vc.re, &vc.im, Some(&v_prev.re), Some(&v_prev.im)),
                 };
-            let (res_re, res_im) = match self.cfg.engine {
-                Engine::Dlb => {
-                    // plans with p_m smaller than configured: rebuild cheaply
-                    let plan: &DlbPlan = if p_m == self.cfg.p_m {
-                        &self.plan
-                    } else {
-                        // tail block (rare): build a small temporary plan
-                        &dlb::plan(&self.plan.dist, p_m, &self.cfg.dlb)
-                    };
-                    let rr = dlb::execute_recurrence_with(
-                        plan, x0_re, xm1_re, Recurrence::Chebyshev, backend, &mut self.ws,
-                    );
-                    let ri = dlb::execute_recurrence_with(
-                        plan, x0_im, xm1_im, Recurrence::Chebyshev, backend, &mut self.ws,
-                    );
-                    (rr, ri)
-                }
-                Engine::Trad => {
-                    let rr = trad_recurrence(
-                        &self.dist_trad, x0_re, xm1_re, p_m, Recurrence::Chebyshev, backend,
-                    );
-                    let ri = trad_recurrence(
-                        &self.dist_trad, x0_im, xm1_im, p_m, Recurrence::Chebyshev, backend,
-                    );
-                    (rr, ri)
-                }
-            };
+            // tail blocks (p_m < planned) reuse the engine's cached plans
+            let res_re = self.engine.sweep_len(p_m, x0_re, xm1_re, Recurrence::Chebyshev);
+            let res_im = self.engine.sweep_len(p_m, x0_im, xm1_im, Recurrence::Chebyshev);
             self.comm.merge(&res_re.comm);
             self.comm.merge(&res_im.comm);
 
@@ -225,10 +204,10 @@ impl ChebyshevPropagator {
     }
 
     /// Propagate `steps` time steps.
-    pub fn propagate(&mut self, psi: &State, steps: usize, backend: &mut dyn SpmvBackend) -> State {
+    pub fn propagate(&mut self, psi: &State, steps: usize) -> State {
         let mut cur = psi.clone();
         for _ in 0..steps {
-            cur = self.step(&cur, backend);
+            cur = self.step(&cur);
         }
         cur
     }
@@ -268,40 +247,87 @@ mod tests {
     use super::*;
     use crate::matrix::anderson::{anderson, AndersonConfig};
     use crate::matrix::gen;
-    use crate::mpk::NativeBackend;
+    use crate::mpk::dlb::DlbOptions;
     use crate::partition::{partition, Method};
 
-    fn propagate(engine: Engine, np: usize, steps: usize) -> (State, State) {
+    fn engine_cfg(variant: Variant) -> EngineConfig {
+        EngineConfig { variant, ..EngineConfig::default() }
+    }
+
+    fn propagate(variant: Variant, np: usize, steps: usize) -> (State, State) {
         let cfg = AndersonConfig::isotropic(8, 1.0, 11);
         let h = anderson(&cfg);
         let part = partition(&h, np, Method::Block);
         let dist = DistMatrix::build(&h, &part);
-        let ccfg = ChebyshevConfig {
-            dt: 0.4,
-            p_m: 4,
-            engine,
-            dlb: DlbOptions { cache_bytes: 64 << 10, s_m: 50 },
-        };
-        let mut prop = ChebyshevPropagator::new(&h, &dist, ccfg);
+        let ccfg = ChebyshevConfig { dt: 0.4, p_m: 4, engine: engine_cfg(variant) };
+        let mut prop = ChebyshevPropagator::new(&h, &dist, ccfg).unwrap();
         let psi0 = wave_packet(&cfg, 2.0, [std::f64::consts::FRAC_PI_2, 0.0, 0.0]);
-        let psi = prop.propagate(&psi0, steps, &mut NativeBackend);
+        let psi = prop.propagate(&psi0, steps);
         (psi0, psi)
+    }
+
+    fn dlb_small() -> Variant {
+        Variant::Dlb(DlbOptions { cache_bytes: 64 << 10, s_m: 50 })
     }
 
     #[test]
     fn unitarity_norm_conserved() {
-        let (psi0, psi) = propagate(Engine::Dlb, 2, 3);
+        let (psi0, psi) = propagate(dlb_small(), 2, 3);
         assert!((psi0.norm2() - 1.0).abs() < 1e-12);
         assert!((psi.norm2() - 1.0).abs() < 1e-9, "norm² = {}", psi.norm2());
     }
 
     #[test]
-    fn dlb_and_trad_engines_agree() {
-        let (_, a) = propagate(Engine::Dlb, 3, 2);
-        let (_, b) = propagate(Engine::Trad, 3, 2);
+    fn ca_variant_rejected_at_build() {
+        let cfg = AndersonConfig::isotropic(4, 1.0, 1);
+        let h = anderson(&cfg);
+        let part = partition(&h, 1, Method::Block);
+        let dist = DistMatrix::build(&h, &part);
+        let ccfg = ChebyshevConfig { dt: 0.4, p_m: 2, engine: engine_cfg(Variant::Ca) };
+        assert!(
+            ChebyshevPropagator::new(&h, &dist, ccfg).is_err(),
+            "CA cannot drive the Chebyshev recurrence and must fail at build"
+        );
+    }
+
+    #[test]
+    fn dlb_and_trad_variants_agree() {
+        let (_, a) = propagate(dlb_small(), 3, 2);
+        let (_, b) = propagate(Variant::Trad, 3, 2);
         for (u, v) in a.re.iter().zip(&b.re).chain(a.im.iter().zip(&b.im)) {
             assert!((u - v).abs() < 1e-10, "{u} vs {v}");
         }
+    }
+
+    #[test]
+    fn tail_plans_cached_across_steps() {
+        // n_terms not a multiple of p_m: every step runs full blocks plus
+        // one tail block. The engine must build exactly two plans (primary
+        // + tail) no matter how many steps run.
+        let cfg = AndersonConfig::isotropic(6, 1.0, 3);
+        let h = anderson(&cfg);
+        let part = partition(&h, 2, Method::Block);
+        let dist = DistMatrix::build(&h, &part);
+        let ccfg = ChebyshevConfig {
+            dt: 0.4,
+            p_m: 4,
+            engine: engine_cfg(Variant::Dlb(DlbOptions { cache_bytes: 32 << 10, s_m: 50 })),
+        };
+        let mut prop = ChebyshevPropagator::new(&h, &dist, ccfg).unwrap();
+        let tail = prop.n_terms % prop.cfg.p_m;
+        let psi0 = wave_packet(&cfg, 2.0, [0.3, 0.0, 0.0]);
+        let _ = prop.propagate(&psi0, 3);
+        let want_plans = if tail == 0 { 1 } else { 2 };
+        assert_eq!(
+            prop.engine().plans_built(),
+            want_plans,
+            "tail plans must be cached, not rebuilt per step (n_terms = {}, p_m = {})",
+            prop.n_terms,
+            prop.cfg.p_m
+        );
+        // every block of every plane of every step went through the engine
+        let blocks_per_plane = prop.n_terms.div_ceil(prop.cfg.p_m);
+        assert_eq!(prop.engine().sweeps_run(), 3 * 2 * blocks_per_plane);
     }
 
     #[test]
@@ -317,11 +343,15 @@ mod tests {
         let psi0 = wave_packet(&cfg, 3.0, [1.0, 0.0, 0.0]);
 
         // one full step vs two half steps must agree (semigroup property)
-        let mk = |dt: f64| ChebyshevConfig { dt, p_m: 3, engine: Engine::Dlb, dlb: DlbOptions { cache_bytes: 1 << 20, s_m: 50 } };
-        let mut full = ChebyshevPropagator::new(&h, &dist, mk(0.6));
-        let mut half = ChebyshevPropagator::new(&h, &dist, mk(0.3));
-        let a = full.propagate(&psi0, 1, &mut NativeBackend);
-        let b = half.propagate(&psi0, 2, &mut NativeBackend);
+        let mk = |dt: f64| ChebyshevConfig {
+            dt,
+            p_m: 3,
+            engine: engine_cfg(Variant::Dlb(DlbOptions { cache_bytes: 1 << 20, s_m: 50 })),
+        };
+        let mut full = ChebyshevPropagator::new(&h, &dist, mk(0.6)).unwrap();
+        let mut half = ChebyshevPropagator::new(&h, &dist, mk(0.3)).unwrap();
+        let a = full.propagate(&psi0, 1);
+        let b = half.propagate(&psi0, 2);
         for (u, v) in a.re.iter().zip(&b.re).chain(a.im.iter().zip(&b.im)) {
             assert!((u - v).abs() < 1e-9, "{u} vs {v}");
         }
@@ -341,11 +371,12 @@ mod tests {
         let mut prop = ChebyshevPropagator::new(
             &h,
             &dist,
-            ChebyshevConfig { dt: 0.7, p_m: 2, engine: Engine::Trad, dlb: DlbOptions::default() },
-        );
+            ChebyshevConfig { dt: 0.7, p_m: 2, engine: engine_cfg(Variant::Trad) },
+        )
+        .unwrap();
         let s = 1.0 / 2.0f64.sqrt();
         let psi = State { re: vec![s, s], im: vec![0.0, 0.0] };
-        let out = prop.step(&psi, &mut NativeBackend);
+        let out = prop.step(&psi);
         let d = out.density();
         assert!((d[0] - 0.5).abs() < 1e-10 && (d[1] - 0.5).abs() < 1e-10);
         // eigenvalue −1: phase e^{+i·0.7}

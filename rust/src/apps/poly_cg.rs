@@ -3,15 +3,19 @@
 //! CA-Krylov; Loe et al. 2020 polynomial-preconditioned GMRES in Trilinos).
 //!
 //! The preconditioner application `z = q(A) r` is a fixed sequence of
-//! back-to-back SpMVs with the same matrix — exactly an MPK — so DLB-MPK
-//! accelerates it directly: one cache-blocked `y_p = T_p(Â) r` sweep per
-//! apply, where `T_p` are Chebyshev polynomials matched to the spectral
-//! interval `[λ_min, λ_max]` (the classical Chebyshev preconditioner, e.g.
-//! Saad, *Iterative Methods*, §12.3).
+//! back-to-back SpMVs with the same matrix — exactly an MPK — so the
+//! preconditioner owns a prepared [`crate::engine::MpkEngine`] and runs
+//! one sweep `y_p = T_p(Â) r` per apply, where `T_p` are Chebyshev
+//! polynomials matched to the spectral interval `[λ_min, λ_max]` (the
+//! classical Chebyshev preconditioner, e.g. Saad, *Iterative Methods*,
+//! §12.3). Every knob — DLB vs TRAD variant, sim vs threads executor,
+//! SpMV backend — comes from the engine config, and the CG loop's own
+//! `A·p` product runs through the same engine backend so the *whole*
+//! solver honors one configuration.
 
 use crate::distsim::DistMatrix;
-use crate::mpk::dlb::{self, DlbOptions, DlbPlan, Recurrence, Workspace};
-use crate::mpk::trad::trad_recurrence;
+use crate::engine::{EngineConfig, MpkEngine};
+use crate::mpk::dlb::Recurrence;
 use crate::mpk::SpmvBackend;
 
 /// Chebyshev polynomial preconditioner of degree `degree` on `[lmin, lmax]`.
@@ -21,9 +25,7 @@ pub struct ChebyshevPreconditioner {
     theta: f64,
     delta: f64,
     pub degree: usize,
-    plan: DlbPlan,
-    ws: Workspace,
-    use_dlb: bool,
+    engine: MpkEngine,
 }
 
 impl ChebyshevPreconditioner {
@@ -34,42 +36,43 @@ impl ChebyshevPreconditioner {
         lmin: f64,
         lmax: f64,
         degree: usize,
-        use_dlb: bool,
-        opts: &DlbOptions,
-    ) -> Self {
-        assert!(degree >= 1 && lmax > lmin && lmin > 0.0);
-        let plan = dlb::plan(dist, degree, opts);
-        Self {
+        engine: &EngineConfig,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(degree >= 1 && lmax > lmin && lmin > 0.0, "need 0 < lmin < lmax, degree >= 1");
+        let engine = MpkEngine::from_config(dist, degree, engine)?;
+        Ok(Self {
             theta: 0.5 * (lmax + lmin),
             delta: 0.5 * (lmax - lmin),
             degree,
-            plan,
-            ws: Workspace::default(),
-            use_dlb,
-        }
+            engine,
+        })
+    }
+
+    /// The underlying prepared session (plan cache, pool counters).
+    pub fn engine(&self) -> &MpkEngine {
+        &self.engine
+    }
+
+    /// The engine's host backend — used by [`pcg`] for the CG loop's own
+    /// `A·p` product so the full solver honors the configured backend.
+    pub fn backend(&mut self) -> &mut dyn SpmvBackend {
+        self.engine.backend()
     }
 
     /// Apply `z ≈ A⁻¹ r` via the degree-`m` Chebyshev iteration, implemented
-    /// as one MPK-style recurrence sweep (all SpMVs cache-blocked by DLB).
+    /// as one MPK-style engine sweep (all SpMVs cache-blocked under the DLB
+    /// variant).
     ///
     /// Uses the standard Chebyshev semi-iteration: `z_m` is the m-th
     /// Chebyshev-accelerated Richardson iterate for `A z = r`, `z_0 = 0`.
-    pub fn apply(&mut self, r: &[f64], backend: &mut dyn SpmvBackend) -> Vec<f64> {
+    pub fn apply(&mut self, r: &[f64]) -> Vec<f64> {
         // Chebyshev semi-iteration needs A·z_k each step. z_k evolves, so we
         // express it through the shifted recurrence on the residual basis:
-        // run the MPK recurrence y_p = A y_{p-1} on r (DLB-blocked), then
-        // combine the Krylov vectors with the Chebyshev-iteration weights —
-        // mathematically identical to the textbook loop, but all matrix
-        // touches happen inside one cache-blocked sweep.
-        let powers = if self.use_dlb {
-            dlb::execute_recurrence_with(
-                &self.plan, r, None, Recurrence::Power, backend, &mut self.ws,
-            )
-            .powers
-        } else {
-            trad_recurrence(&self.plan.dist, r, None, self.degree, Recurrence::Power, backend)
-                .powers
-        };
+        // run the MPK recurrence y_p = A y_{p-1} on r (one engine sweep),
+        // then combine the Krylov vectors with the Chebyshev-iteration
+        // weights — mathematically identical to the textbook loop, but all
+        // matrix touches happen inside one prepared sweep.
+        let powers = self.engine.sweep(r, None, Recurrence::Power).powers;
 
         // Build q(A) r from the monomial Krylov basis {r, Ar, ..., A^m r}.
         // The textbook Chebyshev iteration (Saad, Alg. 12.1; z_0 = 0):
@@ -79,7 +82,7 @@ impl ChebyshevPreconditioner {
         //   z_{k+1} = z_k + d_k
         // run here on *polynomial coefficients* in λ (length m+1): applying
         // the resulting z_m(A) to r is identical to the vector loop, but all
-        // A-multiplies happened in the single cache-blocked sweep above.
+        // A-multiplies happened in the single engine sweep above.
         let m = self.degree;
         let sigma1 = self.theta / self.delta;
         let mut rho_prev = 1.0 / sigma1;
@@ -122,26 +125,27 @@ impl ChebyshevPreconditioner {
 }
 
 /// Preconditioned CG. Returns (solution, iterations, final residual norm).
+///
+/// The matrix-vector product `A·p` of the CG loop itself runs through the
+/// preconditioner engine's backend, so the entire solver — sweeps and
+/// ancillary SpMVs alike — honors the configured `BackendSpec`.
 pub fn pcg(
-    dist: &DistMatrix,
     a_global: &crate::matrix::CsrMatrix,
     b: &[f64],
     precond: &mut ChebyshevPreconditioner,
     tol: f64,
     max_iter: usize,
-    backend: &mut dyn SpmvBackend,
 ) -> (Vec<f64>, usize, f64) {
     let n = b.len();
-    let _ = dist;
     let mut x = vec![0.0; n];
     let mut r = b.to_vec();
-    let mut z = precond.apply(&r, backend);
+    let mut z = precond.apply(&r);
     let mut p = z.clone();
     let mut rz = dot(&r, &z);
     let b_norm = dot(b, b).sqrt().max(f64::MIN_POSITIVE);
     let mut ap = vec![0.0; n];
     for it in 0..max_iter {
-        a_global.spmv(&p, &mut ap);
+        precond.backend().spmv_range(a_global, 0, n, &p, &mut ap);
         let alpha = rz / dot(&p, &ap);
         for i in 0..n {
             x[i] += alpha * p[i];
@@ -151,7 +155,7 @@ pub fn pcg(
         if rn / b_norm < tol {
             return (x, it + 1, rn);
         }
-        z = precond.apply(&r, backend);
+        z = precond.apply(&r);
         let rz_new = dot(&r, &z);
         let beta = rz_new / rz;
         rz = rz_new;
@@ -170,8 +174,9 @@ fn dot(a: &[f64], b: &[f64]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::Variant;
     use crate::matrix::gen;
-    use crate::mpk::NativeBackend;
+    use crate::mpk::dlb::DlbOptions;
     use crate::partition::{partition, Method};
 
     fn setup(n: usize) -> (crate::matrix::CsrMatrix, DistMatrix, f64) {
@@ -183,15 +188,21 @@ mod tests {
         (a, d, lmin)
     }
 
+    fn dlb_cfg(cache_bytes: usize) -> EngineConfig {
+        EngineConfig {
+            variant: Variant::Dlb(DlbOptions { cache_bytes, s_m: 50 }),
+            ..EngineConfig::default()
+        }
+    }
+
     #[test]
     fn pcg_converges_on_laplacian() {
         let (a, d, lmin) = setup(24);
         let b = vec![1.0; a.n_rows()];
         let lmax = a.inf_norm();
-        let mut pre = ChebyshevPreconditioner::new(
-            &d, lmin, lmax, 6, true, &DlbOptions { cache_bytes: 1 << 20, s_m: 50 },
-        );
-        let (x, iters, rn) = pcg(&d, &a, &b, &mut pre, 1e-10, 300, &mut NativeBackend);
+        let mut pre =
+            ChebyshevPreconditioner::new(&d, lmin, lmax, 6, &dlb_cfg(1 << 20)).unwrap();
+        let (x, iters, rn) = pcg(&a, &b, &mut pre, 1e-10, 300);
         assert!(rn / (b.len() as f64).sqrt() < 1e-9, "residual {rn}");
         // verify the solution directly
         let mut ax = vec![0.0; b.len()];
@@ -207,11 +218,11 @@ mod tests {
         let (a, d, lmin) = setup(24);
         let b: Vec<f64> = (0..a.n_rows()).map(|i| ((i % 11) as f64) - 5.0).collect();
         let lmax = a.inf_norm();
-        let opts = DlbOptions { cache_bytes: 1 << 20, s_m: 50 };
-        let mut weak = ChebyshevPreconditioner::new(&d, lmin, lmax, 1, true, &opts);
-        let mut strong = ChebyshevPreconditioner::new(&d, lmin, lmax, 8, true, &opts);
-        let (_, it_weak, _) = pcg(&d, &a, &b, &mut weak, 1e-8, 500, &mut NativeBackend);
-        let (_, it_strong, _) = pcg(&d, &a, &b, &mut strong, 1e-8, 500, &mut NativeBackend);
+        let mut weak = ChebyshevPreconditioner::new(&d, lmin, lmax, 1, &dlb_cfg(1 << 20)).unwrap();
+        let mut strong =
+            ChebyshevPreconditioner::new(&d, lmin, lmax, 8, &dlb_cfg(1 << 20)).unwrap();
+        let (_, it_weak, _) = pcg(&a, &b, &mut weak, 1e-8, 500);
+        let (_, it_strong, _) = pcg(&a, &b, &mut strong, 1e-8, 500);
         assert!(
             it_strong < it_weak,
             "degree-8 {it_strong} should beat degree-1 {it_weak}"
@@ -223,11 +234,11 @@ mod tests {
         let (a, d, lmin) = setup(16);
         let r: Vec<f64> = (0..256).map(|i| (i as f64 * 0.3).sin()).collect();
         let lmax = a.inf_norm();
-        let opts = DlbOptions { cache_bytes: 8 << 10, s_m: 50 };
-        let mut pd = ChebyshevPreconditioner::new(&d, lmin, lmax, 5, true, &opts);
-        let mut pt = ChebyshevPreconditioner::new(&d, lmin, lmax, 5, false, &opts);
-        let zd = pd.apply(&r, &mut NativeBackend);
-        let zt = pt.apply(&r, &mut NativeBackend);
+        let trad_cfg = EngineConfig { variant: Variant::Trad, ..EngineConfig::default() };
+        let mut pd = ChebyshevPreconditioner::new(&d, lmin, lmax, 5, &dlb_cfg(8 << 10)).unwrap();
+        let mut pt = ChebyshevPreconditioner::new(&d, lmin, lmax, 5, &trad_cfg).unwrap();
+        let zd = pd.apply(&r);
+        let zt = pt.apply(&r);
         for (u, v) in zd.iter().zip(&zt) {
             assert!((u - v).abs() < 1e-10 * (1.0 + v.abs()));
         }

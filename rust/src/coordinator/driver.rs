@@ -1,11 +1,17 @@
-//! The experiment pipeline: matrix → partition → distribute → MPK → report.
+//! The experiment pipeline: matrix → partition → distribute → engine →
+//! report. All variant/executor dispatch goes through
+//! [`crate::engine::MpkEngine`] — one prepared session per variant, timed
+//! over repeated sweeps (which is exactly the engine's design point:
+//! setup once, sweep many).
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::distsim::DistMatrix;
-use crate::exec::{self, ExecutorKind};
-use crate::mpk::dlb::{self, DlbOptions, Recurrence};
-use crate::mpk::{ca, trad_mpk, MpkResult, NativeBackend};
+use crate::engine::{BackendSpec, EngineConfig, MpkEngine, Variant};
+use crate::mpk::dlb::{DlbOptions, Recurrence};
+use crate::mpk::MpkResult;
 use crate::partition::partition;
 use crate::perf::{median_time, roofline};
 use crate::util::mib;
@@ -23,41 +29,40 @@ pub struct RunOutput {
 
 /// Execute TRAD and DLB (and validate) per `cfg`, timing both under the
 /// configured executor (`sim` counts exactly; `threads` measures real
-/// parallel wall-clock).
+/// parallel wall-clock over the engine's persistent rank pool).
 pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
     let a = cfg.matrix.build()?;
     // `threads(n)` with nonzero n sets the rank count directly
     let n_ranks = cfg.executor.ranks(cfg.n_ranks);
     let part = partition(&a, n_ranks, cfg.partitioner);
-    let dist = DistMatrix::build(&a, &part);
+    // One shared matrix: the TRAD engine reuses this Arc outright, the DLB
+    // engine derives its own level-permuted clone from it.
+    let dist = Arc::new(DistMatrix::build(&a, &part));
     let x: Vec<f64> = (0..a.n_rows())
         .map(|i| 1.0 + ((i * 2654435761) % 1000) as f64 / 1000.0)
         .collect();
 
     let opts = DlbOptions { cache_bytes: cfg.cache_bytes, s_m: cfg.s_m };
-    let plan = dlb::plan(&dist, cfg.p_m, &opts);
-    let o_dlb = crate::mpk::overheads::dlb_overhead_from_plan(&plan);
+    let mk_cfg = |variant: Variant| EngineConfig {
+        variant,
+        executor: cfg.executor,
+        backend: BackendSpec::Native,
+    };
+    let mut trad_eng = MpkEngine::from_shared(dist.clone(), cfg.p_m, &mk_cfg(Variant::Trad))?;
+    let mut dlb_eng = MpkEngine::from_shared(dist.clone(), cfg.p_m, &mk_cfg(Variant::Dlb(opts)))?;
+    let o_dlb = dlb_eng.dlb_overhead().expect("DLB engine has a primary plan");
     let o_mpi = dist.mpi_overhead();
 
-    // timed runs
-    let threaded = matches!(cfg.executor, ExecutorKind::Threads { .. });
+    // timed runs (sweep-many over the prepared engines)
     let mut trad_out = None;
     let t_trad = median_time(cfg.reps, || {
-        trad_out = Some(if threaded {
-            exec::trad_threaded(&dist, &x, None, cfg.p_m, Recurrence::Power)
-        } else {
-            trad_mpk(&dist, &x, cfg.p_m, &mut NativeBackend)
-        });
+        trad_out = Some(trad_eng.sweep(&x, None, Recurrence::Power));
     });
     let trad_res = trad_out.unwrap();
 
     let mut dlb_out = None;
     let t_dlb = median_time(cfg.reps, || {
-        dlb_out = Some(if threaded {
-            exec::dlb_threaded(&plan, &x, None, Recurrence::Power)
-        } else {
-            dlb::execute(&plan, &x, &mut NativeBackend)
-        });
+        dlb_out = Some(dlb_eng.sweep(&x, None, Recurrence::Power));
     });
     let dlb_res = dlb_out.unwrap();
 
@@ -92,21 +97,23 @@ pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
 
 /// Also run CA-MPK and report its overheads (used by `fig5` and the CLI),
 /// honoring the configured executor like [`run`] does.
-pub fn run_ca(cfg: &RunConfig) -> Result<(Report, ca::CaOverheads)> {
+pub fn run_ca(cfg: &RunConfig) -> Result<(Report, crate::mpk::CaOverheads)> {
     let a = cfg.matrix.build()?;
     let n_ranks = cfg.executor.ranks(cfg.n_ranks);
     let part = partition(&a, n_ranks, cfg.partitioner);
-    let dist = DistMatrix::build(&a, &part);
+    let dist = Arc::new(DistMatrix::build(&a, &part));
     let x: Vec<f64> = (0..a.n_rows()).map(|i| (i % 7) as f64).collect();
-    let overheads = ca::ca_plan(&a, &dist, cfg.p_m).overheads;
-    let threaded = matches!(cfg.executor, ExecutorKind::Threads { .. });
+
+    let eng_cfg = EngineConfig {
+        variant: Variant::Ca,
+        executor: cfg.executor,
+        backend: BackendSpec::Native,
+    };
+    let mut eng = MpkEngine::from_shared(dist.clone(), cfg.p_m, &eng_cfg)?;
+    let overheads = eng.ca_overheads().expect("CA engine has a primary plan");
     let mut out = None;
     let t = median_time(cfg.reps, || {
-        out = Some(if threaded {
-            exec::ca_threaded(&a, &dist, &x, cfg.p_m)
-        } else {
-            ca::ca_mpk_with(&a, &dist, &x, cfg.p_m).result
-        });
+        out = Some(eng.sweep(&x, None, Recurrence::Power));
     });
     let res = out.unwrap();
     let rep = Report {
@@ -139,6 +146,7 @@ fn equal(a: &MpkResult, b: &MpkResult) -> bool {
 mod tests {
     use super::*;
     use crate::coordinator::config::MatrixSpec;
+    use crate::exec::ExecutorKind;
 
     #[test]
     fn pipeline_runs_and_validates() {

@@ -1,0 +1,646 @@
+//! `MpkEngine` — the prepare-once / apply-many session API.
+//!
+//! The paper's whole point is *amortization*: pay for partitioning, level
+//! permutation, and schedule construction once, then reuse the matrix data
+//! across many power sweeps (its flagship §7 result comes from an
+//! application repeatedly driving MPK sweeps with one matrix). RACE
+//! (Alappat et al. 2020) and the level-blocked MPK work (arXiv:2205.01598)
+//! expose the same shape: a preprocessed engine handle applied many times.
+//!
+//! [`MpkEngine`] is that handle. Build it once from a
+//! [`crate::distsim::DistMatrix`]:
+//!
+//! ```ignore
+//! let mut eng = MpkEngine::builder(&dist)
+//!     .p_m(8)
+//!     .variant(Variant::Dlb(DlbOptions::default()))
+//!     .executor(ExecutorKind::Threads { n: 0 })
+//!     .backend(BackendSpec::Native)
+//!     .build()?;
+//! let out = eng.sweep(&x, None, Recurrence::Power); // y_p = A^p x, p = 1..=8
+//! ```
+//!
+//! It owns everything sweeps reuse:
+//!
+//! * the **variant plan** — DLB level permutation + wavefront schedule, or
+//!   the CA extended-halo exchange plan (TRAD needs none);
+//! * a **tail-plan cache** keyed by `p_m`, so recurrences whose term count
+//!   is not a multiple of the block size (Chebyshev propagation) reuse
+//!   their short final-block plans instead of rebuilding them every step;
+//! * reusable **workspaces** for the sequential executor;
+//! * for the threads executor, a **persistent rank pool**
+//!   ([`pool::RankPool`]): `n_ranks` long-lived rank threads parked on job
+//!   channels, so a propagator running thousands of sweeps pays thread and
+//!   communicator setup exactly once instead of per call.
+//!
+//! [`MpkEngine::sweep`] / [`MpkEngine::sweep_len`] is the one entry point
+//! subsuming `mpk::run`, `exec::run`, the `*_threaded` drivers, and the
+//! per-variant recurrence helpers. Both executors produce bitwise-identical
+//! powers and identical merged [`crate::distsim::CommStats`]
+//! (cross-validated in `rust/tests/exec_equivalence.rs` and
+//! `rust/tests/engine_session.rs`).
+//!
+//! This is also the seam future transports plug into with zero app
+//! changes: an MPI-backed [`crate::exec::Communicator`] or a within-rank
+//! wavefront thread pool slot in behind the same builder knobs.
+
+pub mod pool;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::distsim::DistMatrix;
+use crate::exec::executor::assemble;
+use crate::exec::ExecutorKind;
+use crate::matrix::CsrMatrix;
+use crate::mpk::ca::{self, CaExecPlan, CaOverheads, CaPlan};
+use crate::mpk::dlb::{self, DlbOptions, DlbPlan, DlbPre, Recurrence, Workspace};
+use crate::mpk::trad::trad_recurrence;
+use crate::mpk::{MpkResult, NativeBackend, SpmvBackend};
+
+use pool::{Job, RankPool};
+pub use pool::PoolStats;
+
+/// What one sweep produces: the global power vectors `powers[p-1] = y_p`,
+/// the communication performed, and the flop count (see [`MpkResult`]).
+pub type SweepResult = MpkResult;
+
+/// Which MPK variant the engine runs (the planning-aware sibling of
+/// [`crate::mpk::MpkVariant`], carrying full [`DlbOptions`]).
+#[derive(Clone, Copy, Debug)]
+pub enum Variant {
+    /// Back-to-back SpMVs, one halo exchange per power (paper Alg. 1).
+    Trad,
+    /// Communication-avoiding MPK: one extended exchange, redundant work.
+    /// Supports only the plain power recurrence, and its redundant-work
+    /// kernel computes with its own fixed row loop — the configured
+    /// [`BackendSpec`] does not reach CA sweeps (only
+    /// [`MpkEngine::backend`] host products).
+    Ca,
+    /// The paper's cache-blocked DLB-MPK (Alg. 2).
+    Dlb(DlbOptions),
+}
+
+impl Variant {
+    /// Short label for reports (`trad` / `ca` / `dlb`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Trad => "trad",
+            Self::Ca => "ca",
+            Self::Dlb(_) => "dlb",
+        }
+    }
+}
+
+/// How sweeps multiply a row range: the default native CRS loop, or a
+/// custom factory (the seam for the XLA/PJRT backend — each rank thread
+/// gets its own instance from the factory). Reaches every TRAD/DLB sweep
+/// and the host-side [`MpkEngine::backend`]; the CA kernel has no backend
+/// seam (see [`Variant::Ca`]).
+#[derive(Clone)]
+pub enum BackendSpec {
+    Native,
+    Custom(Arc<dyn Fn() -> Box<dyn SpmvBackend + Send> + Send + Sync>),
+}
+
+impl BackendSpec {
+    /// Instantiate one backend (called once for the host, once per rank
+    /// thread).
+    pub fn make(&self) -> Box<dyn SpmvBackend + Send> {
+        match self {
+            Self::Native => Box::new(NativeBackend),
+            Self::Custom(f) => f(),
+        }
+    }
+}
+
+impl Default for BackendSpec {
+    fn default() -> Self {
+        Self::Native
+    }
+}
+
+impl std::fmt::Debug for BackendSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Native => f.write_str("Native"),
+            Self::Custom(_) => f.write_str("Custom(..)"),
+        }
+    }
+}
+
+/// The builder knobs as a plain value, for callers (apps, configs) that
+/// construct their own distributed matrix before building the engine.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub variant: Variant,
+    pub executor: ExecutorKind,
+    pub backend: BackendSpec,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            variant: Variant::Dlb(DlbOptions::default()),
+            executor: ExecutorKind::Sim,
+            backend: BackendSpec::Native,
+        }
+    }
+}
+
+/// Builder for [`MpkEngine`] (see the module docs for the full shape).
+pub struct MpkEngineBuilder<'a> {
+    dist: &'a DistMatrix,
+    p_m: usize,
+    cfg: EngineConfig,
+}
+
+impl<'a> MpkEngineBuilder<'a> {
+    /// Planned maximum power / recurrence block size (default 4). Shorter
+    /// sweeps use the tail-plan cache; see [`MpkEngine::sweep_len`].
+    pub fn p_m(mut self, p_m: usize) -> Self {
+        self.p_m = p_m;
+        self
+    }
+
+    pub fn variant(mut self, v: Variant) -> Self {
+        self.cfg.variant = v;
+        self
+    }
+
+    pub fn executor(mut self, e: ExecutorKind) -> Self {
+        self.cfg.executor = e;
+        self
+    }
+
+    pub fn backend(mut self, b: BackendSpec) -> Self {
+        self.cfg.backend = b;
+        self
+    }
+
+    pub fn build(self) -> anyhow::Result<MpkEngine> {
+        MpkEngine::from_config(self.dist, self.p_m, &self.cfg)
+    }
+}
+
+/// CA session state: the global overhead plan plus the per-rank exchange
+/// plan derived from it, cached together per `p_m`.
+struct CaSession {
+    plan: CaPlan,
+    exec: Arc<CaExecPlan>,
+}
+
+enum VariantState {
+    Trad,
+    Dlb {
+        pre: DlbPre,
+        opts: DlbOptions,
+        plans: HashMap<usize, Arc<DlbPlan>>,
+        ws: Workspace,
+    },
+    Ca {
+        a: Arc<CsrMatrix>,
+        sessions: HashMap<usize, Arc<CaSession>>,
+    },
+}
+
+/// A prepared MPK session: variant plan + workspaces + (for the threads
+/// executor) the persistent rank pool. See the module docs.
+pub struct MpkEngine {
+    /// I/O-layout distributed matrix: the DLB-permuted clone for the DLB
+    /// variant (shared by every cached plan), the caller's layout otherwise.
+    dist: Arc<DistMatrix>,
+    p_m: usize,
+    variant: Variant,
+    executor: ExecutorKind,
+    state: VariantState,
+    pool: Option<RankPool>,
+    /// Host-side backend: runs every kernel under the sequential executor,
+    /// and is exposed via [`MpkEngine::backend`] for ancillary products
+    /// (e.g. the CG loop's full-matrix SpMV) so a whole solver honors one
+    /// configured [`BackendSpec`].
+    host_backend: Box<dyn SpmvBackend + Send>,
+    plans_built: usize,
+    sweeps: usize,
+}
+
+impl MpkEngine {
+    /// Start building an engine over `dist` (defaults: `p_m = 4`,
+    /// DLB variant, sequential executor, native backend).
+    pub fn builder(dist: &DistMatrix) -> MpkEngineBuilder<'_> {
+        MpkEngineBuilder { dist, p_m: 4, cfg: EngineConfig::default() }
+    }
+
+    /// Build from a plain [`EngineConfig`] (what apps store in their own
+    /// configuration structs). For the TRAD/CA variants this clones the
+    /// caller's distributed matrix to own it — callers already holding an
+    /// `Arc` avoid the copy with [`MpkEngine::from_shared`]. (DLB always
+    /// works on its own level-permuted clone either way.)
+    pub fn from_config(dist: &DistMatrix, p_m: usize, cfg: &EngineConfig) -> anyhow::Result<Self> {
+        let shared = match cfg.variant {
+            Variant::Dlb(_) => None, // preprocessing makes the permuted copy
+            _ => Some(Arc::new(dist.clone())),
+        };
+        Self::construct(shared, dist, p_m, cfg)
+    }
+
+    /// Like [`MpkEngine::from_config`], but shares the caller's
+    /// `Arc<DistMatrix>` instead of cloning the matrix data (TRAD/CA keep
+    /// the caller's layout, so no copy is needed at all).
+    pub fn from_shared(
+        dist: Arc<DistMatrix>,
+        p_m: usize,
+        cfg: &EngineConfig,
+    ) -> anyhow::Result<Self> {
+        Self::construct(Some(dist.clone()), &dist, p_m, cfg)
+    }
+
+    /// Common constructor: `shared` must be `Some` for TRAD/CA (their
+    /// I/O-layout matrix), and is ignored for DLB (which owns the permuted
+    /// clone made by preprocessing).
+    fn construct(
+        shared: Option<Arc<DistMatrix>>,
+        dist: &DistMatrix,
+        p_m: usize,
+        cfg: &EngineConfig,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(p_m >= 1, "engine p_m must be >= 1");
+        cfg.executor.validate(dist.n_ranks())?;
+
+        let mut plans_built = 0usize;
+        let (dist_io, state) = match &cfg.variant {
+            Variant::Trad => {
+                (shared.expect("TRAD construct needs the shared matrix"), VariantState::Trad)
+            }
+            Variant::Dlb(opts) => {
+                let pre = dlb::preprocess(dist);
+                let mut plans = HashMap::new();
+                plans.insert(p_m, Arc::new(dlb::plan_from_pre(&pre, p_m, opts)));
+                plans_built += 1;
+                let dist_io = pre.dist.clone();
+                (dist_io, VariantState::Dlb { pre, opts: *opts, plans, ws: Workspace::default() })
+            }
+            Variant::Ca => {
+                let a = Arc::new(ca::reassemble_global(dist));
+                let plan = ca::ca_plan(&a, dist, p_m);
+                let exec = Arc::new(ca::ca_exec_plan_from(dist, &plan));
+                let mut sessions = HashMap::new();
+                sessions.insert(p_m, Arc::new(CaSession { plan, exec }));
+                plans_built += 1;
+                (
+                    shared.expect("CA construct needs the shared matrix"),
+                    VariantState::Ca { a, sessions },
+                )
+            }
+        };
+
+        let pool = match cfg.executor {
+            ExecutorKind::Sim => None,
+            ExecutorKind::Threads { .. } => Some(RankPool::spawn(dist_io.n_ranks(), &cfg.backend)),
+        };
+
+        Ok(Self {
+            dist: dist_io,
+            p_m,
+            variant: cfg.variant,
+            executor: cfg.executor,
+            state,
+            pool,
+            host_backend: cfg.backend.make(),
+            plans_built,
+            sweeps: 0,
+        })
+    }
+
+    /// One full sweep at the planned `p_m`: `powers[p-1] = y_p` under the
+    /// configured recurrence, with `y_0 = x0` (and `y_{-1} = x_m1` for
+    /// Chebyshev; `None` = wind-up step).
+    pub fn sweep(&mut self, x0: &[f64], x_m1: Option<&[f64]>, rec: Recurrence) -> SweepResult {
+        self.sweep_len(self.p_m, x0, x_m1, rec)
+    }
+
+    /// A sweep of `p_m` powers, which may differ from the planned block
+    /// size (tail blocks of a long recurrence). Plans for off-size sweeps
+    /// are built from the shared p-independent preprocessing and cached, so
+    /// a propagator pays for each distinct tail length once per engine.
+    pub fn sweep_len(
+        &mut self,
+        p_m: usize,
+        x0: &[f64],
+        x_m1: Option<&[f64]>,
+        rec: Recurrence,
+    ) -> SweepResult {
+        assert!(p_m >= 1, "sweep needs p_m >= 1");
+        if matches!(self.state, VariantState::Ca { .. }) {
+            assert!(
+                rec == Recurrence::Power && x_m1.is_none(),
+                "CA-MPK supports only the plain power recurrence"
+            );
+        }
+        self.sweeps += 1;
+        if self.pool.is_some() {
+            self.sweep_pool(p_m, x0, x_m1, rec)
+        } else {
+            self.sweep_sim(p_m, x0, x_m1, rec)
+        }
+    }
+
+    /// Sequential lockstep execution (exact counters, no parallelism).
+    fn sweep_sim(
+        &mut self,
+        p_m: usize,
+        x0: &[f64],
+        x_m1: Option<&[f64]>,
+        rec: Recurrence,
+    ) -> SweepResult {
+        if matches!(self.state, VariantState::Trad) {
+            return trad_recurrence(&self.dist, x0, x_m1, p_m, rec, self.host_backend.as_mut());
+        }
+        if matches!(self.state, VariantState::Dlb { .. }) {
+            let plan = self.dlb_plan_for(p_m);
+            let ws = match &mut self.state {
+                VariantState::Dlb { ws, .. } => ws,
+                _ => unreachable!(),
+            };
+            return dlb::execute_recurrence_with(
+                &plan,
+                x0,
+                x_m1,
+                rec,
+                self.host_backend.as_mut(),
+                ws,
+            );
+        }
+        let sess = self.ca_session_for(p_m);
+        let a = match &self.state {
+            VariantState::Ca { a, .. } => a.clone(),
+            _ => unreachable!(),
+        };
+        ca::ca_execute_planned(&a, &self.dist, &sess.plan, x0).result
+    }
+
+    /// Dispatch one sweep over the persistent rank pool and merge the
+    /// per-rank outputs deterministically (rank-ascending, exactly like the
+    /// spawn-per-sweep drivers).
+    fn sweep_pool(
+        &mut self,
+        p_m: usize,
+        x0: &[f64],
+        x_m1: Option<&[f64]>,
+        rec: Recurrence,
+    ) -> SweepResult {
+        let dist = self.dist.clone();
+        let n = dist.n_ranks();
+        let xs = dist.scatter(x0);
+        let xm1s: Vec<Option<Vec<f64>>> = match x_m1 {
+            Some(v) => dist.scatter(v).into_iter().map(Some).collect(),
+            None => vec![None; n],
+        };
+
+        let jobs: Vec<Job> = if matches!(self.state, VariantState::Trad) {
+            xs.into_iter()
+                .zip(xm1s)
+                .map(|(x, x_m1)| Job::Trad { dist: dist.clone(), x, x_m1, p_m, rec })
+                .collect()
+        } else if matches!(self.state, VariantState::Dlb { .. }) {
+            let plan = self.dlb_plan_for(p_m);
+            xs.into_iter()
+                .zip(xm1s)
+                .map(|(x, x_m1)| Job::Dlb { plan: plan.clone(), x, x_m1, rec })
+                .collect()
+        } else {
+            let sess = self.ca_session_for(p_m);
+            let a = match &self.state {
+                VariantState::Ca { a, .. } => a.clone(),
+                _ => unreachable!(),
+            };
+            xs.into_iter()
+                .map(|x| Job::Ca {
+                    a: a.clone(),
+                    dist: dist.clone(),
+                    plan: sess.exec.clone(),
+                    x,
+                    p_m,
+                })
+                .collect()
+        };
+
+        let outs = self.pool.as_mut().expect("threads executor has a pool").sweep(jobs);
+        assemble(&dist, p_m, outs)
+    }
+
+    /// Cached DLB plan for a sweep length, building (and counting) on miss.
+    fn dlb_plan_for(&mut self, p_m: usize) -> Arc<DlbPlan> {
+        let mut built = false;
+        let plan = match &mut self.state {
+            VariantState::Dlb { pre, opts, plans, .. } => plans
+                .entry(p_m)
+                .or_insert_with(|| {
+                    built = true;
+                    Arc::new(dlb::plan_from_pre(pre, p_m, opts))
+                })
+                .clone(),
+            _ => unreachable!("dlb_plan_for on a non-DLB engine"),
+        };
+        if built {
+            self.plans_built += 1;
+        }
+        plan
+    }
+
+    /// Cached CA session for a sweep length, building (and counting) on
+    /// miss.
+    fn ca_session_for(&mut self, p_m: usize) -> Arc<CaSession> {
+        let mut built = false;
+        let dist = self.dist.clone();
+        let sess = match &mut self.state {
+            VariantState::Ca { a, sessions } => sessions
+                .entry(p_m)
+                .or_insert_with(|| {
+                    built = true;
+                    let plan = ca::ca_plan(a, &dist, p_m);
+                    let exec = Arc::new(ca::ca_exec_plan_from(&dist, &plan));
+                    Arc::new(CaSession { plan, exec })
+                })
+                .clone(),
+            _ => unreachable!("ca_session_for on a non-CA engine"),
+        };
+        if built {
+            self.plans_built += 1;
+        }
+        sess
+    }
+
+    // ---- introspection --------------------------------------------------
+
+    /// Planned (default) sweep length.
+    pub fn p_m(&self) -> usize {
+        self.p_m
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.dist.n_ranks()
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.variant
+    }
+
+    pub fn executor(&self) -> ExecutorKind {
+        self.executor
+    }
+
+    /// The engine's I/O-layout distributed matrix (the DLB-permuted clone
+    /// for the DLB variant).
+    pub fn dist(&self) -> &DistMatrix {
+        &self.dist
+    }
+
+    /// The host-side SpMV backend, for ancillary per-iteration products
+    /// outside the sweeps (e.g. CG's `A·p`), so the whole solver honors the
+    /// configured [`BackendSpec`].
+    pub fn backend(&mut self) -> &mut dyn SpmvBackend {
+        self.host_backend.as_mut()
+    }
+
+    /// How many variant plans this engine has constructed (primary + tail
+    /// cache misses). A propagator stepping many times must see this stay
+    /// constant after the first step — regression-tested in
+    /// `rust/tests/engine_session.rs`.
+    pub fn plans_built(&self) -> usize {
+        self.plans_built
+    }
+
+    /// Total sweeps executed through this engine.
+    pub fn sweeps_run(&self) -> usize {
+        self.sweeps
+    }
+
+    /// Persistent-pool counters (`None` under the sequential executor).
+    pub fn pool_stats(&self) -> Option<PoolStats> {
+        self.pool.as_ref().map(|p| p.stats())
+    }
+
+    /// Paper Eq. (3) DLB overhead of the primary plan (`None` for other
+    /// variants).
+    pub fn dlb_overhead(&self) -> Option<f64> {
+        match &self.state {
+            VariantState::Dlb { plans, .. } => plans
+                .get(&self.p_m)
+                .map(|p| crate::mpk::overheads::dlb_overhead_from_plan(p)),
+            _ => None,
+        }
+    }
+
+    /// CA extended-halo / redundant-work overheads of the primary plan
+    /// (`None` for other variants).
+    pub fn ca_overheads(&self) -> Option<CaOverheads> {
+        match &self.state {
+            VariantState::Ca { sessions, .. } => {
+                sessions.get(&self.p_m).map(|s| s.plan.overheads.clone())
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::partition::{partition, Method};
+
+    fn dist(np: usize) -> DistMatrix {
+        let a = gen::stencil_2d_5pt(12, 10);
+        let part = partition(&a, np, Method::Block);
+        DistMatrix::build(&a, &part)
+    }
+
+    #[test]
+    fn builder_defaults_and_validation() {
+        let d = dist(3);
+        let eng = MpkEngine::builder(&d).build().unwrap();
+        assert_eq!(eng.p_m(), 4);
+        assert_eq!(eng.n_ranks(), 3);
+        assert!(eng.pool_stats().is_none());
+        assert_eq!(eng.plans_built(), 1);
+        // threads(n) must match the prebuilt matrix
+        assert!(MpkEngine::builder(&d)
+            .executor(ExecutorKind::Threads { n: 2 })
+            .build()
+            .is_err());
+        assert!(MpkEngine::builder(&d)
+            .executor(ExecutorKind::Threads { n: 3 })
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn engine_matches_direct_kernels_per_variant() {
+        let d = dist(4);
+        let x: Vec<f64> = (0..d.n_global).map(|i| ((i % 13) as f64 - 6.0) / 7.0).collect();
+        let p_m = 3;
+
+        let want = crate::mpk::trad_mpk(&d, &x, p_m, &mut NativeBackend);
+        let mut eng = MpkEngine::builder(&d).p_m(p_m).variant(Variant::Trad).build().unwrap();
+        let got = eng.sweep(&x, None, Recurrence::Power);
+        assert_eq!(want.powers, got.powers);
+        assert_eq!(want.comm, got.comm);
+        assert_eq!(want.flop_nnz, got.flop_nnz);
+
+        let opts = DlbOptions { cache_bytes: 8 << 10, s_m: 50 };
+        let plan = dlb::plan(&d, p_m, &opts);
+        let want = dlb::execute(&plan, &x, &mut NativeBackend);
+        let mut eng =
+            MpkEngine::builder(&d).p_m(p_m).variant(Variant::Dlb(opts)).build().unwrap();
+        let got = eng.sweep(&x, None, Recurrence::Power);
+        assert_eq!(want.powers, got.powers);
+        assert_eq!(want.comm, got.comm);
+
+        let a = ca::reassemble_global(&d);
+        let want = ca::ca_mpk_with(&a, &d, &x, p_m);
+        let mut eng = MpkEngine::builder(&d).p_m(p_m).variant(Variant::Ca).build().unwrap();
+        let got = eng.sweep(&x, None, Recurrence::Power);
+        assert_eq!(want.result.powers, got.powers);
+        assert_eq!(want.result.comm, got.comm);
+        assert_eq!(want.result.flop_nnz, got.flop_nnz);
+        assert!(eng.ca_overheads().is_some());
+    }
+
+    #[test]
+    fn tail_plans_are_cached() {
+        let d = dist(2);
+        let x = vec![1.0; d.n_global];
+        let opts = DlbOptions { cache_bytes: 8 << 10, s_m: 50 };
+        let mut eng =
+            MpkEngine::builder(&d).p_m(4).variant(Variant::Dlb(opts)).build().unwrap();
+        assert_eq!(eng.plans_built(), 1);
+        eng.sweep(&x, None, Recurrence::Power);
+        assert_eq!(eng.plans_built(), 1, "primary sweep must reuse the build-time plan");
+        eng.sweep_len(2, &x, None, Recurrence::Power);
+        assert_eq!(eng.plans_built(), 2, "first tail length builds one plan");
+        eng.sweep_len(2, &x, None, Recurrence::Power);
+        eng.sweep_len(2, &x, None, Recurrence::Power);
+        assert_eq!(eng.plans_built(), 2, "repeated tail sweeps hit the cache");
+        assert_eq!(eng.sweeps_run(), 4);
+    }
+
+    #[test]
+    fn pool_survives_and_counts_sweeps() {
+        let d = dist(3);
+        let x = vec![1.0; d.n_global];
+        let mut eng = MpkEngine::builder(&d)
+            .p_m(2)
+            .variant(Variant::Trad)
+            .executor(ExecutorKind::Threads { n: 0 })
+            .build()
+            .unwrap();
+        let a = eng.sweep(&x, None, Recurrence::Power);
+        let b = eng.sweep(&x, None, Recurrence::Power);
+        assert_eq!(a.powers, b.powers);
+        assert_eq!(a.comm, b.comm, "per-sweep stats must not accumulate");
+        let st = eng.pool_stats().unwrap();
+        assert_eq!(st.threads, 3);
+        assert_eq!(st.sweeps, 2);
+    }
+}

@@ -1,0 +1,204 @@
+//! The persistent rank pool behind [`crate::engine::MpkEngine`]'s threads
+//! executor.
+//!
+//! [`crate::exec`]'s original threaded drivers spawn `n_ranks` OS threads
+//! *per call* — fine for one-shot benchmarks, ruinous for an application
+//! that drives thousands of MPK sweeps against the same matrix (a Chebyshev
+//! propagator runs one sweep per `p_m` recurrence terms per plane per time
+//! step). The pool spawns the rank threads **once**, each owning its
+//! [`ThreadComm`] endpoint and its own [`SpmvBackend`] instance, and parks
+//! them on a per-rank job channel. A sweep is then: send one [`Job`] per
+//! rank, collect one `(RankRun, CommStats)` per rank — thread creation,
+//! channel wiring, and barrier setup are all paid at engine build.
+//!
+//! ## Per-sweep statistics
+//!
+//! A persistent [`ThreadComm`] accumulates its counters across sweeps (the
+//! round barrier *requires* the absolute round counters to stay aligned),
+//! so each worker snapshots its stats before the kernel and reports the
+//! difference — making every sweep's merged [`CommStats`] identical to a
+//! fresh spawn-per-sweep run, which the engine-reuse equivalence tests
+//! assert bitwise.
+//!
+//! ## Tag safety across sweeps
+//!
+//! Kernels tag messages with small per-sweep round numbers starting at 0,
+//! so consecutive sweeps reuse tags. This is safe: within a sweep every
+//! posted message is received before its round's barrier, and the final
+//! round of a sweep ends with a barrier — by the time any rank starts the
+//! next sweep, all channels and pending queues are empty.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::distsim::{CommStats, DistMatrix};
+use crate::exec::comm::{thread_comms, Communicator, ThreadComm};
+use crate::exec::RankRun;
+use crate::matrix::CsrMatrix;
+use crate::mpk::ca::CaExecPlan;
+use crate::mpk::dlb::{DlbPlan, Recurrence};
+use crate::mpk::SpmvBackend;
+use crate::mpk::{ca, dlb, trad};
+
+use super::BackendSpec;
+
+/// One rank's share of one sweep. Inputs are the rank's scattered local
+/// vectors (halo tails scratch); plans ride along as `Arc`s so tail-block
+/// sweeps can ship a different cached plan without touching the pool.
+pub(crate) enum Job {
+    Trad {
+        dist: Arc<DistMatrix>,
+        x: Vec<f64>,
+        x_m1: Option<Vec<f64>>,
+        p_m: usize,
+        rec: Recurrence,
+    },
+    Dlb {
+        plan: Arc<DlbPlan>,
+        x: Vec<f64>,
+        x_m1: Option<Vec<f64>>,
+        rec: Recurrence,
+    },
+    Ca {
+        a: Arc<CsrMatrix>,
+        dist: Arc<DistMatrix>,
+        plan: Arc<CaExecPlan>,
+        x: Vec<f64>,
+        p_m: usize,
+    },
+}
+
+/// Pool health/usage counters (see [`crate::engine::MpkEngine::pool_stats`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Rank threads spawned at engine build — constant for the engine's
+    /// lifetime (the point of the pool: no per-sweep spawning).
+    pub threads: usize,
+    /// Sweeps dispatched through the pool since build.
+    pub sweeps: usize,
+}
+
+/// `n_ranks` long-lived rank threads parked on per-rank job channels.
+pub(crate) struct RankPool {
+    jobs: Vec<Sender<Job>>,
+    results: Vec<Receiver<(RankRun, CommStats)>>,
+    handles: Vec<JoinHandle<()>>,
+    n: usize,
+    sweeps: usize,
+}
+
+impl RankPool {
+    /// Spawn the rank threads, each with its [`ThreadComm`] endpoint and a
+    /// private backend instance from `backend`.
+    pub(crate) fn spawn(n: usize, backend: &BackendSpec) -> Self {
+        let comms = thread_comms(n);
+        let mut jobs = Vec::with_capacity(n);
+        let mut results = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for (i, comm) in comms.into_iter().enumerate() {
+            let (job_tx, job_rx) = channel::<Job>();
+            let (res_tx, res_rx) = channel::<(RankRun, CommStats)>();
+            let be = backend.make();
+            let handle = std::thread::Builder::new()
+                .name(format!("mpk-rank-{i}"))
+                .spawn(move || worker(i, comm, be, job_rx, res_tx))
+                .expect("spawn rank thread");
+            jobs.push(job_tx);
+            results.push(res_rx);
+            handles.push(handle);
+        }
+        Self { jobs, results, handles, n, sweeps: 0 }
+    }
+
+    pub(crate) fn stats(&self) -> PoolStats {
+        PoolStats { threads: self.n, sweeps: self.sweeps }
+    }
+
+    /// Run one sweep: dispatch `jobs[i]` to rank `i`, then collect results
+    /// in ascending rank order (deterministic merge downstream).
+    ///
+    /// # Panics
+    ///
+    /// If a rank thread has died (its kernel panicked) — the poisoned
+    /// barrier/channels make every peer fail too, so the error surfaces
+    /// here instead of deadlocking.
+    pub(crate) fn sweep(&mut self, jobs: Vec<Job>) -> Vec<(RankRun, CommStats)> {
+        assert_eq!(jobs.len(), self.n, "one job per rank");
+        for (tx, job) in self.jobs.iter().zip(jobs) {
+            tx.send(job).expect("rank worker died before the sweep");
+        }
+        self.sweeps += 1;
+        self.results
+            .iter()
+            .map(|rx| rx.recv().expect("rank worker panicked mid-sweep"))
+            .collect()
+    }
+}
+
+impl Drop for RankPool {
+    fn drop(&mut self) {
+        // Close the job channels so every parked worker's recv() errors and
+        // the thread exits, then join. Join errors (a worker that panicked
+        // during a sweep) are ignored here: the panic already surfaced to
+        // the caller through `sweep`'s result recv.
+        self.jobs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Rank thread body: park on the job channel, run the matching single-rank
+/// kernel, report the run plus this sweep's communication-stat delta.
+fn worker(
+    i: usize,
+    mut comm: ThreadComm,
+    mut backend: Box<dyn SpmvBackend + Send>,
+    jobs: Receiver<Job>,
+    results: Sender<(RankRun, CommStats)>,
+) {
+    while let Ok(job) = jobs.recv() {
+        let before = comm.stats().clone();
+        let run = match job {
+            Job::Trad { dist, x, x_m1, p_m, rec } => trad::trad_rank(
+                &dist.ranks[i],
+                &x,
+                x_m1.as_deref(),
+                p_m,
+                rec,
+                &mut comm,
+                backend.as_mut(),
+            ),
+            Job::Dlb { plan, x, x_m1, rec } => dlb::dlb_rank(
+                &plan.dist.ranks[i],
+                &plan.ranks[i],
+                plan.p_m,
+                &x,
+                x_m1.as_deref(),
+                rec,
+                &mut comm,
+                backend.as_mut(),
+            ),
+            Job::Ca { a, dist, plan, x, p_m } => ca::ca_rank(
+                &a,
+                &dist.ranks[i],
+                &plan.sends[i],
+                &plan.recvs[i],
+                &plan.ext[i],
+                &x,
+                p_m,
+                &mut comm,
+            ),
+        };
+        let after = comm.stats();
+        let delta = CommStats {
+            messages: after.messages - before.messages,
+            bytes: after.bytes - before.bytes,
+            rounds: after.rounds - before.rounds,
+        };
+        if results.send((run, delta)).is_err() {
+            break; // engine dropped mid-sweep
+        }
+    }
+}

@@ -103,8 +103,9 @@ where
 }
 
 /// Gather per-rank outputs into a global [`MpkResult`] (deterministic
-/// rank-ascending merge).
-fn assemble(dist: &DistMatrix, p_m: usize, outs: Vec<(RankRun, CommStats)>) -> MpkResult {
+/// rank-ascending merge). Shared with the persistent-pool executor in
+/// [`crate::engine`], so both threaded paths merge identically.
+pub(crate) fn assemble(dist: &DistMatrix, p_m: usize, outs: Vec<(RankRun, CommStats)>) -> MpkResult {
     let per_rank: Vec<CommStats> = outs.iter().map(|(_, s)| s.clone()).collect();
     let comm = merge_rank_stats(&per_rank);
     let flop_nnz = outs.iter().map(|(run, _)| run.flop_nnz).sum();

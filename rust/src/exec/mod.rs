@@ -22,9 +22,17 @@
 //! [`crate::distsim::CommStats`] (cross-validated in
 //! `rust/tests/exec_equivalence.rs`); only wall-clock differs.
 //!
-//! Entry points: [`ExecutorKind`] is the `sim | threads(n)` knob wired
-//! through [`crate::coordinator::RunConfig`] and the CLI; [`run`] is the
-//! variant dispatcher mirroring [`crate::mpk::run`].
+//! The **primary public entry point** over these executors is
+//! [`crate::engine::MpkEngine`] — a prepare-once/apply-many session that
+//! owns the variant plans, reuses workspaces, and (for the threads
+//! executor) keeps a *persistent rank pool* instead of spawning `n_ranks`
+//! threads per call the way [`trad_threaded`]/[`dlb_threaded`]/
+//! [`ca_threaded`] do. Those spawn-per-sweep drivers remain for one-shot
+//! runs and as the baseline the pool is benchmarked against
+//! (`benches/fig10_strong_scaling.rs`). [`ExecutorKind`] is the
+//! `sim | threads(n)` knob wired through the engine builder,
+//! [`crate::coordinator::RunConfig`], and the CLI; [`run`] is the low-level
+//! one-shot variant dispatcher mirroring [`crate::mpk::run`].
 
 pub mod comm;
 pub mod executor;

@@ -26,6 +26,9 @@
 //!   with sequential (`SimComm`) and multi-threaded (`ThreadComm`, one OS
 //!   thread per rank over mpsc channels) transports, and the threaded
 //!   drivers measuring real parallel wall-clock.
+//! * [`engine`] — **the public execution API**: `MpkEngine`, a
+//!   prepare-once/apply-many session owning the variant plan, tail-plan
+//!   cache, workspaces, and (threads executor) a persistent rank pool.
 //! * [`mpk`] — the three MPK variants: `trad`, `ca` (baseline from
 //!   Mohiyuddin et al. 2009), and `dlb` (the paper's contribution).
 //! * [`cachesim`] — LRU cache simulator replaying MPK reference streams to
@@ -39,6 +42,7 @@ pub mod apps;
 pub mod cachesim;
 pub mod coordinator;
 pub mod distsim;
+pub mod engine;
 pub mod exec;
 pub mod graph;
 pub mod matrix;

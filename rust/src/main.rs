@@ -247,34 +247,46 @@ fn cmd_bandwidth(flags: &Flags) -> Result<()> {
 }
 
 fn cmd_anderson(flags: &Flags) -> Result<()> {
-    use dlb_mpk::apps::chebyshev::{wave_packet, ChebyshevConfig, ChebyshevPropagator, Engine};
+    use dlb_mpk::apps::chebyshev::{wave_packet, ChebyshevConfig, ChebyshevPropagator};
     use dlb_mpk::apps::observables::center_of_mass;
     use dlb_mpk::distsim::DistMatrix;
+    use dlb_mpk::engine::{BackendSpec, EngineConfig, Variant};
     use dlb_mpk::matrix::anderson::{anderson, AndersonConfig};
     use dlb_mpk::mpk::dlb::DlbOptions;
-    use dlb_mpk::mpk::NativeBackend;
     use dlb_mpk::partition::partition;
 
     let l = flags.usize("l", 24)?;
     let w = flags.f64("w", 1.0)?;
     let steps = flags.usize("steps", 5)?;
-    let ranks = flags.usize("ranks", 1)?;
+    let executor = ExecutorKind::parse(flags.get("executor").unwrap_or("sim"))
+        .context("--executor must be sim|threads|threads(N)")?;
+    let ranks = executor.ranks(flags.usize("ranks", 1)?);
     let acfg = AndersonConfig { lx: l, ly: l, lz: l, w, t: 1.0, t_perp: 1.0, seed: 42 };
     let h = anderson(&acfg);
     println!("anderson {}^3: {} sites, {} nnz", l, h.n_rows(), h.nnz());
     let part = partition(&h, ranks, Method::RecursiveBisect);
     let dist = DistMatrix::build(&h, &part);
+    let p_m = flags.usize("pm", 8)?;
     let ccfg = ChebyshevConfig {
         dt: flags.f64("dt", 1.0)?,
-        p_m: flags.usize("pm", 8)?,
-        engine: Engine::Dlb,
-        dlb: DlbOptions { cache_bytes: flags.usize("cache-mib", 16)? << 20, s_m: 50 },
+        p_m,
+        engine: EngineConfig {
+            variant: Variant::Dlb(DlbOptions {
+                cache_bytes: flags.usize("cache-mib", 16)? << 20,
+                s_m: 50,
+            }),
+            executor,
+            backend: BackendSpec::Native,
+        },
     };
-    let mut prop = ChebyshevPropagator::new(&h, &dist, ccfg);
-    println!("chebyshev: {} terms per step, block p_m = {}", prop.n_terms, ccfg.p_m);
+    let mut prop = ChebyshevPropagator::new(&h, &dist, ccfg)?;
+    println!(
+        "chebyshev: {} terms per step, block p_m = {p_m}, executor {executor} ({ranks} ranks)",
+        prop.n_terms
+    );
     let mut psi = wave_packet(&acfg, l as f64 / 8.0, [std::f64::consts::FRAC_PI_2, 0.0, 0.0]);
     for s in 0..steps {
-        psi = prop.step(&psi, &mut NativeBackend);
+        psi = prop.step(&psi);
         let com = center_of_mass(&acfg, &psi.density());
         println!(
             "step {:>3}: norm² = {:.12}  ⟨x⟩ = {:+.3}  ⟨y⟩ = {:+.3}  ⟨z⟩ = {:+.3}",
@@ -283,6 +295,12 @@ fn cmd_anderson(flags: &Flags) -> Result<()> {
             com[0],
             com[1],
             com[2]
+        );
+    }
+    if let Some(pool) = prop.engine().pool_stats() {
+        println!(
+            "(rank pool: {} threads spawned once, {} sweeps dispatched)",
+            pool.threads, pool.sweeps
         );
     }
     Ok(())

@@ -122,6 +122,14 @@ pub fn ca_mpk(dist: &DistMatrix, x: &[f64], p_m: usize) -> CaOutput {
 
 pub fn ca_mpk_with(a: &CsrMatrix, dist: &DistMatrix, x: &[f64], p_m: usize) -> CaOutput {
     let plan = ca_plan(a, dist, p_m);
+    ca_execute_planned(a, dist, &plan, x)
+}
+
+/// Execute CA-MPK with a prebuilt [`CaPlan`] — the sequential
+/// (counting-simulator) path of [`crate::engine::MpkEngine`], which caches
+/// the plan across sweeps instead of rebuilding it per call.
+pub fn ca_execute_planned(a: &CsrMatrix, dist: &DistMatrix, plan: &CaPlan, x: &[f64]) -> CaOutput {
+    let p_m = plan.p_m;
     let mut comm = CommStats::default();
     let mut flop_nnz = 0usize;
     let n = a.n_rows();
@@ -167,7 +175,7 @@ pub fn ca_mpk_with(a: &CsrMatrix, dist: &DistMatrix, x: &[f64], p_m: usize) -> C
             comm,
             flop_nnz,
         },
-        overheads: plan.overheads,
+        overheads: plan.overheads.clone(),
     }
 }
 
@@ -188,9 +196,15 @@ pub struct CaExecPlan {
     pub ext: Vec<Vec<Vec<usize>>>,
 }
 
-/// Build the per-rank exec plan from the global CA plan.
+/// Build the per-rank exec plan for `p_m` from scratch (one-shot callers).
 pub fn ca_exec_plan(a: &CsrMatrix, dist: &DistMatrix, p_m: usize) -> CaExecPlan {
     let plan = ca_plan(a, dist, p_m);
+    ca_exec_plan_from(dist, &plan)
+}
+
+/// Derive the per-rank exec plan from an existing global [`CaPlan`]
+/// (so a cached plan is not recomputed — see [`crate::engine::MpkEngine`]).
+pub fn ca_exec_plan_from(dist: &DistMatrix, plan: &CaPlan) -> CaExecPlan {
     let nr = dist.n_ranks();
     let mut recvs: Vec<Vec<(usize, Vec<usize>)>> = vec![Vec::new(); nr];
     let mut sends: Vec<Vec<(usize, Vec<u32>)>> = vec![Vec::new(); nr];
@@ -213,7 +227,7 @@ pub fn ca_exec_plan(a: &CsrMatrix, dist: &DistMatrix, p_m: usize) -> CaExecPlan 
     for sp in &mut sends {
         sp.sort_by_key(|&(peer, _)| peer);
     }
-    CaExecPlan { p_m, sends, recvs, ext: plan.ext }
+    CaExecPlan { p_m: plan.p_m, sends, recvs, ext: plan.ext.clone() }
 }
 
 /// One CA promotion round: owned rows to power `p`, plus every external

@@ -18,6 +18,12 @@
 //! lockstep exchanges), and single-rank kernels (`trad_rank`, `dlb_rank`,
 //! `ca_rank`) over [`crate::exec::Communicator`] that the threaded
 //! executor ([`crate::exec`]) runs with one OS thread per rank.
+//!
+//! These are the *kernels*. The public way to run them is
+//! [`crate::engine::MpkEngine`], a prepare-once/apply-many session that
+//! owns the plans and workspaces, caches tail-block plans, and keeps a
+//! persistent rank pool under the threads executor; [`run`] below remains
+//! as the minimal one-shot convenience dispatcher.
 
 pub mod ca;
 pub mod dlb;

@@ -79,9 +79,9 @@ fn chebyshev_boomerang_localized_vs_delocalized() {
     use dlb_mpk::apps::chebyshev::*;
     use dlb_mpk::apps::observables::center_of_mass;
     use dlb_mpk::distsim::DistMatrix;
+    use dlb_mpk::engine::{EngineConfig, Variant};
     use dlb_mpk::matrix::anderson::{anderson, AndersonConfig};
     use dlb_mpk::mpk::dlb::DlbOptions;
-    use dlb_mpk::mpk::NativeBackend;
     use dlb_mpk::partition::partition;
 
     let run = |t_perp: f64| {
@@ -92,15 +92,17 @@ fn chebyshev_boomerang_localized_vs_delocalized() {
         let ccfg = ChebyshevConfig {
             dt: 2.0,
             p_m: 4,
-            engine: Engine::Dlb,
-            dlb: DlbOptions { cache_bytes: 1 << 20, s_m: 50 },
+            engine: EngineConfig {
+                variant: Variant::Dlb(DlbOptions { cache_bytes: 1 << 20, s_m: 50 }),
+                ..EngineConfig::default()
+            },
         };
-        let mut prop = ChebyshevPropagator::new(&h, &dist, ccfg);
+        let mut prop = ChebyshevPropagator::new(&h, &dist, ccfg).expect("engine builds");
         let mut psi = wave_packet(&cfg, 6.0, [std::f64::consts::FRAC_PI_2, 0.0, 0.0]);
         let mut peak: f64 = 0.0;
         let mut last = 0.0;
         for _ in 0..20 {
-            psi = prop.step(&psi, &mut NativeBackend);
+            psi = prop.step(&psi);
             last = center_of_mass(&cfg, &psi.density())[0];
             peak = peak.max(last);
         }

@@ -7,7 +7,8 @@
 //! delivers every `SendPlan` row exactly once.
 
 use dlb_mpk::distsim::{merge_rank_stats, CommStats, DistMatrix};
-use dlb_mpk::exec::{self, thread_comms, Communicator};
+use dlb_mpk::engine::{MpkEngine, Variant};
+use dlb_mpk::exec::{self, thread_comms, Communicator, ExecutorKind};
 use dlb_mpk::matrix::{gen, CsrMatrix};
 use dlb_mpk::mpk::dlb::{self, DlbOptions, Recurrence};
 use dlb_mpk::mpk::{ca, trad_mpk, NativeBackend};
@@ -106,9 +107,91 @@ fn sim_and_threads_agree_on_chebyshev_recurrence() {
     }
 }
 
+/// Engine-level Chebyshev sweeps (`x_m1 = Some(..)`): one sim-executor and
+/// one threads-executor `MpkEngine` per variant must agree bitwise, powers
+/// and merged stats alike.
+#[test]
+fn engine_sim_and_threads_agree_on_chebyshev_sweeps() {
+    let a = gen::stencil_2d_5pt(13, 9);
+    let n = a.n_rows();
+    let x = test_vector(n);
+    let xm1: Vec<f64> = (0..n).map(|i| ((i * 13 % 29) as f64) / 29.0).collect();
+    for np in [1, 3] {
+        let part = partition(&a, np, Method::Block);
+        let d = DistMatrix::build(&a, &part);
+        for variant in [
+            Variant::Trad,
+            Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50 }),
+        ] {
+            let mut sim_eng =
+                MpkEngine::builder(&d).p_m(3).variant(variant).build().unwrap();
+            let mut thr_eng = MpkEngine::builder(&d)
+                .p_m(3)
+                .variant(variant)
+                .executor(ExecutorKind::Threads { n: 0 })
+                .build()
+                .unwrap();
+            let sim = sim_eng.sweep(&x, Some(&xm1), Recurrence::Chebyshev);
+            let thr = thr_eng.sweep(&x, Some(&xm1), Recurrence::Chebyshev);
+            let tag = format!("engine cheb {} np={np}", variant.label());
+            assert_bitwise(&sim.powers, &thr.powers, &tag);
+            assert_eq!(sim.comm, thr.comm, "{tag}");
+            assert_eq!(sim.flop_nnz, thr.flop_nnz, "{tag}");
+        }
+    }
+}
+
+/// Engine *reuse*: two back-to-back sweeps on one engine must be bitwise
+/// identical to two fresh engines — catching workspace or pool state
+/// leaking across sweeps, under both executors and all three variants.
+#[test]
+fn engine_reuse_matches_fresh_engines() {
+    let a = gen::stencil_2d_5pt(11, 10);
+    let n = a.n_rows();
+    let x1 = test_vector(n);
+    let x2: Vec<f64> = (0..n).map(|i| ((i * 7 % 23) as f64 - 11.0) / 5.0).collect();
+    let part = partition(&a, 3, Method::Block);
+    let d = DistMatrix::build(&a, &part);
+    for executor in [ExecutorKind::Sim, ExecutorKind::Threads { n: 0 }] {
+        for variant in [
+            Variant::Trad,
+            Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50 }),
+            Variant::Ca,
+        ] {
+            let build = || {
+                MpkEngine::builder(&d)
+                    .p_m(3)
+                    .variant(variant)
+                    .executor(executor)
+                    .build()
+                    .unwrap()
+            };
+            // Chebyshev second sweep for TRAD/DLB stresses the y_{-1}
+            // workspace path too; CA only supports the power recurrence.
+            let (rec2, xm1) = match variant {
+                Variant::Ca => (Recurrence::Power, None),
+                _ => (Recurrence::Chebyshev, Some(&x1[..])),
+            };
+
+            let mut reused = build();
+            let r1 = reused.sweep(&x1, None, Recurrence::Power);
+            let r2 = reused.sweep(&x2, xm1, rec2);
+
+            let f1 = build().sweep(&x1, None, Recurrence::Power);
+            let f2 = build().sweep(&x2, xm1, rec2);
+
+            let tag = format!("reuse {} @ {executor}", variant.label());
+            assert_bitwise(&r1.powers, &f1.powers, &format!("{tag} sweep 1"));
+            assert_bitwise(&r2.powers, &f2.powers, &format!("{tag} sweep 2"));
+            assert_eq!(r1.comm, f1.comm, "{tag} sweep 1 stats");
+            assert_eq!(r2.comm, f2.comm, "{tag} sweep 2 stats");
+            assert_eq!(reused.sweeps_run(), 2);
+        }
+    }
+}
+
 #[test]
 fn dispatcher_agrees_across_executors_for_all_variants() {
-    use dlb_mpk::exec::ExecutorKind;
     use dlb_mpk::mpk::MpkVariant;
     let a = gen::stencil_2d_5pt(10, 10);
     let x = test_vector(a.n_rows());
