@@ -23,7 +23,7 @@ use dlb_mpk::matrix::gen;
 use dlb_mpk::mpk::dlb::{self, DlbOptions, Recurrence};
 use dlb_mpk::mpk::{overheads, NativeBackend};
 use dlb_mpk::partition::{partition, Method};
-use dlb_mpk::perf::{median_time, roofline};
+use dlb_mpk::perf::{median_time_warm, roofline};
 
 /// One machine-readable measurement row of the measured-parallel section.
 struct Rec {
@@ -39,6 +39,7 @@ struct Rec {
 fn main() {
     let fast = std::env::var("DLB_BENCH_FAST").is_ok();
     let reps = if fast { 1 } else { 3 };
+    let warmup = if fast { 0 } else { 1 };
     let matrices: Vec<(&str, dlb_mpk::matrix::CsrMatrix)> = if fast {
         vec![
             ("Lynx-s", gen::stencil_3d_7pt(96, 32, 32)),
@@ -74,7 +75,7 @@ fn main() {
                 let o_dlb = overheads::dlb_overhead_from_plan(&plan);
                 let x = vec![1.0; a.n_rows()];
                 let mut flops = 0usize;
-                let t_seq = median_time(reps, || {
+                let t_seq = median_time_warm(warmup, reps, || {
                     let r = dlb::execute(&plan, &x, &mut NativeBackend);
                     flops = r.flop_nnz;
                 });
@@ -102,6 +103,7 @@ fn main() {
     measured_parallel(
         &matrices,
         if fast { vec![1, 2, 4] } else { vec![1, 2, 4, 8] },
+        warmup,
         reps,
         &mut recs,
     );
@@ -120,6 +122,7 @@ fn main() {
 fn measured_parallel(
     matrices: &[(&str, dlb_mpk::matrix::CsrMatrix)],
     ranks: Vec<usize>,
+    warmup: usize,
     reps: usize,
     recs: &mut Vec<Rec>,
 ) {
@@ -138,10 +141,10 @@ fn measured_parallel(
             let plan = dlb::plan(&dist, p_m, &opts);
 
             // spawn-per-sweep: every rep pays n_ranks thread spawns + joins
-            let t_trad_spawn = median_time(reps, || {
+            let t_trad_spawn = median_time_warm(warmup, reps, || {
                 exec::trad_threaded(&dist, &x, None, p_m, Recurrence::Power);
             });
-            let t_dlb_spawn = median_time(reps, || {
+            let t_dlb_spawn = median_time_warm(warmup, reps, || {
                 exec::dlb_threaded(&plan, &x, None, Recurrence::Power);
             });
 
@@ -152,7 +155,7 @@ fn measured_parallel(
                 .executor(ExecutorKind::Threads { n: 0 })
                 .build()
                 .expect("engine builds");
-            let t_trad_pool = median_time(reps, || {
+            let t_trad_pool = median_time_warm(warmup, reps, || {
                 trad_eng.sweep(&x, None, Recurrence::Power);
             });
             let mut dlb_eng = MpkEngine::builder(&dist)
@@ -161,7 +164,7 @@ fn measured_parallel(
                 .executor(ExecutorKind::Threads { n: 0 })
                 .build()
                 .expect("engine builds");
-            let t_dlb_pool = median_time(reps, || {
+            let t_dlb_pool = median_time_warm(warmup, reps, || {
                 dlb_eng.sweep(&x, None, Recurrence::Power);
             });
 

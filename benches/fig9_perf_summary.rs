@@ -11,6 +11,10 @@
 //! (nominal L3 260 MiB) up to ~260 MiB — so "in-memory" means ≳ 300 MiB
 //! here, mirroring the paper's 2400 MiB residual-caching boundary on SPR.
 //!
+//! Every measured point also lands in `BENCH_fig9.json` (matrix, variant,
+//! median/min/max seconds, Gflop/s) so the perf trajectory is
+//! machine-comparable across PRs, like fig10's BENCH_fig10.json.
+//!
 //! Run: `cargo bench --bench fig9_perf_summary`   (~20 min full)
 //!      DLB_BENCH_FAST=1 for a reduced sweep.
 
@@ -19,7 +23,16 @@ use dlb_mpk::matrix::gen;
 use dlb_mpk::mpk::dlb::{self, DlbOptions, Recurrence, Workspace};
 use dlb_mpk::mpk::{trad_mpk, NativeBackend};
 use dlb_mpk::partition::{partition, Method};
-use dlb_mpk::perf::{median_time, roofline};
+use dlb_mpk::perf::{median_time_warm, roofline, Timed};
+
+/// One machine-readable measurement row (`variant` = `trad` or tuned `dlb`).
+struct Rec {
+    matrix: String,
+    variant: &'static str,
+    crs_mib: usize,
+    time: Timed,
+    gflops: f64,
+}
 
 /// Measured memory bandwidth of this host (benches/fig7_bandwidth.rs).
 const MEM_BW_GBS: f64 = 7.8;
@@ -29,6 +42,7 @@ const RESIDENT_MIB: usize = 260;
 fn main() {
     let fast = std::env::var("DLB_BENCH_FAST").is_ok();
     let reps = if fast { 1 } else { 3 };
+    let warmup = if fast { 0 } else { 1 };
     let entries = gen::suite();
     // full mode: every matrix targeted to ~340 MiB (in-memory), plus four
     // small cache-resident points to show the "no benefit" regime
@@ -57,6 +71,7 @@ fn main() {
     );
 
     let mut inmem_speedups: Vec<f64> = Vec::new();
+    let mut recs: Vec<Rec> = Vec::new();
     for &(idx, scale) in &selection {
         let e = &entries[idx];
         let a = (e.build)(scale);
@@ -66,7 +81,7 @@ fn main() {
 
         // TRAD at p_m = 4 (per-SpMV rate is p-independent)
         let mut tflops = 0usize;
-        let tt = median_time(reps, || {
+        let tt = median_time_warm(warmup, reps, || {
             let r = trad_mpk(&dist, &x, 4, &mut NativeBackend);
             tflops = r.flop_nnz;
         });
@@ -76,12 +91,13 @@ fn main() {
         let pre = dlb::preprocess(&dist);
         let mut ws = Workspace::default();
         let mut best = (0.0f64, 0usize, 0usize);
+        let mut best_t = tt;
         for &p in &p_candidates {
             for &c in &c_candidates_mib {
                 let opts = DlbOptions { cache_bytes: c << 20, s_m: 50 };
                 let plan = dlb::plan_from_pre(&pre, p, &opts);
                 let mut flops = 0usize;
-                let t = median_time(reps, || {
+                let t = median_time_warm(warmup, reps, || {
                     let r = dlb::execute_recurrence_with(
                         &plan, &x, None, Recurrence::Power, &mut NativeBackend, &mut ws,
                     );
@@ -90,6 +106,7 @@ fn main() {
                 let gf = roofline::gflops(flops, t.median_s);
                 if gf > best.0 {
                     best = (gf, p, c);
+                    best_t = t;
                 }
             }
         }
@@ -110,6 +127,25 @@ fn main() {
             "{:<18} {:>8} {:>9.2} {:>9.2} {:>9.2} {:>9.2} {:>5} {:>6} {:>9}",
             e.name, mib, roof, trad_gf, best.0, speedup, best.1, best.2, regime
         );
+        recs.push(Rec {
+            matrix: e.name.to_string(),
+            variant: "trad",
+            crs_mib: mib,
+            time: tt,
+            gflops: trad_gf,
+        });
+        recs.push(Rec {
+            matrix: e.name.to_string(),
+            variant: "dlb",
+            crs_mib: mib,
+            time: best_t,
+            gflops: best.0,
+        });
+    }
+
+    match write_json(&recs) {
+        Ok(path) => println!("\nwrote {} measurement rows to {path}", recs.len()),
+        Err(e) => eprintln!("\nfailed to write BENCH_fig9.json: {e}"),
     }
 
     if !inmem_speedups.is_empty() {
@@ -123,4 +159,23 @@ fn main() {
         );
         println!("(paper: avg 1.6×/1.7×/1.6×, max 2.5×/2.4×/2.7× on ICL/SPR/MIL)");
     }
+}
+
+/// Emit the measured rows as `BENCH_fig9.json` (median/min/max seconds per
+/// matrix × variant) for cross-PR comparison.
+fn write_json(recs: &[Rec]) -> std::io::Result<&'static str> {
+    let mut s = String::from("{\n  \"bench\": \"fig9\",\n  \"results\": [\n");
+    for (i, r) in recs.iter().enumerate() {
+        let sep = if i + 1 < recs.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"matrix\": \"{}\", \"variant\": \"{}\", \"crs_mib\": {}, \
+             \"median_s\": {}, \"min_s\": {}, \"max_s\": {}, \"reps\": {}, \"gflops\": {}}}{sep}\n",
+            r.matrix, r.variant, r.crs_mib, r.time.median_s, r.time.min_s, r.time.max_s,
+            r.time.reps, r.gflops
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    let path = "BENCH_fig9.json";
+    std::fs::write(path, s)?;
+    Ok(path)
 }

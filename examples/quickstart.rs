@@ -7,7 +7,10 @@
 //! 4. Rebuild the DLB engine on the threads executor: same numbers, real
 //!    OS-thread ranks behind a persistent pool (spawned once, reused by
 //!    every sweep).
-//! 5. Route the same SpMV through the AOT Pallas/JAX artifact via PJRT
+//! 5. Turn on span tracing and read back aggregated metrics — the same
+//!    recorder that `dlb-mpk anderson --trace-out trace.json` uses to
+//!    write a Chrome Trace Event file for chrome://tracing / Perfetto.
+//! 6. Route the same SpMV through the AOT Pallas/JAX artifact via PJRT
 //!    (the three-layer path; requires `make artifacts`).
 //!
 //! Run: `cargo run --release --example quickstart`
@@ -74,6 +77,29 @@ fn main() -> anyhow::Result<()> {
     println!(
         "threads executor: {} rank threads spawned once, {} sweeps dispatched, bitwise equal to sim",
         pool.threads, pool.sweeps
+    );
+
+    // Observability: the same engine with span tracing on. Results stay
+    // bitwise identical; metrics() aggregates per-rank compute/wait/flow
+    // totals, and chrome_trace_json() exports the raw timeline (on the
+    // CLI: `dlb-mpk anderson --trace-out trace.json`, checked by
+    // `dlb-mpk trace-check trace.json`).
+    let mut traced_eng = MpkEngine::builder(&dist)
+        .p_m(p_m)
+        .variant(Variant::Dlb(dlb_opts))
+        .executor(ExecutorKind::Threads { n: 0 })
+        .trace(true)
+        .build()?;
+    let traced = traced_eng.sweep(&x, None, Recurrence::Power);
+    assert_eq!(traced.powers, dlb.powers, "tracing never changes results");
+    let m = traced_eng.metrics().expect("tracing enabled");
+    println!(
+        "traced sweep: {} ranks | compute {:.3} ms | barrier wait {:.3} ms | {} msgs / {} B",
+        m.per_rank.len(),
+        m.total_compute_ns as f64 / 1e6,
+        m.total_wait_ns as f64 / 1e6,
+        m.total_messages,
+        m.total_bytes
     );
 
     // Three-layer path: the same SpMV through the AOT Pallas kernel on PJRT.

@@ -130,6 +130,11 @@ impl ChebyshevPropagator {
         &self.engine
     }
 
+    /// Mutable session access (trace export, host backend products).
+    pub fn engine_mut(&mut self) -> &mut MpkEngine {
+        &mut self.engine
+    }
+
     /// One δτ step: ψ ← e^{−iδτH_s·a} ψ (global phase e^{−iδτ·b} omitted;
     /// b = 0 here, and a global phase is unobservable anyway).
     pub fn step(&mut self, psi: &State) -> State {

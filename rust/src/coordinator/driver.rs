@@ -47,6 +47,7 @@ pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
         variant,
         executor: cfg.executor,
         backend: BackendSpec::Native,
+        trace: false,
     };
     let mut trad_eng = MpkEngine::from_shared(dist.clone(), cfg.p_m, &mk_cfg(Variant::Trad))?;
     let mut dlb_eng = MpkEngine::from_shared(dist.clone(), cfg.p_m, &mk_cfg(Variant::Dlb(opts)))?;
@@ -108,6 +109,7 @@ pub fn run_ca(cfg: &RunConfig) -> Result<(Report, crate::mpk::CaOverheads)> {
         variant: Variant::Ca,
         executor: cfg.executor,
         backend: BackendSpec::Native,
+        trace: false,
     };
     let mut eng = MpkEngine::from_shared(dist.clone(), cfg.p_m, &eng_cfg)?;
     let overheads = eng.ca_overheads().expect("CA engine has a primary plan");

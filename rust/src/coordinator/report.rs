@@ -22,15 +22,16 @@ pub struct Report {
 impl Report {
     pub fn print_header() {
         println!(
-            "{:<10} {:>9} {:>10} {:>8} {:>5} {:>4} {:>9} {:>8} {:>9} {:>7} {:>7} {:>5}",
+            "{:<10} {:>9} {:>10} {:>8} {:>5} {:>4} {:>9} {:>8} {:>9} {:>8} {:>9} {:>7} {:>7} {:>5}",
             "variant", "rows", "nnz", "MiB", "ranks", "p_m", "median_s", "Gflop/s", "comm_MiB",
-            "O_MPI", "O_DLB", "ok"
+            "maxmsg_B", "wait_ms", "O_MPI", "O_DLB", "ok"
         );
     }
 
     pub fn print_row(&self) {
         println!(
-            "{:<10} {:>9} {:>10} {:>8} {:>5} {:>4} {:>9.4} {:>8.2} {:>9.2} {:>7.4} {:>7.4} {:>5}",
+            "{:<10} {:>9} {:>10} {:>8} {:>5} {:>4} {:>9.4} {:>8.2} {:>9.2} {:>8} {:>9.3} \
+             {:>7.4} {:>7.4} {:>5}",
             self.variant,
             self.n_rows,
             self.nnz,
@@ -40,6 +41,8 @@ impl Report {
             self.time.median_s,
             self.gflops,
             self.comm.bytes as f64 / (1 << 20) as f64,
+            self.comm.max_message_bytes,
+            self.comm.total_wait_ns() as f64 / 1e6,
             self.o_mpi,
             self.o_dlb,
             match self.validated {

@@ -7,7 +7,7 @@
 use super::RankLocal;
 
 /// Accumulated communication statistics.
-#[derive(Clone, Debug, Default, PartialEq)]
+#[derive(Clone, Debug, Default)]
 pub struct CommStats {
     /// Number of point-to-point messages.
     pub messages: usize,
@@ -15,26 +15,69 @@ pub struct CommStats {
     pub bytes: usize,
     /// Number of collective exchange rounds (bulk-synchronous steps).
     pub rounds: usize,
+    /// Largest single message payload seen (bytes).
+    pub max_message_bytes: usize,
+    /// Time spent waiting at each round-closing barrier, `wait_ns[r]` for
+    /// round `r` (so `len() == rounds`). Real on threaded transports,
+    /// all-zero on the sequential simulator (paper §6.1: the sim counts
+    /// volume exactly but has no wall-clock wait).
+    pub wait_ns: Vec<u64>,
+}
+
+/// Deterministic-counter equality: wall-clock `wait_ns` is excluded (it
+/// varies run to run on threaded transports), everything else must match —
+/// this is what keeps `sim == threads` stat assertions bitwise meaningful.
+impl PartialEq for CommStats {
+    fn eq(&self, other: &Self) -> bool {
+        self.messages == other.messages
+            && self.bytes == other.bytes
+            && self.rounds == other.rounds
+            && self.max_message_bytes == other.max_message_bytes
+    }
 }
 
 impl CommStats {
-    /// Accumulate stats of a *subsequent* run (rounds add up). For
-    /// combining the per-rank stats of one run use [`merge_rank_stats`],
-    /// where rounds must agree instead.
+    /// Accumulate stats of a *subsequent* run (rounds add up, per-round
+    /// waits concatenate). For combining the per-rank stats of one run use
+    /// [`merge_rank_stats`], where rounds must agree instead.
     pub fn merge(&mut self, other: &CommStats) {
         self.messages += other.messages;
         self.bytes += other.bytes;
         self.rounds += other.rounds;
+        self.max_message_bytes = self.max_message_bytes.max(other.max_message_bytes);
+        self.wait_ns.extend_from_slice(&other.wait_ns);
+    }
+
+    /// Total barrier wait across all rounds.
+    pub fn total_wait_ns(&self) -> u64 {
+        self.wait_ns.iter().sum()
+    }
+
+    /// Counters accrued since the `before` snapshot of the same endpoint
+    /// (the rank pool's per-sweep delta: persistent communicators
+    /// accumulate across sweeps).
+    pub fn delta_since(&self, before: &CommStats) -> CommStats {
+        CommStats {
+            messages: self.messages - before.messages,
+            bytes: self.bytes - before.bytes,
+            rounds: self.rounds - before.rounds,
+            // message sizes are plan-determined and identical every sweep,
+            // so the cumulative max is the per-sweep max
+            max_message_bytes: self.max_message_bytes,
+            wait_ns: self.wait_ns[before.wait_ns.len().min(self.wait_ns.len())..].to_vec(),
+        }
     }
 }
 
 /// Merge the per-rank stats of a single run, deterministically: messages
 /// and bytes sum in ascending rank order; the bulk-synchronous `rounds`
 /// counter must agree across ranks (a divergence means an executor bug)
-/// and is taken once.
+/// and is taken once. `max_message_bytes` is the max over ranks; the
+/// per-round `wait_ns` sums element-wise (total rank-time blocked at each
+/// round's barrier).
 pub fn merge_rank_stats(per_rank: &[CommStats]) -> CommStats {
     let rounds = per_rank.first().map_or(0, |s| s.rounds);
-    let mut out = CommStats { rounds, ..CommStats::default() };
+    let mut out = CommStats { rounds, wait_ns: vec![0; rounds], ..CommStats::default() };
     for (rank, s) in per_rank.iter().enumerate() {
         assert_eq!(
             s.rounds, rounds,
@@ -43,6 +86,10 @@ pub fn merge_rank_stats(per_rank: &[CommStats]) -> CommStats {
         );
         out.messages += s.messages;
         out.bytes += s.bytes;
+        out.max_message_bytes = out.max_message_bytes.max(s.max_message_bytes);
+        for (r, w) in out.wait_ns.iter_mut().enumerate() {
+            *w += s.wait_ns.get(r).copied().unwrap_or(0);
+        }
     }
     out
 }
@@ -55,6 +102,7 @@ pub fn merge_rank_stats(per_rank: &[CommStats]) -> CommStats {
 pub fn exchange_halo(ranks: &[RankLocal], xs: &mut [Vec<f64>], stats: &mut CommStats) {
     assert_eq!(ranks.len(), xs.len());
     stats.rounds += 1;
+    stats.wait_ns.push(0); // sequential: nobody waits
     for i in 0..ranks.len() {
         let nl = ranks[i].n_local();
         // iterate recv plans; pull from the peer's vector
@@ -72,7 +120,9 @@ pub fn exchange_halo(ranks: &[RankLocal], xs: &mut [Vec<f64>], stats: &mut CommS
             let payload: Vec<f64> = sp.rows.iter().map(|&r| xs[from][r as usize]).collect();
             xs[i][nl + slots.start..nl + slots.end].copy_from_slice(&payload);
             stats.messages += 1;
-            stats.bytes += payload.len() * std::mem::size_of::<f64>();
+            let len = payload.len() * std::mem::size_of::<f64>();
+            stats.bytes += len;
+            stats.max_message_bytes = stats.max_message_bytes.max(len);
         }
     }
 }
@@ -86,19 +136,58 @@ mod tests {
 
     #[test]
     fn merge_rank_stats_sums_and_keeps_rounds() {
-        let a = CommStats { messages: 2, bytes: 64, rounds: 3 };
-        let b = CommStats { messages: 1, bytes: 16, rounds: 3 };
+        let a = CommStats { messages: 2, bytes: 64, rounds: 3, ..Default::default() };
+        let b = CommStats { messages: 1, bytes: 16, rounds: 3, ..Default::default() };
         let m = merge_rank_stats(&[a, b]);
-        assert_eq!(m, CommStats { messages: 3, bytes: 80, rounds: 3 });
+        assert_eq!(m, CommStats { messages: 3, bytes: 80, rounds: 3, ..Default::default() });
         assert_eq!(merge_rank_stats(&[]), CommStats::default());
     }
 
     #[test]
     #[should_panic(expected = "exchange rounds")]
     fn merge_rank_stats_rejects_diverged_rounds() {
-        let a = CommStats { messages: 0, bytes: 0, rounds: 2 };
-        let b = CommStats { messages: 0, bytes: 0, rounds: 3 };
+        let a = CommStats { messages: 0, bytes: 0, rounds: 2, ..Default::default() };
+        let b = CommStats { messages: 0, bytes: 0, rounds: 3, ..Default::default() };
         merge_rank_stats(&[a, b]);
+    }
+
+    #[test]
+    fn merge_rank_stats_sums_waits_and_maxes_messages() {
+        let a = CommStats {
+            messages: 2,
+            bytes: 64,
+            rounds: 2,
+            max_message_bytes: 48,
+            wait_ns: vec![10, 20],
+        };
+        let b = CommStats {
+            messages: 1,
+            bytes: 16,
+            rounds: 2,
+            max_message_bytes: 16,
+            wait_ns: vec![5, 7],
+        };
+        let m = merge_rank_stats(&[a.clone(), b.clone()]);
+        assert_eq!(m.max_message_bytes, 48, "merged max is the max over ranks");
+        assert_eq!(m.wait_ns, vec![15, 27], "per-round waits sum element-wise");
+        assert_eq!(m.total_wait_ns(), 42);
+        // equality ignores wall-clock waits but not the max
+        let mut a2 = a.clone();
+        a2.wait_ns = vec![999, 999];
+        assert_eq!(a, a2);
+        a2.max_message_bytes = 8;
+        assert_ne!(a, a2);
+        // sequential accumulation concatenates waits
+        let mut acc = a.clone();
+        acc.merge(&b);
+        assert_eq!(acc.rounds, 4);
+        assert_eq!(acc.wait_ns, vec![10, 20, 5, 7]);
+        assert_eq!(acc.max_message_bytes, 48);
+        // per-sweep delta takes the wait tail
+        let delta = acc.delta_since(&a);
+        assert_eq!(delta.messages, b.messages);
+        assert_eq!(delta.rounds, 2);
+        assert_eq!(delta.wait_ns, vec![5, 7]);
     }
 
     #[test]

@@ -55,8 +55,9 @@ use crate::exec::ExecutorKind;
 use crate::matrix::CsrMatrix;
 use crate::mpk::ca::{self, CaExecPlan, CaOverheads, CaPlan};
 use crate::mpk::dlb::{self, DlbOptions, DlbPlan, DlbPre, Recurrence, Workspace};
-use crate::mpk::trad::trad_recurrence;
+use crate::mpk::trad::trad_recurrence_traced;
 use crate::mpk::{MpkResult, NativeBackend, SpmvBackend};
+use crate::trace::{Metrics, TraceSession};
 
 use pool::{Job, RankPool};
 pub use pool::PoolStats;
@@ -136,6 +137,10 @@ pub struct EngineConfig {
     pub variant: Variant,
     pub executor: ExecutorKind,
     pub backend: BackendSpec,
+    /// Record per-rank span timelines (see [`crate::trace`]). Off by
+    /// default: the disabled recorders cost one branch per would-be event
+    /// and results are bitwise identical either way.
+    pub trace: bool,
 }
 
 impl Default for EngineConfig {
@@ -144,6 +149,7 @@ impl Default for EngineConfig {
             variant: Variant::Dlb(DlbOptions::default()),
             executor: ExecutorKind::Sim,
             backend: BackendSpec::Native,
+            trace: false,
         }
     }
 }
@@ -175,6 +181,12 @@ impl<'a> MpkEngineBuilder<'a> {
 
     pub fn backend(mut self, b: BackendSpec) -> Self {
         self.cfg.backend = b;
+        self
+    }
+
+    /// Enable per-rank span tracing (see [`EngineConfig::trace`]).
+    pub fn trace(mut self, on: bool) -> Self {
+        self.cfg.trace = on;
         self
     }
 
@@ -215,6 +227,8 @@ pub struct MpkEngine {
     executor: ExecutorKind,
     state: VariantState,
     pool: Option<RankPool>,
+    /// Span-trace collection (`None` unless [`EngineConfig::trace`]).
+    trace: Option<TraceSession>,
     /// Host-side backend: runs every kernel under the sequential executor,
     /// and is exposed via [`MpkEngine::backend`] for ancillary products
     /// (e.g. the CG loop's full-matrix SpMV) so a whole solver honors one
@@ -294,9 +308,12 @@ impl MpkEngine {
             }
         };
 
+        let trace = if cfg.trace { Some(TraceSession::new(dist_io.n_ranks())) } else { None };
         let pool = match cfg.executor {
             ExecutorKind::Sim => None,
-            ExecutorKind::Threads { .. } => Some(RankPool::spawn(dist_io.n_ranks(), &cfg.backend)),
+            ExecutorKind::Threads { .. } => {
+                Some(RankPool::spawn(dist_io.n_ranks(), &cfg.backend, trace.as_ref()))
+            }
         };
 
         Ok(Self {
@@ -306,6 +323,7 @@ impl MpkEngine {
             executor: cfg.executor,
             state,
             pool,
+            trace,
             host_backend: cfg.backend.make(),
             plans_built,
             sweeps: 0,
@@ -354,21 +372,30 @@ impl MpkEngine {
         rec: Recurrence,
     ) -> SweepResult {
         if matches!(self.state, VariantState::Trad) {
-            return trad_recurrence(&self.dist, x0, x_m1, p_m, rec, self.host_backend.as_mut());
+            return trad_recurrence_traced(
+                &self.dist,
+                x0,
+                x_m1,
+                p_m,
+                rec,
+                self.host_backend.as_mut(),
+                self.trace.as_mut(),
+            );
         }
         if matches!(self.state, VariantState::Dlb { .. }) {
             let plan = self.dlb_plan_for(p_m);
-            let ws = match &mut self.state {
-                VariantState::Dlb { ws, .. } => ws,
+            let (ws, trace) = match &mut self.state {
+                VariantState::Dlb { ws, .. } => (ws, self.trace.as_mut()),
                 _ => unreachable!(),
             };
-            return dlb::execute_recurrence_with(
+            return dlb::execute_recurrence_traced(
                 &plan,
                 x0,
                 x_m1,
                 rec,
                 self.host_backend.as_mut(),
                 ws,
+                trace,
             );
         }
         let sess = self.ca_session_for(p_m);
@@ -376,7 +403,7 @@ impl MpkEngine {
             VariantState::Ca { a, .. } => a.clone(),
             _ => unreachable!(),
         };
-        ca::ca_execute_planned(&a, &self.dist, &sess.plan, x0).result
+        ca::ca_execute_planned_traced(&a, &self.dist, &sess.plan, x0, self.trace.as_mut()).result
     }
 
     /// Dispatch one sweep over the persistent rank pool and merge the
@@ -519,6 +546,36 @@ impl MpkEngine {
     /// Persistent-pool counters (`None` under the sequential executor).
     pub fn pool_stats(&self) -> Option<PoolStats> {
         self.pool.as_ref().map(|p| p.stats())
+    }
+
+    /// Whether per-rank span tracing is on (see [`EngineConfig::trace`]).
+    pub fn is_tracing(&self) -> bool {
+        self.trace.is_some()
+    }
+
+    /// Pull rank-pool workers' trace buffers into the session (sim-executor
+    /// kernels absorb eagerly; pool workers buffer until harvested).
+    fn harvest_pool(&mut self) {
+        if let (Some(pool), Some(ts)) = (self.pool.as_mut(), self.trace.as_mut()) {
+            for (rank, ev) in pool.harvest().into_iter().enumerate() {
+                ts.absorb(rank, ev);
+            }
+        }
+    }
+
+    /// Aggregated trace metrics over everything swept so far (`None` unless
+    /// tracing is enabled). Harvests the rank pool first.
+    pub fn metrics(&mut self) -> Option<Metrics> {
+        self.harvest_pool();
+        self.trace.as_ref().map(|ts| ts.metrics())
+    }
+
+    /// Chrome Trace Event Format JSON of everything swept so far (`None`
+    /// unless tracing is enabled) — open in `chrome://tracing` or Perfetto.
+    /// Harvests the rank pool first.
+    pub fn chrome_trace_json(&mut self) -> Option<String> {
+        self.harvest_pool();
+        self.trace.as_ref().map(|ts| ts.chrome_trace_json())
     }
 
     /// Paper Eq. (3) DLB overhead of the primary plan (`None` for other

@@ -40,6 +40,7 @@ use crate::mpk::ca::CaExecPlan;
 use crate::mpk::dlb::{DlbPlan, Recurrence};
 use crate::mpk::SpmvBackend;
 use crate::mpk::{ca, dlb, trad};
+use crate::trace::{Event, Span, TraceSession};
 
 use super::BackendSpec;
 
@@ -67,6 +68,10 @@ pub(crate) enum Job {
         x: Vec<f64>,
         p_m: usize,
     },
+    /// Drain the worker's trace buffer (no sweep, no stats delta). The
+    /// worker replies on the dedicated sender so the result channel's
+    /// one-reply-per-sweep invariant is untouched.
+    Harvest(Sender<Vec<Event>>),
 }
 
 /// Pool health/usage counters (see [`crate::engine::MpkEngine::pool_stats`]).
@@ -90,9 +95,16 @@ pub(crate) struct RankPool {
 
 impl RankPool {
     /// Spawn the rank threads, each with its [`ThreadComm`] endpoint and a
-    /// private backend instance from `backend`.
-    pub(crate) fn spawn(n: usize, backend: &BackendSpec) -> Self {
-        let comms = thread_comms(n);
+    /// private backend instance from `backend`. With `trace` set, each
+    /// endpoint gets an enabled recorder (shared session epoch) before it
+    /// moves into its worker.
+    pub(crate) fn spawn(n: usize, backend: &BackendSpec, trace: Option<&TraceSession>) -> Self {
+        let mut comms = thread_comms(n);
+        if let Some(ts) = trace {
+            for (i, c) in comms.iter_mut().enumerate() {
+                c.set_tracer(ts.recorder(i));
+            }
+        }
         let mut jobs = Vec::with_capacity(n);
         let mut results = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
@@ -134,6 +146,18 @@ impl RankPool {
             .map(|rx| rx.recv().expect("rank worker panicked mid-sweep"))
             .collect()
     }
+
+    /// Drain every worker's trace buffer, in rank order. Does not count as
+    /// a sweep. Returns empty buffers when tracing is disabled.
+    pub(crate) fn harvest(&mut self) -> Vec<Vec<Event>> {
+        let mut out = Vec::with_capacity(self.n);
+        for tx in &self.jobs {
+            let (ev_tx, ev_rx) = channel::<Vec<Event>>();
+            tx.send(Job::Harvest(ev_tx)).expect("rank worker died before harvest");
+            out.push(ev_rx.recv().expect("rank worker died during harvest"));
+        }
+        out
+    }
 }
 
 impl Drop for RankPool {
@@ -158,7 +182,19 @@ fn worker(
     jobs: Receiver<Job>,
     results: Sender<(RankRun, CommStats)>,
 ) {
+    let mut park_t0 = comm.tracer().now();
     while let Ok(job) = jobs.recv() {
+        comm.tracer().closed_span(Span::JobPark, park_t0);
+        let job = match job {
+            Job::Harvest(tx) => {
+                let ev = comm.tracer().take_events();
+                let _ = tx.send(ev);
+                park_t0 = comm.tracer().now();
+                continue;
+            }
+            other => other,
+        };
+        let t0 = comm.tracer().now();
         let before = comm.stats().clone();
         let run = match job {
             Job::Trad { dist, x, x_m1, p_m, rec } => trad::trad_rank(
@@ -190,15 +226,13 @@ fn worker(
                 p_m,
                 &mut comm,
             ),
+            Job::Harvest(_) => unreachable!("handled above"),
         };
-        let after = comm.stats();
-        let delta = CommStats {
-            messages: after.messages - before.messages,
-            bytes: after.bytes - before.bytes,
-            rounds: after.rounds - before.rounds,
-        };
+        let delta = comm.stats().delta_since(&before);
+        comm.tracer().closed_span(Span::JobDispatch, t0);
         if results.send((run, delta)).is_err() {
             break; // engine dropped mid-sweep
         }
+        park_t0 = comm.tracer().now();
     }
 }

@@ -26,13 +26,22 @@
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use crate::distsim::{CommStats, RankLocal};
+use crate::trace::{RankRecorder, Span};
 
 /// Point-to-point halo communication endpoint of one rank.
 pub trait Communicator: Send {
     fn rank(&self) -> usize;
     fn n_ranks(&self) -> usize;
+
+    /// This rank's trace recorder — a disabled no-op unless a
+    /// [`crate::trace::TraceSession`] attached an enabled one. Transports
+    /// record their own `comm.*` spans through it internally; kernels
+    /// record their compute spans through the same buffer, so each rank
+    /// has exactly one interleaved timeline.
+    fn tracer(&mut self) -> &mut RankRecorder;
 
     /// Nonblocking tagged send (the payload is copied out immediately,
     /// like a buffered `MPI_Isend`).
@@ -79,7 +88,15 @@ pub trait Communicator: Send {
 
 fn account_recv(stats: &mut CommStats, len: usize) {
     stats.messages += 1;
-    stats.bytes += len * std::mem::size_of::<f64>();
+    let bytes = len * std::mem::size_of::<f64>();
+    stats.bytes += bytes;
+    stats.max_message_bytes = stats.max_message_bytes.max(bytes);
+}
+
+/// Payload bytes as the `u32` a [`Span`] carries (halo messages are far
+/// below 4 GiB; saturate rather than wrap if one ever is not).
+fn span_bytes(len: usize) -> u32 {
+    (len * std::mem::size_of::<f64>()).min(u32::MAX as usize) as u32
 }
 
 // ---------------------------------------------------------------------------
@@ -99,14 +116,33 @@ pub struct SimComm {
     n: usize,
     mailbox: Arc<Mutex<SimMailbox>>,
     stats: CommStats,
+    tracer: RankRecorder,
 }
 
 /// Build connected [`SimComm`] endpoints for `n` ranks.
 pub fn sim_comms(n: usize) -> Vec<SimComm> {
     let mailbox = Arc::new(Mutex::new(SimMailbox::new()));
     (0..n)
-        .map(|rank| SimComm { rank, n, mailbox: mailbox.clone(), stats: CommStats::default() })
+        .map(|rank| SimComm {
+            rank,
+            n,
+            mailbox: mailbox.clone(),
+            stats: CommStats::default(),
+            tracer: RankRecorder::disabled(),
+        })
         .collect()
+}
+
+impl SimComm {
+    /// Attach a recorder (normally [`crate::trace::TraceSession::recorder`]).
+    pub fn set_tracer(&mut self, tracer: RankRecorder) {
+        self.tracer = tracer;
+    }
+
+    /// Drain recorded events (for absorbing into the owning session).
+    pub fn take_trace_events(&mut self) -> Vec<crate::trace::Event> {
+        self.tracer.take_events()
+    }
 }
 
 impl Communicator for SimComm {
@@ -118,13 +154,21 @@ impl Communicator for SimComm {
         self.n
     }
 
+    fn tracer(&mut self) -> &mut RankRecorder {
+        &mut self.tracer
+    }
+
     fn send(&mut self, to: usize, tag: u64, payload: Vec<f64>) {
         assert!(to < self.n && to != self.rank, "bad destination {to}");
+        let t0 = self.tracer.now();
+        let bytes = span_bytes(payload.len());
         let prev = self.mailbox.lock().unwrap().insert((self.rank, to, tag), payload);
         assert!(prev.is_none(), "duplicate send {} -> {to} tag {tag}", self.rank);
+        self.tracer.closed_span(Span::CommSend { to: to as u32, bytes }, t0);
     }
 
     fn recv(&mut self, from: usize, tag: u64) -> Vec<f64> {
+        let t0 = self.tracer.now();
         let payload = self
             .mailbox
             .lock()
@@ -138,11 +182,16 @@ impl Communicator for SimComm {
                 )
             });
         account_recv(&mut self.stats, payload.len());
+        self.tracer
+            .closed_span(Span::CommRecv { from: from as u32, bytes: span_bytes(payload.len()) }, t0);
         payload
     }
 
     fn end_round(&mut self) {
+        let t0 = self.tracer.now();
         self.stats.rounds += 1;
+        self.stats.wait_ns.push(0); // sequential lockstep: nobody waits
+        self.tracer.closed_span(Span::CommWait { round: (self.stats.rounds - 1) as u32 }, t0);
     }
 
     fn stats(&self) -> &CommStats {
@@ -262,6 +311,19 @@ pub struct ThreadComm {
     pending: HashMap<(usize, u64), Vec<f64>>,
     stats: CommStats,
     barrier: Arc<RoundBarrier>,
+    tracer: RankRecorder,
+}
+
+impl ThreadComm {
+    /// Attach a recorder (normally [`crate::trace::TraceSession::recorder`]).
+    pub fn set_tracer(&mut self, tracer: RankRecorder) {
+        self.tracer = tracer;
+    }
+
+    /// Drain recorded events (for absorbing into the owning session).
+    pub fn take_trace_events(&mut self) -> Vec<crate::trace::Event> {
+        self.tracer.take_events()
+    }
 }
 
 /// Build connected [`ThreadComm`] endpoints for `n` ranks (move each into
@@ -289,6 +351,7 @@ pub fn thread_comms(n: usize) -> Vec<ThreadComm> {
             pending: HashMap::new(),
             stats: CommStats::default(),
             barrier: barrier.clone(),
+            tracer: RankRecorder::disabled(),
         })
         .collect()
 }
@@ -316,15 +379,23 @@ impl Communicator for ThreadComm {
         self.n
     }
 
+    fn tracer(&mut self) -> &mut RankRecorder {
+        &mut self.tracer
+    }
+
     fn send(&mut self, to: usize, tag: u64, payload: Vec<f64>) {
+        let t0 = self.tracer.now();
+        let bytes = span_bytes(payload.len());
         self.txs[to]
             .as_ref()
             .unwrap_or_else(|| panic!("rank {} sending to itself", self.rank))
             .send((self.rank, tag, payload))
             .expect("peer rank hung up");
+        self.tracer.closed_span(Span::CommSend { to: to as u32, bytes }, t0);
     }
 
     fn recv(&mut self, from: usize, tag: u64) -> Vec<f64> {
+        let t0 = self.tracer.now();
         let key = (from, tag);
         let payload = loop {
             if let Some(p) = self.pending.remove(&key) {
@@ -336,12 +407,21 @@ impl Communicator for ThreadComm {
             assert!(prev.is_none(), "duplicate message {f} -> {} tag {t}", self.rank);
         };
         account_recv(&mut self.stats, payload.len());
+        self.tracer
+            .closed_span(Span::CommRecv { from: from as u32, bytes: span_bytes(payload.len()) }, t0);
         payload
     }
 
     fn end_round(&mut self) {
+        // Barrier wait is measured unconditionally (CommStats carries it
+        // even with tracing off) — one extra Instant read per round is
+        // noise next to the rendezvous itself.
+        let wall0 = Instant::now();
+        let t0 = self.tracer.now();
         self.stats.rounds += 1;
         self.barrier.wait(self.stats.rounds);
+        self.stats.wait_ns.push(wall0.elapsed().as_nanos() as u64);
+        self.tracer.closed_span(Span::CommWait { round: (self.stats.rounds - 1) as u32 }, t0);
     }
 
     fn stats(&self) -> &CommStats {

@@ -33,6 +33,8 @@
 //!   Mohiyuddin et al. 2009), and `dlb` (the paper's contribution).
 //! * [`cachesim`] — LRU cache simulator replaying MPK reference streams to
 //!   count main-memory traffic.
+//! * [`trace`] — per-rank span tracing + metrics: chrome-trace export and
+//!   aggregated wait/compute/flow summaries behind an engine knob.
 //! * [`perf`] — roofline model (paper Eq. 4), bandwidth measurement, timers.
 //! * [`apps`] — Chebyshev time propagation of the Anderson model (paper §7).
 //! * [`runtime`] — PJRT/XLA execution of the AOT Pallas/JAX artifacts.
@@ -51,4 +53,5 @@ pub mod partition;
 pub mod perf;
 pub mod race;
 pub mod runtime;
+pub mod trace;
 pub mod util;

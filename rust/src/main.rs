@@ -34,6 +34,10 @@ fn real_main() -> Result<()> {
         print_usage();
         return Ok(());
     };
+    // trace-check takes a positional path, which Flags::parse would reject
+    if cmd == "trace-check" {
+        return cmd_trace_check(&args[1..]);
+    }
     let flags = Flags::parse(&args[1..])?;
     match cmd.as_str() {
         "run" => cmd_run(&flags),
@@ -64,6 +68,7 @@ fn include_str_usage() -> &'static str {
        suite      print the Table-4 synthetic suite\n\
        bandwidth  load-only bandwidth ladder (Fig. 7)\n\
        anderson   Chebyshev/Anderson propagation demo (Fig. 11)\n\
+       trace-check PATH [--min-ranks N]   validate a chrome trace JSON\n\
      \n\
      COMMON FLAGS:\n\
        --matrix SPEC    stencil2d:NX,NY | stencil3d:NX,NY,NZ |\n\
@@ -77,7 +82,10 @@ fn include_str_usage() -> &'static str {
                         one OS thread per rank, measured wall-clock;\n\
                         threads(N) runs N ranks/threads, overriding --ranks)\n\
        --reps R         timing repetitions (default 5)\n\
-       --no-validate    skip TRAD/DLB equivalence check\n"
+       --no-validate    skip TRAD/DLB equivalence check\n\
+       --trace-out PATH (anderson) record per-rank spans, write a Chrome\n\
+                        Trace Event JSON (chrome://tracing / Perfetto) and\n\
+                        print a metrics summary\n"
 }
 
 struct Flags(std::collections::BTreeMap<String, String>);
@@ -258,6 +266,7 @@ fn cmd_anderson(flags: &Flags) -> Result<()> {
     let l = flags.usize("l", 24)?;
     let w = flags.f64("w", 1.0)?;
     let steps = flags.usize("steps", 5)?;
+    let trace_out = flags.get("trace-out").map(str::to_string);
     let executor = ExecutorKind::parse(flags.get("executor").unwrap_or("sim"))
         .context("--executor must be sim|threads|threads(N)")?;
     let ranks = executor.ranks(flags.usize("ranks", 1)?);
@@ -277,6 +286,7 @@ fn cmd_anderson(flags: &Flags) -> Result<()> {
             }),
             executor,
             backend: BackendSpec::Native,
+            trace: trace_out.is_some(),
         },
     };
     let mut prop = ChebyshevPropagator::new(&h, &dist, ccfg)?;
@@ -303,5 +313,54 @@ fn cmd_anderson(flags: &Flags) -> Result<()> {
             pool.threads, pool.sweeps
         );
     }
+    if let Some(path) = trace_out {
+        let json = prop
+            .engine_mut()
+            .chrome_trace_json()
+            .expect("tracing was enabled for --trace-out");
+        std::fs::write(&path, &json).with_context(|| format!("writing {path}"))?;
+        let m = prop.engine_mut().metrics().expect("tracing was enabled for --trace-out");
+        println!("trace: {path} ({} ranks)", m.per_rank.len());
+        println!(
+            "trace totals: compute {:.3} ms | wait {:.3} ms | {} msgs | {} bytes",
+            m.total_compute_ns as f64 / 1e6,
+            m.total_wait_ns as f64 / 1e6,
+            m.total_messages,
+            m.total_bytes,
+        );
+        for r in &m.per_rank {
+            println!(
+                "  rank {}: compute {:.3} ms | wait {:.3} ms | recv {} msgs / {} bytes",
+                r.rank,
+                r.compute_ns as f64 / 1e6,
+                r.wait_ns as f64 / 1e6,
+                r.messages,
+                r.bytes,
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_trace_check(args: &[String]) -> Result<()> {
+    use dlb_mpk::trace::validate_chrome_trace;
+    let Some(path) = args.first().filter(|a| !a.starts_with("--")) else {
+        bail!("usage: dlb-mpk trace-check PATH [--min-ranks N]");
+    };
+    let flags = Flags::parse(&args[1..])?;
+    let min_ranks = flags.usize("min-ranks", 1)?;
+    let json = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let check = validate_chrome_trace(&json).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    anyhow::ensure!(
+        check.n_ranks() >= min_ranks,
+        "{path}: trace covers {} rank(s), expected >= {min_ranks}",
+        check.n_ranks()
+    );
+    println!(
+        "{path}: OK — {} events, {} ranks, spans per rank: {:?}",
+        check.events,
+        check.n_ranks(),
+        check.spans_per_rank.values().collect::<Vec<_>>()
+    );
     Ok(())
 }

@@ -16,6 +16,7 @@ use crate::distsim::{CommStats, DistMatrix, RankLocal};
 use crate::exec::{Communicator, RankRun};
 use crate::matrix::CsrMatrix;
 use crate::mpk::MpkResult;
+use crate::trace::{RankRecorder, Span, TraceSession};
 
 /// Exact CA-MPK overheads (accumulated over all ranks).
 #[derive(Clone, Debug, Default)]
@@ -129,6 +130,22 @@ pub fn ca_mpk_with(a: &CsrMatrix, dist: &DistMatrix, x: &[f64], p_m: usize) -> C
 /// (counting-simulator) path of [`crate::engine::MpkEngine`], which caches
 /// the plan across sweeps instead of rebuilding it per call.
 pub fn ca_execute_planned(a: &CsrMatrix, dist: &DistMatrix, plan: &CaPlan, x: &[f64]) -> CaOutput {
+    ca_execute_planned_traced(a, dist, plan, x, None)
+}
+
+/// [`ca_execute_planned`] with an optional [`TraceSession`]. The sequential
+/// CA path has no communicator endpoints, so per-rank recorders are created
+/// directly: the accounting pass becomes a `ca.exchange` span wrapping
+/// zero-duration synthetic `comm.recv` spans (one per peer message, real
+/// byte counts, so metrics flows still sum to [`CommStats`]), and each
+/// promotion round a `ca.promote(p)` span.
+pub fn ca_execute_planned_traced(
+    a: &CsrMatrix,
+    dist: &DistMatrix,
+    plan: &CaPlan,
+    x: &[f64],
+    mut trace: Option<&mut TraceSession>,
+) -> CaOutput {
     let p_m = plan.p_m;
     let mut comm = CommStats::default();
     let mut flop_nnz = 0usize;
@@ -136,23 +153,43 @@ pub fn ca_execute_planned(a: &CsrMatrix, dist: &DistMatrix, plan: &CaPlan, x: &[
     let mut powers: Vec<Vec<f64>> = (0..=p_m).map(|_| vec![0.0; n]).collect();
     powers[0].copy_from_slice(x);
 
-    // one "big" exchange: every rank receives x for all its external classes
+    let mut recorders: Vec<RankRecorder> = match trace.as_deref() {
+        Some(ts) => (0..dist.n_ranks()).map(|i| ts.recorder(i)).collect(),
+        None => (0..dist.n_ranks()).map(|_| RankRecorder::disabled()).collect(),
+    };
+
+    // one "big" exchange: every rank receives x for all its external
+    // classes — one message per (rank, peer owner) pair, sized by the run
+    // of that owner's global ids (matching [`ca_rank`]'s receiver-side
+    // accounting bitwise, max_message_bytes included)
     comm.rounds = 1;
-    for (r, classes) in dist.ranks.iter().zip(&plan.ext) {
-        let _ = r;
-        let total: usize = classes.iter().map(|c| c.len()).sum();
-        if total > 0 {
-            // message count: one per (rank, peer owner) pair present
-            let mut owners: Vec<u32> = classes
-                .iter()
-                .flatten()
-                .map(|&g| dist.owner_of[g])
-                .collect();
-            owners.sort_unstable();
-            owners.dedup();
-            comm.messages += owners.len();
-            comm.bytes += total * std::mem::size_of::<f64>();
+    comm.wait_ns.push(0);
+    for ((rank, _r), classes) in dist.ranks.iter().enumerate().zip(&plan.ext) {
+        let rec = &mut recorders[rank];
+        rec.begin(Span::CaExchange);
+        let mut owners: Vec<u32> =
+            classes.iter().flatten().map(|&g| dist.owner_of[g]).collect();
+        owners.sort_unstable();
+        let mut s = 0usize;
+        while s < owners.len() {
+            let mut e = s;
+            while e < owners.len() && owners[e] == owners[s] {
+                e += 1;
+            }
+            let bytes = (e - s) * std::mem::size_of::<f64>();
+            comm.messages += 1;
+            comm.bytes += bytes;
+            comm.max_message_bytes = comm.max_message_bytes.max(bytes);
+            let tr = rec.now();
+            rec.closed_span(
+                Span::CommRecv { from: owners[s], bytes: bytes.min(u32::MAX as usize) as u32 },
+                tr,
+            );
+            s = e;
         }
+        let tw = rec.now();
+        rec.closed_span(Span::CommWait { round: 0 }, tw);
+        rec.end();
     }
 
     // local phase per rank: promote owned to p_m, E_k to p_m-1-k. We emulate
@@ -161,11 +198,19 @@ pub fn ca_execute_planned(a: &CsrMatrix, dist: &DistMatrix, plan: &CaPlan, x: &[
     // and recomputes external rows redundantly (same values), a shared
     // global buffer reproduces the numerics exactly while the counters
     // capture the redundancy.
-    for (r, classes) in dist.ranks.iter().zip(&plan.ext) {
+    for ((rank, r), classes) in dist.ranks.iter().enumerate().zip(&plan.ext) {
         for p in 1..=p_m {
             let (prevs, curs) = powers.split_at_mut(p);
+            let t0 = recorders[rank].now();
             flop_nnz +=
                 ca_promote_round(a, &r.owned, classes, p_m, p, &prevs[p - 1], &mut curs[0]);
+            recorders[rank].closed_span(Span::CaPromote { power: p as u32 }, t0);
+        }
+    }
+
+    if let Some(ts) = trace.as_deref_mut() {
+        for (i, mut rec) in recorders.into_iter().enumerate() {
+            ts.absorb(i, rec.take_events());
         }
     }
 
@@ -292,7 +337,9 @@ pub fn ca_rank(
     }
 
     // one "big" exchange: ship input values peers fetch, receive all
-    // external classes
+    // external classes (transports record the comm.send/recv/wait spans;
+    // the ca.exchange umbrella span wraps the whole phase)
+    comm.tracer().begin(Span::CaExchange);
     for (peer, rows) in sends {
         let payload: Vec<f64> = rows.iter().map(|&l| x0[l as usize]).collect();
         comm.send(*peer, 0, payload);
@@ -305,6 +352,7 @@ pub fn ca_rank(
         }
     }
     comm.end_round();
+    comm.tracer().end();
 
     // local phase: promote owned to p_m, E_k to p_m-1-k (redundantly),
     // extracting the rank's owned slice of each power as it completes
@@ -313,10 +361,13 @@ pub fn ca_rank(
     ys.push(extract(&prev));
     let mut flop_nnz = 0usize;
     for p in 1..=p_m {
+        let t0 = comm.tracer().now();
         flop_nnz += ca_promote_round(a, &r.owned, ext, p_m, p, &prev, &mut cur);
+        comm.tracer().closed_span(Span::CaPromote { power: p as u32 }, t0);
         ys.push(extract(&cur));
         std::mem::swap(&mut prev, &mut cur);
     }
+    comm.tracer().counter("flop_nnz", flop_nnz as f64);
     RankRun { ys, flop_nnz }
 }
 

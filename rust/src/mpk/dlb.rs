@@ -29,6 +29,7 @@ use crate::graph::{bfs_levels, Adjacency, Levels};
 use crate::mpk::{kernel_step, MpkResult, SpmvBackend};
 use crate::race::grouping::group_levels_solo_prefix;
 use crate::race::schedule::{wavefront_capped, Step};
+use crate::trace::{Span, TraceSession};
 
 /// Tuning knobs mirroring the paper's RACE parameters (§6.2).
 #[derive(Clone, Copy, Debug)]
@@ -360,6 +361,23 @@ pub fn execute_recurrence_with(
     backend: &mut dyn SpmvBackend,
     ws: &mut Workspace,
 ) -> MpkResult {
+    execute_recurrence_traced(plan, x, x_m1, rec, backend, ws, None)
+}
+
+/// [`execute_recurrence_with`] with an optional [`TraceSession`]: per-rank
+/// recorders ride the [`SimComm`] endpoints, wavefront steps become
+/// `dlb.wavefront(g,p)` spans and remainder advances `dlb.remainder(r,k)`
+/// spans, and the drained events are absorbed back.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_recurrence_traced(
+    plan: &DlbPlan,
+    x: &[f64],
+    x_m1: Option<&[f64]>,
+    rec: Recurrence,
+    backend: &mut dyn SpmvBackend,
+    ws: &mut Workspace,
+    mut trace: Option<&mut TraceSession>,
+) -> MpkResult {
     let p_m = plan.p_m;
     let dist = &plan.dist;
     let nr = dist.n_ranks();
@@ -377,6 +395,11 @@ pub fn execute_recurrence_with(
     let ym1: Option<&[Vec<f64>]> = x_m1.map(|_| ym1_store.as_slice());
 
     let mut comms = sim_comms(nr);
+    if let Some(ts) = trace.as_deref() {
+        for (i, c) in comms.iter_mut().enumerate() {
+            c.set_tracer(ts.recorder(i));
+        }
+    }
     let mut flop_nnz = 0usize;
 
     // One wavefront/class step for rank `i`: y_p[lo..hi] from y_{p-1} (and
@@ -408,7 +431,12 @@ pub fn execute_recurrence_with(
         let pl = &plan.ranks[i];
         for s in &pl.schedule {
             let (lo, hi) = pl.ranges[s.group];
+            let t0 = comms[i].tracer().now();
             do_step(ys, &ym1, &mut flop_nnz, i, lo, hi, s.power, backend);
+            comms[i].tracer().closed_span(
+                Span::DlbWavefront { group: s.group as u32, power: s.power as u32 },
+                t0,
+            );
         }
     }
 
@@ -423,11 +451,21 @@ pub fn execute_recurrence_with(
                     continue;
                 }
                 // advance I_k from power p + k - 1 to p + k
+                let t0 = comms[i].tracer().now();
                 do_step(ys, &ym1, &mut flop_nnz, i, lo, hi, p + k, backend);
+                comms[i].tracer().closed_span(
+                    Span::DlbRemainder { round: p as u32, class: k as u32 },
+                    t0,
+                );
             }
         }
     }
 
+    if let Some(ts) = trace.as_deref_mut() {
+        for (i, c) in comms.iter_mut().enumerate() {
+            ts.absorb(i, c.take_trace_events());
+        }
+    }
     let per_rank: Vec<_> = comms.iter().map(|c| c.stats().clone()).collect();
     MpkResult {
         powers: (1..=p_m).map(|p| dist.gather(&ys[p])).collect(),
@@ -491,8 +529,13 @@ pub fn dlb_rank(
         {
             let (prevs, cur) = ys.split_at_mut(p);
             let prev2: Option<&[f64]> = if p >= 2 { Some(&prevs[p - 2][..]) } else { x_m1 };
+            let t0 = comm.tracer().now();
             flop_nnz +=
                 kernel_step(&r.a, rec, prev2, &prevs[p - 1], &mut cur[0], lo, hi, backend);
+            comm.tracer().closed_span(
+                Span::DlbWavefront { group: s.group as u32, power: p as u32 },
+                t0,
+            );
         }
         if await_post && p == 1 && lo < send_max_row {
             groups_left -= 1;
@@ -517,6 +560,7 @@ pub fn dlb_rank(
                 let (prevs, cur) = ys.split_at_mut(p + k);
                 let prev2: Option<&[f64]> =
                     if p + k >= 2 { Some(&prevs[p + k - 2][..]) } else { x_m1 };
+                let t0 = comm.tracer().now();
                 flop_nnz += kernel_step(
                     &r.a,
                     rec,
@@ -526,6 +570,10 @@ pub fn dlb_rank(
                     lo,
                     hi,
                     backend,
+                );
+                comm.tracer().closed_span(
+                    Span::DlbRemainder { round: p as u32, class: k as u32 },
+                    t0,
                 );
             }
             if k == 1 && p + 1 < p_m {
@@ -537,6 +585,7 @@ pub fn dlb_rank(
         }
     }
 
+    comm.tracer().counter("flop_nnz", flop_nnz as f64);
     RankRun { ys, flop_nnz }
 }
 

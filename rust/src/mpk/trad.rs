@@ -14,6 +14,7 @@ use crate::exec::comm::{lockstep_halo_exchange, sim_comms, Communicator};
 use crate::exec::RankRun;
 use crate::mpk::dlb::Recurrence;
 use crate::mpk::{kernel_step, MpkResult, SpmvBackend};
+use crate::trace::{Span, TraceSession};
 
 pub fn trad_mpk(
     dist: &DistMatrix,
@@ -48,8 +49,11 @@ pub fn trad_rank(
         let (prevs, cur) = ys.split_at_mut(p);
         comm.exchange(r, (p - 1) as u64, &mut prevs[p - 1]);
         let prev2: Option<&[f64]> = if p >= 2 { Some(&prevs[p - 2][..]) } else { x_m1 };
+        let t0 = comm.tracer().now();
         flop_nnz += kernel_step(&r.a, rec, prev2, &prevs[p - 1], &mut cur[0], 0, nl, backend);
+        comm.tracer().closed_span(Span::TradSpmv { power: p as u32 }, t0);
     }
+    comm.tracer().counter("flop_nnz", flop_nnz as f64);
     RankRun { ys, flop_nnz }
 }
 
@@ -64,6 +68,21 @@ pub fn trad_recurrence(
     rec: Recurrence,
     backend: &mut dyn SpmvBackend,
 ) -> MpkResult {
+    trad_recurrence_traced(dist, x, x_m1, p_m, rec, backend, None)
+}
+
+/// [`trad_recurrence`] with an optional [`TraceSession`]: each rank's
+/// [`SimComm`] gets an attached recorder, compute steps are wrapped in
+/// `trad.spmv(p)` spans, and the drained events are absorbed back.
+pub fn trad_recurrence_traced(
+    dist: &DistMatrix,
+    x: &[f64],
+    x_m1: Option<&[f64]>,
+    p_m: usize,
+    rec: Recurrence,
+    backend: &mut dyn SpmvBackend,
+    mut trace: Option<&mut TraceSession>,
+) -> MpkResult {
     assert!(p_m >= 1);
     let nr = dist.n_ranks();
     // ys[p][rank] = local vector (with halo tail) of power p
@@ -75,6 +94,11 @@ pub fn trad_recurrence(
     let ym1: Option<Vec<Vec<f64>>> = x_m1.map(|v| dist.scatter(v));
 
     let mut comms = sim_comms(nr);
+    if let Some(ts) = trace.as_deref() {
+        for (i, c) in comms.iter_mut().enumerate() {
+            c.set_tracer(ts.recorder(i));
+        }
+    }
     let mut flop_nnz = 0usize;
     for p in 1..=p_m {
         // y[:, p-1] <- haloComm(y[:, p-1])
@@ -88,6 +112,7 @@ pub fn trad_recurrence(
             } else {
                 ym1.as_ref().map(|v| &v[i][..])
             };
+            let t0 = comms[i].tracer().now();
             flop_nnz += kernel_step(
                 &r.a,
                 rec,
@@ -98,9 +123,15 @@ pub fn trad_recurrence(
                 r.n_local(),
                 backend,
             );
+            comms[i].tracer().closed_span(Span::TradSpmv { power: p as u32 }, t0);
         }
     }
 
+    if let Some(ts) = trace.as_deref_mut() {
+        for (i, c) in comms.iter_mut().enumerate() {
+            ts.absorb(i, c.take_trace_events());
+        }
+    }
     let per_rank: Vec<_> = comms.iter().map(|c| c.stats().clone()).collect();
     MpkResult {
         powers: (1..=p_m).map(|p| dist.gather(&ys[p])).collect(),

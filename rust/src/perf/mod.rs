@@ -8,4 +8,4 @@ pub mod timer;
 
 pub use bandwidth::{load_bandwidth, BandwidthPoint};
 pub use roofline::{spmv_roofline_flops, spmv_roofline_gflops};
-pub use timer::{median_time, Timed};
+pub use timer::{median_time, median_time_warm, Timed};

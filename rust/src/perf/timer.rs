@@ -14,8 +14,18 @@ pub struct Timed {
 }
 
 /// Run `f` `reps` times and report the median (paper §6.1.2 methodology).
-pub fn median_time<F: FnMut()>(reps: usize, mut f: F) -> Timed {
+pub fn median_time<F: FnMut()>(reps: usize, f: F) -> Timed {
+    median_time_warm(0, reps, f)
+}
+
+/// [`median_time`] preceded by `warmup` untimed runs of `f`, so the timed
+/// repetitions see hot caches, faulted-in pages, and (for engine sweeps) an
+/// already-parked rank pool instead of first-touch costs.
+pub fn median_time_warm<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Timed {
     assert!(reps >= 1);
+    for _ in 0..warmup {
+        f();
+    }
     let mut times = Vec::with_capacity(reps);
     for _ in 0..reps {
         let t0 = Instant::now();
@@ -41,5 +51,13 @@ mod tests {
         assert!(t.median_s >= 0.002);
         assert!(t.min_s <= t.median_s && t.median_s <= t.max_s);
         assert_eq!(t.reps, 3);
+    }
+
+    #[test]
+    fn warmup_runs_are_untimed() {
+        let mut calls = 0usize;
+        let t = median_time_warm(2, 3, || calls += 1);
+        assert_eq!(calls, 5, "2 warmup + 3 timed runs");
+        assert_eq!(t.reps, 3, "reps counts only timed runs");
     }
 }

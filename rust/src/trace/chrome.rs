@@ -1,0 +1,230 @@
+//! Chrome Trace Event Format exporter + validator.
+//!
+//! Emits the JSON-object form (`{"traceEvents": [...]}`) with duration
+//! events as explicit `"B"`/`"E"` pairs — one `pid` (the process), one
+//! `tid` per rank, timestamps in microseconds. Loadable in
+//! `chrome://tracing` and <https://ui.perfetto.dev>.
+//!
+//! The validator re-parses an exported file with the crate's own JSON
+//! parser ([`crate::util::json::Json`]) and checks structural invariants
+//! (every `E` closes a prior `B` on its rank; nothing left open) — it backs
+//! both the `dlb-mpk trace-check` CLI used by CI and the trace-layer tests.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::{Event, EventKind, Span};
+
+/// Serialize per-rank event streams to Chrome Trace Event Format JSON.
+pub fn chrome_trace_json(per_rank: &[Vec<Event>]) -> String {
+    let mut out = String::with_capacity(64 * per_rank.iter().map(Vec::len).sum::<usize>() + 64);
+    out.push_str("{\"traceEvents\":[");
+    let mut first = true;
+    for (rank, events) in per_rank.iter().enumerate() {
+        // Re-derive each End's span from the begin stack so its "name"
+        // matches the opener (viewers tolerate nameless E events; our
+        // validator and tests are stricter).
+        let mut stack: Vec<Span> = Vec::new();
+        for ev in events {
+            let ts_us = ev.t_ns as f64 / 1000.0;
+            let entry = match ev.kind {
+                EventKind::Begin(span) => {
+                    stack.push(span);
+                    event_json(&span, "B", ts_us, rank)
+                }
+                EventKind::End => {
+                    let span = stack.pop().unwrap_or_else(|| {
+                        panic!("rank {rank}: End event without an open span")
+                    });
+                    event_json(&span, "E", ts_us, rank)
+                }
+                EventKind::Counter { name, value } => format!(
+                    "{{\"name\":{},\"ph\":\"C\",\"ts\":{ts_us:.3},\"pid\":0,\"tid\":{rank},\
+                     \"args\":{{{}:{value}}}}}",
+                    json_str(name),
+                    json_str(name),
+                ),
+            };
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&entry);
+        }
+        assert!(stack.is_empty(), "rank {rank}: {} span(s) left open at export", stack.len());
+    }
+    out.push_str("],\"displayTimeUnit\":\"ms\"}");
+    out
+}
+
+fn event_json(span: &Span, ph: &str, ts_us: f64, rank: usize) -> String {
+    let args = span_args(span);
+    format!(
+        "{{\"name\":{},\"cat\":\"{}\",\"ph\":\"{ph}\",\"ts\":{ts_us:.3},\"pid\":0,\
+         \"tid\":{rank}{args}}}",
+        json_str(&span.name()),
+        span.cat(),
+    )
+}
+
+fn span_args(span: &Span) -> String {
+    match span {
+        Span::CommSend { to, bytes } => format!(",\"args\":{{\"to\":{to},\"bytes\":{bytes}}}"),
+        Span::CommRecv { from, bytes } => {
+            format!(",\"args\":{{\"from\":{from},\"bytes\":{bytes}}}")
+        }
+        Span::CommWait { round } => format!(",\"args\":{{\"round\":{round}}}"),
+        Span::DlbWavefront { group, power } => {
+            format!(",\"args\":{{\"group\":{group},\"power\":{power}}}")
+        }
+        Span::DlbRemainder { round, class } => {
+            format!(",\"args\":{{\"round\":{round},\"class\":{class}}}")
+        }
+        Span::TradSpmv { power } | Span::CaPromote { power } => {
+            format!(",\"args\":{{\"power\":{power}}}")
+        }
+        Span::CaExchange | Span::JobDispatch | Span::JobPark => String::new(),
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// What [`validate_chrome_trace`] found in a well-formed trace.
+#[derive(Clone, Debug, Default)]
+pub struct TraceCheck {
+    /// Total events in `traceEvents`.
+    pub events: usize,
+    /// Balanced begin/end span pairs per tid (rank), ascending tid.
+    pub spans_per_rank: BTreeMap<i64, usize>,
+    /// Distinct span names seen.
+    pub names: Vec<String>,
+}
+
+impl TraceCheck {
+    pub fn n_ranks(&self) -> usize {
+        self.spans_per_rank.len()
+    }
+
+    pub fn has_name_prefix(&self, prefix: &str) -> bool {
+        self.names.iter().any(|n| n.starts_with(prefix))
+    }
+}
+
+/// Parse `json` as a Chrome Trace Event file and verify it is structurally
+/// sound: `traceEvents` exists, every event carries `ph`/`ts`/`tid`, and on
+/// every tid the `B`/`E` events balance like a bracket sequence (no `E`
+/// without an open `B`, nothing left open). Returns per-rank span counts
+/// and the distinct names on success.
+pub fn validate_chrome_trace(json: &str) -> Result<TraceCheck, String> {
+    let doc = Json::parse(json).map_err(|e| format!("not valid JSON: {e}"))?;
+    let events = doc
+        .get("traceEvents")
+        .ok_or("missing \"traceEvents\" key")?;
+    let Json::Arr(events) = events else {
+        return Err("\"traceEvents\" is not an array".into());
+    };
+    let mut check = TraceCheck { events: events.len(), ..TraceCheck::default() };
+    let mut depth: BTreeMap<i64, usize> = BTreeMap::new();
+    let mut names: BTreeMap<String, ()> = BTreeMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("event {i}: missing \"ph\""))?;
+        let tid = match ev.get("tid") {
+            Some(Json::Num(n)) => *n as i64,
+            _ => return Err(format!("event {i}: missing numeric \"tid\"")),
+        };
+        if !matches!(ev.get("ts"), Some(Json::Num(_))) {
+            return Err(format!("event {i}: missing numeric \"ts\""));
+        }
+        if let Some(name) = ev.get("name").and_then(Json::as_str) {
+            names.entry(name.to_string()).or_insert(());
+        }
+        match ph {
+            "B" => {
+                *depth.entry(tid).or_insert(0) += 1;
+            }
+            "E" => {
+                let d = depth.entry(tid).or_insert(0);
+                if *d == 0 {
+                    return Err(format!("event {i}: \"E\" with no open span on tid {tid}"));
+                }
+                *d -= 1;
+                *check.spans_per_rank.entry(tid).or_insert(0) += 1;
+            }
+            "C" | "X" | "M" | "i" | "I" => {}
+            other => return Err(format!("event {i}: unsupported phase {other:?}")),
+        }
+    }
+    for (tid, d) in &depth {
+        if *d != 0 {
+            return Err(format!("tid {tid}: {d} span(s) left open (unbalanced B/E)"));
+        }
+    }
+    check.names = names.into_keys().collect();
+    Ok(check)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::TraceSession;
+    use super::*;
+
+    #[test]
+    fn export_round_trips_through_validator() {
+        let s = TraceSession::with_capacity(2, 16);
+        let mut session = s;
+        for rank in 0..2 {
+            let mut r = session.recorder(rank);
+            let t0 = r.now();
+            r.begin(Span::DlbWavefront { group: 0, power: 1 });
+            r.closed_span(Span::CommRecv { from: 1 - rank as u32, bytes: 16 }, t0);
+            r.end();
+            r.counter("flop_nnz", 123.0);
+            let ev = r.take_events();
+            session.absorb(rank, ev);
+        }
+        let json = session.chrome_trace_json();
+        let check = validate_chrome_trace(&json).expect("exported trace must validate");
+        assert_eq!(check.n_ranks(), 2);
+        assert_eq!(check.spans_per_rank[&0], 2);
+        assert_eq!(check.spans_per_rank[&1], 2);
+        assert!(check.has_name_prefix("dlb.wavefront"));
+        assert!(check.has_name_prefix("comm.recv"));
+    }
+
+    #[test]
+    fn validator_rejects_unbalanced_and_garbage() {
+        assert!(validate_chrome_trace("not json").is_err());
+        assert!(validate_chrome_trace("{}").is_err());
+        assert!(validate_chrome_trace("{\"traceEvents\":3}").is_err());
+        // E without B
+        let bad = r#"{"traceEvents":[{"name":"x","ph":"E","ts":1,"pid":0,"tid":0}]}"#;
+        assert!(validate_chrome_trace(bad).is_err());
+        // B left open
+        let open = r#"{"traceEvents":[{"name":"x","ph":"B","ts":1,"pid":0,"tid":0}]}"#;
+        assert!(validate_chrome_trace(open).is_err());
+        // balanced pair passes
+        let ok = r#"{"traceEvents":[{"name":"x","ph":"B","ts":1,"pid":0,"tid":0},
+                                     {"name":"x","ph":"E","ts":2,"pid":0,"tid":0}]}"#;
+        let c = validate_chrome_trace(ok).unwrap();
+        assert_eq!(c.events, 2);
+        assert_eq!(c.spans_per_rank[&0], 1);
+    }
+}

@@ -1,0 +1,236 @@
+//! Aggregation of recorded events into per-rank and merged metrics — the
+//! flat-summary exporter next to the chrome-trace timeline.
+//!
+//! Replays each rank's event stream with a span stack and buckets leaf
+//! durations: compute by kind (wavefront time additionally by level
+//! group), comm by direction, barrier wait by round, and received
+//! bytes/messages by peer. Receiver-side flows reproduce the
+//! [`crate::distsim::CommStats`] totals exactly (same accounting side),
+//! which `rust/tests/trace_layer.rs` asserts.
+
+use std::collections::BTreeMap;
+
+use super::{Event, EventKind, Span};
+
+/// Receiver- or sender-side flow to/from one peer rank.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PeerFlow {
+    pub peer: usize,
+    pub messages: usize,
+    pub bytes: usize,
+}
+
+/// One rank's aggregated timeline.
+#[derive(Clone, Debug, Default)]
+pub struct RankMetrics {
+    pub rank: usize,
+    /// Total time in compute spans (wavefront + remainder + spmv + promote).
+    pub compute_ns: u64,
+    /// Time inside `comm.send` spans (payload copy + enqueue).
+    pub send_ns: u64,
+    /// Time inside `comm.recv` spans (blocking for + copying payloads).
+    pub recv_ns: u64,
+    /// Time inside `comm.wait` spans (the round-closing barrier).
+    pub wait_ns: u64,
+    /// Time parked between pool jobs.
+    pub park_ns: u64,
+    /// Messages received (receiver-side, like [`crate::distsim::CommStats`]).
+    pub messages: usize,
+    /// Bytes received.
+    pub bytes: usize,
+    /// Receive flows by sending peer, ascending peer id.
+    pub recv_from: Vec<PeerFlow>,
+    /// Send flows by destination peer, ascending peer id.
+    pub sent_to: Vec<PeerFlow>,
+    /// Barrier wait per round `(round, ns)`, ascending round.
+    pub wait_by_round: Vec<(u32, u64)>,
+    /// DLB wavefront compute per level group `(group, ns)`, ascending —
+    /// the level-resolved histogram the paper's §5 analysis is about.
+    pub level_compute_ns: Vec<(u32, u64)>,
+    /// Closed spans replayed.
+    pub spans: usize,
+}
+
+/// Per-rank metrics plus merged totals.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub per_rank: Vec<RankMetrics>,
+    pub total_compute_ns: u64,
+    pub total_wait_ns: u64,
+    pub total_messages: usize,
+    pub total_bytes: usize,
+}
+
+impl Metrics {
+    /// Aggregate per-rank event streams (see the module docs).
+    pub fn from_events(per_rank: &[Vec<Event>]) -> Self {
+        let mut out = Metrics::default();
+        for (rank, events) in per_rank.iter().enumerate() {
+            let rm = aggregate_rank(rank, events);
+            out.total_compute_ns += rm.compute_ns;
+            out.total_wait_ns += rm.wait_ns;
+            out.total_messages += rm.messages;
+            out.total_bytes += rm.bytes;
+            out.per_rank.push(rm);
+        }
+        out
+    }
+
+    /// Flat JSON summary (the second exporter next to the chrome trace).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"ranks\": {},\n", self.per_rank.len()));
+        s.push_str(&format!(
+            "  \"total\": {{\"compute_ns\": {}, \"wait_ns\": {}, \"messages\": {}, \"bytes\": {}}},\n",
+            self.total_compute_ns, self.total_wait_ns, self.total_messages, self.total_bytes
+        ));
+        s.push_str("  \"per_rank\": [\n");
+        for (i, r) in self.per_rank.iter().enumerate() {
+            let flows = |fl: &[PeerFlow]| -> String {
+                let items: Vec<String> = fl
+                    .iter()
+                    .map(|f| {
+                        format!(
+                            "{{\"peer\": {}, \"messages\": {}, \"bytes\": {}}}",
+                            f.peer, f.messages, f.bytes
+                        )
+                    })
+                    .collect();
+                format!("[{}]", items.join(", "))
+            };
+            let pairs = |ps: &[(u32, u64)], k: &str| -> String {
+                let items: Vec<String> = ps
+                    .iter()
+                    .map(|(key, ns)| format!("{{\"{k}\": {key}, \"ns\": {ns}}}"))
+                    .collect();
+                format!("[{}]", items.join(", "))
+            };
+            s.push_str(&format!(
+                "    {{\"rank\": {}, \"compute_ns\": {}, \"send_ns\": {}, \"recv_ns\": {}, \
+                 \"wait_ns\": {}, \"park_ns\": {}, \"messages\": {}, \"bytes\": {}, \
+                 \"recv_from\": {}, \"sent_to\": {}, \"wait_by_round\": {}, \
+                 \"level_compute_ns\": {}}}{}\n",
+                r.rank,
+                r.compute_ns,
+                r.send_ns,
+                r.recv_ns,
+                r.wait_ns,
+                r.park_ns,
+                r.messages,
+                r.bytes,
+                flows(&r.recv_from),
+                flows(&r.sent_to),
+                pairs(&r.wait_by_round, "round"),
+                pairs(&r.level_compute_ns, "group"),
+                if i + 1 < self.per_rank.len() { "," } else { "" },
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+fn aggregate_rank(rank: usize, events: &[Event]) -> RankMetrics {
+    let mut rm = RankMetrics { rank, ..RankMetrics::default() };
+    let mut recv_from: BTreeMap<usize, PeerFlow> = BTreeMap::new();
+    let mut sent_to: BTreeMap<usize, PeerFlow> = BTreeMap::new();
+    let mut wait_by_round: BTreeMap<u32, u64> = BTreeMap::new();
+    let mut level_ns: BTreeMap<u32, u64> = BTreeMap::new();
+    let mut stack: Vec<(Span, u64)> = Vec::new();
+    for ev in events {
+        match ev.kind {
+            EventKind::Begin(span) => stack.push((span, ev.t_ns)),
+            EventKind::End => {
+                let (span, t0) = stack
+                    .pop()
+                    .unwrap_or_else(|| panic!("rank {rank}: End event without an open span"));
+                let dur = ev.t_ns.saturating_sub(t0);
+                rm.spans += 1;
+                match span {
+                    Span::TradSpmv { .. } | Span::DlbRemainder { .. } | Span::CaPromote { .. } => {
+                        rm.compute_ns += dur;
+                    }
+                    Span::DlbWavefront { group, .. } => {
+                        rm.compute_ns += dur;
+                        *level_ns.entry(group).or_insert(0) += dur;
+                    }
+                    Span::CommSend { to, bytes } => {
+                        rm.send_ns += dur;
+                        let f = sent_to.entry(to as usize).or_insert(PeerFlow {
+                            peer: to as usize,
+                            ..PeerFlow::default()
+                        });
+                        f.messages += 1;
+                        f.bytes += bytes as usize;
+                    }
+                    Span::CommRecv { from, bytes } => {
+                        rm.recv_ns += dur;
+                        rm.messages += 1;
+                        rm.bytes += bytes as usize;
+                        let f = recv_from.entry(from as usize).or_insert(PeerFlow {
+                            peer: from as usize,
+                            ..PeerFlow::default()
+                        });
+                        f.messages += 1;
+                        f.bytes += bytes as usize;
+                    }
+                    Span::CommWait { round } => {
+                        rm.wait_ns += dur;
+                        *wait_by_round.entry(round).or_insert(0) += dur;
+                    }
+                    Span::JobPark => rm.park_ns += dur,
+                    // dispatch wraps the kernel's own spans; attributing its
+                    // duration too would double-count
+                    Span::CaExchange | Span::JobDispatch => {}
+                }
+            }
+            EventKind::Counter { .. } => {}
+        }
+    }
+    assert!(stack.is_empty(), "rank {rank}: {} span(s) left open", stack.len());
+    rm.recv_from = recv_from.into_values().collect();
+    rm.sent_to = sent_to.into_values().collect();
+    rm.wait_by_round = wait_by_round.into_iter().collect();
+    rm.level_compute_ns = level_ns.into_iter().collect();
+    rm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::TraceSession;
+    use super::*;
+
+    #[test]
+    fn aggregates_flows_and_buckets() {
+        let mut s = TraceSession::with_capacity(1, 32);
+        let mut r = s.recorder(0);
+        let t0 = r.now();
+        r.closed_span(Span::CommRecv { from: 2, bytes: 24 }, t0);
+        r.closed_span(Span::CommRecv { from: 2, bytes: 8 }, t0);
+        r.closed_span(Span::CommRecv { from: 1, bytes: 16 }, t0);
+        r.closed_span(Span::CommSend { to: 1, bytes: 40 }, t0);
+        r.closed_span(Span::CommWait { round: 0 }, t0);
+        r.closed_span(Span::DlbWavefront { group: 0, power: 1 }, t0);
+        r.closed_span(Span::DlbWavefront { group: 0, power: 2 }, t0);
+        s.absorb(0, r.take_events());
+        let m = s.metrics();
+        assert_eq!(m.per_rank.len(), 1);
+        let rm = &m.per_rank[0];
+        assert_eq!(rm.messages, 3);
+        assert_eq!(rm.bytes, 48);
+        assert_eq!(
+            rm.recv_from,
+            vec![
+                PeerFlow { peer: 1, messages: 1, bytes: 16 },
+                PeerFlow { peer: 2, messages: 2, bytes: 32 }
+            ]
+        );
+        assert_eq!(rm.sent_to, vec![PeerFlow { peer: 1, messages: 1, bytes: 40 }]);
+        assert_eq!(rm.wait_by_round.len(), 1);
+        assert_eq!(rm.level_compute_ns.len(), 1);
+        assert_eq!(m.total_bytes, 48);
+        assert_eq!(m.total_messages, 3);
+        // the summary is valid JSON
+        assert!(crate::util::json::Json::parse(&m.to_json()).is_ok());
+    }
+}

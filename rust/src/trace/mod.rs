@@ -1,0 +1,338 @@
+//! Per-rank span tracing + metrics — the observability layer under
+//! [`crate::engine::MpkEngine`].
+//!
+//! The paper's argument is about *where time goes inside a power sweep*:
+//! compute on the cache-blocked inner levels vs. waiting on halo exchanges
+//! in the remainder rounds (§5–§6, Fig. 9/10). Aggregate [`CommStats`]
+//! counters cannot show that, so this module records rank-level timelines:
+//!
+//! * [`RankRecorder`] — one per rank, a preallocated event buffer with
+//!   span begin/end (monotonic nanosecond timestamps) and named counters.
+//!   The **disabled** recorder is the default everywhere and its hot-path
+//!   methods are a branch on one bool: no clock read, no allocation.
+//! * [`Span`] — the closed vocabulary of instrumented regions:
+//!   `dlb.wavefront(level)`, `dlb.remainder(round, class)`, `ca.exchange`/
+//!   `ca.promote`, `trad.spmv(power)`, `comm.send/recv/wait`, and the rank
+//!   pool's `job.dispatch`/`job.park`.
+//! * [`TraceSession`] — engine-owned collection of every rank's events
+//!   against one shared epoch, with two exporters: Chrome Trace Event
+//!   Format JSON ([`TraceSession::chrome_trace_json`], loadable in
+//!   `chrome://tracing` or <https://ui.perfetto.dev>) and an aggregated
+//!   [`Metrics`] summary ([`TraceSession::metrics`]).
+//!
+//! Recorders travel inside the transports ([`crate::exec::comm::SimComm`],
+//! [`crate::exec::comm::ThreadComm`]) via [`crate::exec::Communicator::tracer`],
+//! so kernels and transports share one per-rank buffer — and any future
+//! transport (MPI) inherits the instrumentation seam for free.
+//!
+//! [`CommStats`]: crate::distsim::CommStats
+
+pub mod chrome;
+pub mod metrics;
+
+pub use chrome::{validate_chrome_trace, TraceCheck};
+pub use metrics::{Metrics, PeerFlow, RankMetrics};
+
+use std::time::Instant;
+
+/// Default per-rank event-buffer capacity (events, not bytes).
+pub const DEFAULT_EVENT_CAPACITY: usize = 1 << 14;
+
+/// An instrumented region. Payload fields are small copies (peer ids,
+/// byte counts, round numbers) so events stay `Copy` and the recorder's
+/// hot path never allocates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Span {
+    /// TRAD full local SpMV of power `power` (paper Alg. 1 inner step).
+    TradSpmv { power: u32 },
+    /// DLB phase-2 wavefront step: level-group `group` promoted to `power`.
+    DlbWavefront { group: u32, power: u32 },
+    /// DLB phase-3 remainder: round `round` advancing class `I_class`.
+    DlbRemainder { round: u32, class: u32 },
+    /// CA's single up-front extended-halo exchange.
+    CaExchange,
+    /// CA promotion round `power` (owned rows + still-live external classes).
+    CaPromote { power: u32 },
+    /// One point-to-point send (`bytes` of payload to rank `to`).
+    CommSend { to: u32, bytes: u32 },
+    /// One matched receive (`bytes` of payload from rank `from`).
+    CommRecv { from: u32, bytes: u32 },
+    /// Round-closing barrier wait (`round` is the per-endpoint cumulative
+    /// round counter at close).
+    CommWait { round: u32 },
+    /// Rank-pool worker executing one sweep job.
+    JobDispatch,
+    /// Rank-pool worker parked on its job channel.
+    JobPark,
+}
+
+impl Span {
+    /// Display name, e.g. `dlb.remainder(r1,k2)` — stable strings the
+    /// exporters and tests key on.
+    pub fn name(&self) -> String {
+        match self {
+            Self::TradSpmv { power } => format!("trad.spmv(p{power})"),
+            Self::DlbWavefront { group, power } => format!("dlb.wavefront(g{group},p{power})"),
+            Self::DlbRemainder { round, class } => format!("dlb.remainder(r{round},k{class})"),
+            Self::CaExchange => "ca.exchange".to_string(),
+            Self::CaPromote { power } => format!("ca.promote(p{power})"),
+            Self::CommSend { to, .. } => format!("comm.send(->{to})"),
+            Self::CommRecv { from, .. } => format!("comm.recv(<-{from})"),
+            Self::CommWait { round } => format!("comm.wait(r{round})"),
+            Self::JobDispatch => "job.dispatch".to_string(),
+            Self::JobPark => "job.park".to_string(),
+        }
+    }
+
+    /// Chrome-trace category: `compute`, `comm`, or `pool`.
+    pub fn cat(&self) -> &'static str {
+        match self {
+            Self::TradSpmv { .. }
+            | Self::DlbWavefront { .. }
+            | Self::DlbRemainder { .. }
+            | Self::CaPromote { .. } => "compute",
+            Self::CaExchange | Self::CommSend { .. } | Self::CommRecv { .. }
+            | Self::CommWait { .. } => "comm",
+            Self::JobDispatch | Self::JobPark => "pool",
+        }
+    }
+}
+
+/// What happened at one timestamp.
+#[derive(Clone, Copy, Debug)]
+pub enum EventKind {
+    /// Open a span (closed by the matching `End` on the same rank).
+    Begin(Span),
+    /// Close the innermost open span.
+    End,
+    /// A named sample (chrome-trace 'C' event).
+    Counter { name: &'static str, value: f64 },
+}
+
+/// One timeline entry: nanoseconds since the session epoch + payload.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub t_ns: u64,
+    pub kind: EventKind,
+}
+
+/// Per-rank event recorder. Disabled (the default) it is a no-op whose
+/// methods cost one predictable branch — no clock reads, no allocation;
+/// enabled it appends into a buffer preallocated at attach time.
+#[derive(Debug)]
+pub struct RankRecorder {
+    enabled: bool,
+    rank: u32,
+    epoch: Instant,
+    capacity: usize,
+    events: Vec<Event>,
+}
+
+impl Default for RankRecorder {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+impl RankRecorder {
+    /// The no-op recorder: never timestamps, never allocates.
+    pub fn disabled() -> Self {
+        Self { enabled: false, rank: 0, epoch: Instant::now(), capacity: 0, events: Vec::new() }
+    }
+
+    /// An enabled recorder for `rank`, timestamping against `epoch`, with
+    /// `capacity` events preallocated (grows beyond it only on overflow).
+    pub fn enabled(rank: usize, epoch: Instant, capacity: usize) -> Self {
+        Self {
+            enabled: true,
+            rank: rank as u32,
+            epoch,
+            capacity,
+            events: Vec::with_capacity(capacity),
+        }
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank as usize
+    }
+
+    /// Buffered event count (0 while disabled).
+    pub fn buffered(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Current buffer capacity — stays 0 on the disabled path, which is
+    /// how tests prove "no allocation per event".
+    pub fn buffer_capacity(&self) -> usize {
+        self.events.capacity()
+    }
+
+    /// Nanoseconds since the session epoch (0 while disabled — callers use
+    /// it only to feed back into [`RankRecorder::closed_span`]).
+    #[inline]
+    pub fn now(&self) -> u64 {
+        if self.enabled {
+            self.epoch.elapsed().as_nanos() as u64
+        } else {
+            0
+        }
+    }
+
+    /// Open `span` at the current time.
+    #[inline]
+    pub fn begin(&mut self, span: Span) {
+        if self.enabled {
+            let t_ns = self.epoch.elapsed().as_nanos() as u64;
+            self.events.push(Event { t_ns, kind: EventKind::Begin(span) });
+        }
+    }
+
+    /// Close the innermost open span at the current time.
+    #[inline]
+    pub fn end(&mut self) {
+        if self.enabled {
+            let t_ns = self.epoch.elapsed().as_nanos() as u64;
+            self.events.push(Event { t_ns, kind: EventKind::End });
+        }
+    }
+
+    /// Record a span that began at `t0_ns` (a prior [`RankRecorder::now`])
+    /// and ends now — one call emitting a balanced Begin/End pair, for
+    /// regions whose payload (e.g. byte count) is only known at the end.
+    #[inline]
+    pub fn closed_span(&mut self, span: Span, t0_ns: u64) {
+        if self.enabled {
+            let t_ns = self.epoch.elapsed().as_nanos() as u64;
+            self.events.push(Event { t_ns: t0_ns, kind: EventKind::Begin(span) });
+            self.events.push(Event { t_ns, kind: EventKind::End });
+        }
+    }
+
+    /// Record a named counter sample.
+    #[inline]
+    pub fn counter(&mut self, name: &'static str, value: f64) {
+        if self.enabled {
+            let t_ns = self.epoch.elapsed().as_nanos() as u64;
+            self.events.push(Event { t_ns, kind: EventKind::Counter { name, value } });
+        }
+    }
+
+    /// Drain the buffer (the recorder stays attached and keeps recording
+    /// into a fresh preallocated buffer).
+    pub fn take_events(&mut self) -> Vec<Event> {
+        let fresh = Vec::with_capacity(if self.enabled { self.capacity } else { 0 });
+        std::mem::replace(&mut self.events, fresh)
+    }
+}
+
+/// Engine-owned trace state: one epoch shared by every rank's recorder,
+/// plus the absorbed per-rank event streams.
+pub struct TraceSession {
+    epoch: Instant,
+    capacity: usize,
+    per_rank: Vec<Vec<Event>>,
+}
+
+impl TraceSession {
+    pub fn new(n_ranks: usize) -> Self {
+        Self::with_capacity(n_ranks, DEFAULT_EVENT_CAPACITY)
+    }
+
+    pub fn with_capacity(n_ranks: usize, capacity: usize) -> Self {
+        Self { epoch: Instant::now(), capacity, per_rank: vec![Vec::new(); n_ranks] }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.per_rank.len()
+    }
+
+    /// A fresh enabled recorder for `rank`, sharing this session's epoch
+    /// (so timelines of all ranks align).
+    pub fn recorder(&self, rank: usize) -> RankRecorder {
+        assert!(rank < self.per_rank.len(), "recorder for out-of-range rank {rank}");
+        RankRecorder::enabled(rank, self.epoch, self.capacity)
+    }
+
+    /// Append a drained event buffer to `rank`'s stream.
+    pub fn absorb(&mut self, rank: usize, events: Vec<Event>) {
+        self.per_rank[rank].extend(events);
+    }
+
+    pub fn events(&self, rank: usize) -> &[Event] {
+        &self.per_rank[rank]
+    }
+
+    pub fn total_events(&self) -> usize {
+        self.per_rank.iter().map(Vec::len).sum()
+    }
+
+    /// Chrome Trace Event Format JSON (B/E phase events, ts in µs, one tid
+    /// per rank). Open in `chrome://tracing` or <https://ui.perfetto.dev>.
+    pub fn chrome_trace_json(&self) -> String {
+        chrome::chrome_trace_json(&self.per_rank)
+    }
+
+    /// Aggregate the absorbed streams into per-rank + total [`Metrics`].
+    pub fn metrics(&self) -> Metrics {
+        Metrics::from_events(&self.per_rank)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_never_allocates() {
+        let mut r = RankRecorder::disabled();
+        for _ in 0..10_000 {
+            let t0 = r.now();
+            r.begin(Span::TradSpmv { power: 1 });
+            r.end();
+            r.closed_span(Span::CommWait { round: 0 }, t0);
+            r.counter("x", 1.0);
+        }
+        assert_eq!(r.buffered(), 0);
+        assert_eq!(r.buffer_capacity(), 0, "disabled path must not allocate");
+        assert!(r.take_events().is_empty());
+        assert_eq!(r.buffer_capacity(), 0);
+    }
+
+    #[test]
+    fn enabled_recorder_preallocates_and_balances() {
+        let s = TraceSession::with_capacity(2, 64);
+        let mut r = s.recorder(1);
+        assert_eq!(r.buffer_capacity(), 64);
+        let t0 = r.now();
+        r.begin(Span::DlbWavefront { group: 0, power: 1 });
+        r.end();
+        r.closed_span(Span::CommRecv { from: 0, bytes: 8 }, t0);
+        assert_eq!(r.buffered(), 4);
+        let ev = r.take_events();
+        assert_eq!(ev.len(), 4);
+        assert_eq!(r.buffer_capacity(), 64, "drain keeps the preallocation");
+        let begins = ev.iter().filter(|e| matches!(e.kind, EventKind::Begin(_))).count();
+        let ends = ev.iter().filter(|e| matches!(e.kind, EventKind::End)).count();
+        assert_eq!(begins, ends);
+        // timestamps are monotone per pair
+        assert!(ev[0].t_ns <= ev[1].t_ns);
+    }
+
+    #[test]
+    fn span_names_are_stable() {
+        assert_eq!(Span::TradSpmv { power: 2 }.name(), "trad.spmv(p2)");
+        assert_eq!(Span::DlbWavefront { group: 3, power: 1 }.name(), "dlb.wavefront(g3,p1)");
+        assert_eq!(Span::DlbRemainder { round: 1, class: 2 }.name(), "dlb.remainder(r1,k2)");
+        assert_eq!(Span::CommWait { round: 4 }.name(), "comm.wait(r4)");
+        assert_eq!(Span::CommSend { to: 1, bytes: 8 }.name(), "comm.send(->1)");
+        assert_eq!(Span::CommRecv { from: 0, bytes: 8 }.name(), "comm.recv(<-0)");
+        assert_eq!(Span::JobPark.cat(), "pool");
+        assert_eq!(Span::CaExchange.cat(), "comm");
+        assert_eq!(Span::CaPromote { power: 1 }.cat(), "compute");
+    }
+}

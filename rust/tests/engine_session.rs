@@ -47,6 +47,7 @@ fn propagator_threads_pool_matches_sim_bitwise_over_three_steps() {
             variant: Variant::Dlb(DlbOptions { cache_bytes: 64 << 10, s_m: 50 }),
             executor,
             backend: BackendSpec::Native,
+            trace: false,
         },
     };
     let mut sim = ChebyshevPropagator::new(&h, &dist, mk(ExecutorKind::Sim)).unwrap();
@@ -168,6 +169,7 @@ fn pcg_routes_all_spmvs_through_engine_backend() {
         backend: BackendSpec::Custom(Arc::new(move || {
             Box::new(CountingBackend { calls: calls_in_factory.clone() })
         })),
+        trace: false,
     };
     let mut pre = ChebyshevPreconditioner::new(&dist, lmin, lmax, 4, &cfg).unwrap();
     let b = vec![1.0; a.n_rows()];

@@ -1,0 +1,182 @@
+//! Acceptance tests for the span-tracing layer (`crate::trace`):
+//!
+//! * tracing is **invisible to results** — every variant × executor
+//!   produces bitwise-identical powers and identical merged
+//!   [`dlb_mpk::distsim::CommStats`] with tracing on and off;
+//! * the chrome-trace export is structurally sound (balanced B/E per
+//!   rank) and covers ≥ 2 ranks with wavefront, remainder, and
+//!   comm-wait spans;
+//! * metrics flows reproduce the CommStats totals exactly — received
+//!   bytes and messages are accounted on the same (receiver) side.
+
+use dlb_mpk::distsim::DistMatrix;
+use dlb_mpk::engine::{MpkEngine, SweepResult, Variant};
+use dlb_mpk::exec::ExecutorKind;
+use dlb_mpk::matrix::gen;
+use dlb_mpk::mpk::dlb::{DlbOptions, Recurrence};
+use dlb_mpk::partition::{partition, Method};
+use dlb_mpk::trace::validate_chrome_trace;
+
+fn dist(np: usize) -> DistMatrix {
+    let a = gen::stencil_2d_5pt(14, 12);
+    let part = partition(&a, np, Method::Block);
+    DistMatrix::build(&a, &part)
+}
+
+fn input(n: usize) -> Vec<f64> {
+    (0..n).map(|i| ((i % 17) as f64 - 8.0) / 9.0).collect()
+}
+
+fn variants() -> Vec<Variant> {
+    vec![
+        Variant::Trad,
+        Variant::Ca,
+        Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50 }),
+    ]
+}
+
+fn sweep_once(d: &DistMatrix, v: Variant, ex: ExecutorKind, trace: bool) -> (MpkEngine, SweepResult) {
+    let mut eng = MpkEngine::builder(d)
+        .p_m(4)
+        .variant(v)
+        .executor(ex)
+        .trace(trace)
+        .build()
+        .expect("engine builds");
+    let x = input(d.n_global);
+    let res = eng.sweep(&x, None, Recurrence::Power);
+    (eng, res)
+}
+
+fn assert_bitwise(a: &SweepResult, b: &SweepResult, what: &str) {
+    assert_eq!(a.powers.len(), b.powers.len(), "{what}: power count");
+    for (p, (pa, pb)) in a.powers.iter().zip(&b.powers).enumerate() {
+        for (i, (u, v)) in pa.iter().zip(pb).enumerate() {
+            assert!(
+                u.to_bits() == v.to_bits(),
+                "{what}: powers[{p}][{i}] differs bitwise: {u:?} vs {v:?}"
+            );
+        }
+    }
+    assert_eq!(a.comm, b.comm, "{what}: comm stats");
+    assert_eq!(a.flop_nnz, b.flop_nnz, "{what}: flop count");
+}
+
+/// Acceptance: enabling tracing changes nothing about the computation —
+/// bitwise-identical sweeps on both executors, for every variant.
+#[test]
+fn tracing_is_bitwise_invisible() {
+    let d = dist(3);
+    for v in variants() {
+        for ex in [ExecutorKind::Sim, ExecutorKind::Threads { n: 0 }] {
+            let (mut off, res_off) = sweep_once(&d, v, ex, false);
+            let (mut on, res_on) = sweep_once(&d, v, ex, true);
+            let what = format!("{} on {ex}", v.label());
+            assert_bitwise(&res_off, &res_on, &what);
+            assert!(!off.is_tracing() && on.is_tracing());
+            assert!(off.metrics().is_none(), "{what}: no metrics without tracing");
+            assert!(off.chrome_trace_json().is_none());
+            assert!(on.metrics().is_some(), "{what}: metrics with tracing");
+        }
+    }
+}
+
+/// Acceptance: the chrome trace from a threads-executor DLB sweep covers
+/// every rank with balanced spans including wavefront levels, remainder
+/// rounds, and comm waits.
+#[test]
+fn chrome_trace_covers_ranks_and_phases() {
+    let d = dist(3);
+    let (mut eng, _res) = sweep_once(
+        &d,
+        Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50 }),
+        ExecutorKind::Threads { n: 0 },
+        true,
+    );
+    let json = eng.chrome_trace_json().expect("tracing enabled");
+    let check = validate_chrome_trace(&json).expect("export must validate");
+    assert!(check.n_ranks() >= 2, "trace covers {} rank(s)", check.n_ranks());
+    assert_eq!(check.n_ranks(), d.n_ranks(), "every rank contributes spans");
+    for (tid, spans) in &check.spans_per_rank {
+        assert!(*spans > 0, "rank {tid} has no closed spans");
+    }
+    assert!(check.has_name_prefix("dlb.wavefront"), "names: {:?}", check.names);
+    assert!(check.has_name_prefix("dlb.remainder"), "names: {:?}", check.names);
+    assert!(check.has_name_prefix("comm.wait"), "names: {:?}", check.names);
+    assert!(check.has_name_prefix("comm.recv"), "names: {:?}", check.names);
+    assert!(check.has_name_prefix("job.dispatch"), "names: {:?}", check.names);
+}
+
+/// The sequential executor exports a valid trace too, for every variant
+/// (TRAD spmv spans, CA exchange + promote spans, DLB phases).
+#[test]
+fn sim_executor_traces_validate_per_variant() {
+    let d = dist(3);
+    for (v, want) in [
+        (Variant::Trad, "trad.spmv"),
+        (Variant::Ca, "ca.promote"),
+        (Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50 }), "dlb.wavefront"),
+    ] {
+        let (mut eng, _res) = sweep_once(&d, v, ExecutorKind::Sim, true);
+        let json = eng.chrome_trace_json().expect("tracing enabled");
+        let check = validate_chrome_trace(&json)
+            .unwrap_or_else(|e| panic!("{} trace invalid: {e}", v.label()));
+        assert_eq!(check.n_ranks(), d.n_ranks(), "{}: rank coverage", v.label());
+        assert!(check.has_name_prefix(want), "{}: names {:?}", v.label(), check.names);
+        assert!(check.has_name_prefix("comm.wait"), "{}: names {:?}", v.label(), check.names);
+    }
+}
+
+/// Acceptance: metrics flows are accounted on the same receiver side as
+/// [`dlb_mpk::distsim::CommStats`], so the totals agree exactly — for
+/// every variant on both executors.
+#[test]
+fn metrics_flows_match_comm_stats() {
+    let d = dist(3);
+    for v in variants() {
+        for ex in [ExecutorKind::Sim, ExecutorKind::Threads { n: 0 }] {
+            let (mut eng, res) = sweep_once(&d, v, ex, true);
+            let m = eng.metrics().expect("tracing enabled");
+            let what = format!("{} on {ex}", v.label());
+            assert_eq!(m.per_rank.len(), d.n_ranks(), "{what}: rank coverage");
+            assert_eq!(m.total_bytes, res.comm.bytes, "{what}: received bytes");
+            assert_eq!(m.total_messages, res.comm.messages, "{what}: received messages");
+            let per_rank_bytes: usize = m.per_rank.iter().map(|r| r.bytes).sum();
+            assert_eq!(per_rank_bytes, res.comm.bytes, "{what}: per-rank bytes sum");
+            // one comm.wait span per rank per round
+            for r in &m.per_rank {
+                assert_eq!(
+                    r.wait_by_round.len(),
+                    res.comm.rounds,
+                    "{what}: rank {} wait spans vs rounds",
+                    r.rank
+                );
+            }
+            // the flat summary is parseable JSON
+            assert!(dlb_mpk::util::json::Json::parse(&m.to_json()).is_ok(), "{what}");
+        }
+    }
+}
+
+/// Metrics accumulate across sweeps of one engine session: after `k`
+/// identical sweeps the totals are `k ×` one sweep's stats.
+#[test]
+fn metrics_accumulate_across_sweeps() {
+    let d = dist(2);
+    let x = input(d.n_global);
+    let mut eng = MpkEngine::builder(&d)
+        .p_m(3)
+        .variant(Variant::Trad)
+        .executor(ExecutorKind::Threads { n: 0 })
+        .trace(true)
+        .build()
+        .unwrap();
+    let one = eng.sweep(&x, None, Recurrence::Power);
+    let k = 3;
+    for _ in 1..k {
+        eng.sweep(&x, None, Recurrence::Power);
+    }
+    let m = eng.metrics().unwrap();
+    assert_eq!(m.total_bytes, k * one.comm.bytes);
+    assert_eq!(m.total_messages, k * one.comm.messages);
+}
