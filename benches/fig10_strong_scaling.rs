@@ -10,8 +10,13 @@
 //! The measured-parallel section times the threads executor both ways —
 //! spawn-per-sweep (`exec::trad_threaded`/`dlb_threaded`) vs the engine's
 //! persistent rank pool — and writes the results to `BENCH_fig10.json`
-//! (variant, ranks, mode, median seconds) so the perf trajectory is
-//! machine-readable across PRs.
+//! (variant, ranks, inner threads, mode, median seconds) so the perf
+//! trajectory is machine-readable across PRs.
+//!
+//! The hierarchical section holds the total worker count at 4 and slides
+//! the split between ranks and within-rank inner threads
+//! (`ranks × inner ∈ {4×1, 2×2, 1×4}`): fewer ranks shrink halo traffic
+//! but push more of the parallelism into the wavefront task batches.
 //!
 //! Run: `cargo bench --bench fig10_strong_scaling`
 
@@ -30,8 +35,11 @@ struct Rec {
     matrix: String,
     variant: &'static str,
     ranks: usize,
+    /// Within-rank inner threads (1 = serial rank kernels).
+    inner: usize,
     /// `spawn` = one OS thread per rank spawned per sweep;
-    /// `pool` = the engine's persistent rank pool (spawned once).
+    /// `pool` = the engine's persistent rank pool (spawned once);
+    /// `hier` = pool plus a per-rank inner worker pool (ranks × inner).
     mode: &'static str,
     median_s: f64,
 }
@@ -107,6 +115,7 @@ fn main() {
         reps,
         &mut recs,
     );
+    hierarchical(&matrices, warmup, reps, &mut recs);
     match write_json(&recs) {
         Ok(path) => println!("\nwrote {} measurement rows to {path}", recs.len()),
         Err(e) => eprintln!("\nfailed to write BENCH_fig10.json: {e}"),
@@ -182,12 +191,71 @@ fn measured_parallel(
                 ("dlb", "spawn", t_dlb_spawn.median_s),
                 ("dlb", "pool", t_dlb_pool.median_s),
             ] {
-                recs.push(Rec { matrix: name.to_string(), variant, ranks: np, mode, median_s: t });
+                recs.push(Rec {
+                    matrix: name.to_string(),
+                    variant,
+                    ranks: np,
+                    inner: 1,
+                    mode,
+                    median_s: t,
+                });
             }
         }
     }
     println!("\n(pool/spawn = DLB spawn-per-sweep time over persistent-pool time at the");
     println!(" same rank count — the pool amortizes thread/comm setup across sweeps)");
+}
+
+/// Hierarchical mode: 4 workers total, split between ranks and within-rank
+/// inner threads. All shapes compute bitwise-identical powers (asserted);
+/// what changes is where the parallelism lives — halo exchange between
+/// ranks vs dependency-free task batches inside each rank's wavefront.
+fn hierarchical(
+    matrices: &[(&str, dlb_mpk::matrix::CsrMatrix)],
+    warmup: usize,
+    reps: usize,
+    recs: &mut Vec<Rec>,
+) {
+    let p_m = 4;
+    let shapes = [(4usize, 1usize), (2, 2), (1, 4)];
+    for (name, a) in matrices {
+        println!("\n# Hierarchical ranks x inner threads (4 workers total), {name}, p_m = {p_m}");
+        println!("{:>7} {:>7} {:>12} {:>9}", "ranks", "inner", "dlb_hier_s", "halo_B");
+        let x = vec![1.0; a.n_rows()];
+        let mut baseline: Option<Vec<Vec<f64>>> = None;
+        for (np, inner) in shapes {
+            let part = partition(a, np, Method::RecursiveBisect);
+            let dist = DistMatrix::build(a, &part);
+            let opts = DlbOptions { cache_bytes: 8 << 20, s_m: 50 };
+            let mut eng = MpkEngine::builder(&dist)
+                .p_m(p_m)
+                .variant(Variant::Dlb(opts))
+                .executor(ExecutorKind::Threads { n: 0 })
+                .inner_threads(inner)
+                .build()
+                .expect("engine builds");
+            let mut out = None;
+            let t = median_time_warm(warmup, reps, || {
+                out = Some(eng.sweep(&x, None, Recurrence::Power));
+            });
+            let res = out.unwrap();
+            match &baseline {
+                None => baseline = Some(res.powers),
+                Some(b) => assert_eq!(b, &res.powers, "{name} {np}x{inner} must match 4x1"),
+            }
+            println!("{np:>7} {inner:>7} {:>12.4} {:>9}", t.median_s, dist.total_halo() * 8);
+            recs.push(Rec {
+                matrix: name.to_string(),
+                variant: "dlb",
+                ranks: np,
+                inner,
+                mode: "hier",
+                median_s: t.median_s,
+            });
+        }
+    }
+    println!("\n(every shape is bitwise-identical; 1x4 trades all halo traffic for");
+    println!(" intra-rank task batches, 4x1 is the flat-MPI baseline)");
 }
 
 /// Emit the measured rows as `BENCH_fig10.json` so the perf trajectory is
@@ -197,8 +265,9 @@ fn write_json(recs: &[Rec]) -> std::io::Result<&'static str> {
     for (i, r) in recs.iter().enumerate() {
         let sep = if i + 1 < recs.len() { "," } else { "" };
         s.push_str(&format!(
-            "    {{\"matrix\": \"{}\", \"variant\": \"{}\", \"ranks\": {}, \"mode\": \"{}\", \"median_s\": {}}}{sep}\n",
-            r.matrix, r.variant, r.ranks, r.mode, r.median_s
+            "    {{\"matrix\": \"{}\", \"variant\": \"{}\", \"ranks\": {}, \"inner\": {}, \
+             \"mode\": \"{}\", \"median_s\": {}}}{sep}\n",
+            r.matrix, r.variant, r.ranks, r.inner, r.mode, r.median_s
         ));
     }
     s.push_str("  ]\n}\n");

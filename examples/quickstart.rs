@@ -7,10 +7,13 @@
 //! 4. Rebuild the DLB engine on the threads executor: same numbers, real
 //!    OS-thread ranks behind a persistent pool (spawned once, reused by
 //!    every sweep).
-//! 5. Turn on span tracing and read back aggregated metrics — the same
+//! 5. Add the second hierarchy level with `.inner_threads(2)`: each rank
+//!    thread row-splits its wavefront over an inner worker pool —
+//!    ranks × threads, still bitwise identical.
+//! 6. Turn on span tracing and read back aggregated metrics — the same
 //!    recorder that `dlb-mpk anderson --trace-out trace.json` uses to
 //!    write a Chrome Trace Event file for chrome://tracing / Perfetto.
-//! 6. Route the same SpMV through the AOT Pallas/JAX artifact via PJRT
+//! 7. Route the same SpMV through the AOT Pallas/JAX artifact via PJRT
 //!    (the three-layer path; requires `make artifacts`).
 //!
 //! Run: `cargo run --release --example quickstart`
@@ -77,6 +80,26 @@ fn main() -> anyhow::Result<()> {
     println!(
         "threads executor: {} rank threads spawned once, {} sweeps dispatched, bitwise equal to sim",
         pool.threads, pool.sweeps
+    );
+
+    // Hierarchical execution: ranks × inner threads. Each pooled rank
+    // thread runs its per-level compute as dependency-free task batches on
+    // a 2-worker inner pool (`--inner-threads 2` on the CLI). The batches
+    // partition disjoint row ranges per power, so the result stays bitwise
+    // identical to serial — assert it.
+    let mut hier_eng = MpkEngine::builder(&dist)
+        .p_m(p_m)
+        .variant(Variant::Dlb(dlb_opts))
+        .executor(ExecutorKind::Threads { n: 0 })
+        .inner_threads(2)
+        .build()?;
+    let h1 = hier_eng.sweep(&x, None, Recurrence::Power);
+    assert_eq!(h1.powers, dlb.powers, "inner threads are bitwise-identical to serial");
+    assert_eq!(h1.comm, dlb.comm, "inner threads never change communication");
+    println!(
+        "hierarchical: {} ranks x {} inner threads, bitwise equal to serial",
+        dist.n_ranks(),
+        hier_eng.inner_threads()
     );
 
     // Observability: the same engine with span tracing on. Results stay

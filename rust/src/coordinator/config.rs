@@ -61,6 +61,10 @@ pub struct RunConfig {
     /// or `threads`/`threads(n)` (one OS thread per rank, measured
     /// wall-clock; a nonzero `n` overrides [`RunConfig::n_ranks`]).
     pub executor: ExecutorKind,
+    /// Within-rank worker threads (`crate::inner`): 1 = serial rank
+    /// kernels, `k >= 2` row-splits each rank's compute across `k`
+    /// participants with bitwise-identical results.
+    pub inner_threads: usize,
 }
 
 impl Default for RunConfig {
@@ -75,6 +79,7 @@ impl Default for RunConfig {
             reps: 5,
             validate: true,
             executor: ExecutorKind::Sim,
+            inner_threads: 1,
         }
     }
 }

@@ -48,6 +48,7 @@ pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
         executor: cfg.executor,
         backend: BackendSpec::Native,
         trace: false,
+        inner_threads: cfg.inner_threads,
     };
     let mut trad_eng = MpkEngine::from_shared(dist.clone(), cfg.p_m, &mk_cfg(Variant::Trad))?;
     let mut dlb_eng = MpkEngine::from_shared(dist.clone(), cfg.p_m, &mk_cfg(Variant::Dlb(opts)))?;
@@ -73,7 +74,7 @@ pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
         None
     };
 
-    let label = cfg.executor.label();
+    let label = exec_label(cfg);
     let mk = |name: &str, res: &MpkResult, t: crate::perf::Timed, o_dlb: f64, validated| Report {
         variant: format!("{name}@{label}"),
         n_rows: a.n_rows(),
@@ -110,6 +111,7 @@ pub fn run_ca(cfg: &RunConfig) -> Result<(Report, crate::mpk::CaOverheads)> {
         executor: cfg.executor,
         backend: BackendSpec::Native,
         trace: false,
+        inner_threads: cfg.inner_threads,
     };
     let mut eng = MpkEngine::from_shared(dist.clone(), cfg.p_m, &eng_cfg)?;
     let overheads = eng.ca_overheads().expect("CA engine has a primary plan");
@@ -119,7 +121,7 @@ pub fn run_ca(cfg: &RunConfig) -> Result<(Report, crate::mpk::CaOverheads)> {
     });
     let res = out.unwrap();
     let rep = Report {
-        variant: format!("ca@{}", cfg.executor.label()),
+        variant: format!("ca@{}", exec_label(cfg)),
         n_rows: a.n_rows(),
         nnz: a.nnz(),
         crs_mib: mib(a.crs_bytes()),
@@ -133,6 +135,18 @@ pub fn run_ca(cfg: &RunConfig) -> Result<(Report, crate::mpk::CaOverheads)> {
         validated: None,
     };
     Ok((rep, overheads))
+}
+
+/// Executor label for report variants, with the within-rank thread count
+/// appended when the inner pool is active (`thr` → `thrx2`). The default
+/// `inner_threads == 1` keeps the plain label, so existing report shapes
+/// (`trad@thr`, `ca@sim`, …) are unchanged.
+fn exec_label(cfg: &RunConfig) -> String {
+    if cfg.inner_threads > 1 {
+        format!("{}x{}", cfg.executor.label(), cfg.inner_threads)
+    } else {
+        cfg.executor.label().to_string()
+    }
 }
 
 fn equal(a: &MpkResult, b: &MpkResult) -> bool {
@@ -200,6 +214,30 @@ mod tests {
         let out = run(&cfg).unwrap();
         assert_eq!(out.reports[0].n_ranks, 3);
         assert_eq!(out.reports[1].validated, Some(true));
+    }
+
+    #[test]
+    fn inner_threads_label_and_results_match_serial() {
+        let cfg = RunConfig {
+            matrix: MatrixSpec::Stencil2D { nx: 20, ny: 20 },
+            n_ranks: 2,
+            p_m: 3,
+            reps: 1,
+            cache_bytes: 32 << 10,
+            executor: ExecutorKind::Threads { n: 0 },
+            inner_threads: 2,
+            ..Default::default()
+        };
+        let par = run(&cfg).unwrap();
+        assert_eq!(par.reports[0].variant, "trad@thrx2");
+        assert_eq!(par.reports[1].variant, "dlb@thrx2");
+        assert_eq!(par.reports[1].validated, Some(true));
+        let ser = run(&RunConfig { inner_threads: 1, ..cfg }).unwrap();
+        assert_eq!(ser.reports[0].variant, "trad@thr");
+        assert_eq!(par.trad.powers, ser.trad.powers);
+        assert_eq!(par.dlb.powers, ser.dlb.powers);
+        assert_eq!(par.trad.comm, ser.trad.comm);
+        assert_eq!(par.dlb.comm, ser.dlb.comm);
     }
 
     #[test]

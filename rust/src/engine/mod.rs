@@ -52,6 +52,7 @@ use std::sync::Arc;
 use crate::distsim::DistMatrix;
 use crate::exec::executor::assemble;
 use crate::exec::ExecutorKind;
+use crate::inner::InnerExec;
 use crate::matrix::CsrMatrix;
 use crate::mpk::ca::{self, CaExecPlan, CaOverheads, CaPlan};
 use crate::mpk::dlb::{self, DlbOptions, DlbPlan, DlbPre, Recurrence, Workspace};
@@ -141,6 +142,12 @@ pub struct EngineConfig {
     /// default: the disabled recorders cost one branch per would-be event
     /// and results are bitwise identical either way.
     pub trace: bool,
+    /// Inner (within-rank) threads per rank — the second level of the
+    /// ranks × inner-threads hierarchy (see [`crate::inner`]). `1` (the
+    /// default) is today's serial per-rank code; `k >= 2` runs each rank's
+    /// compute as dependency-free task batches on a `k`-participant inner
+    /// pool, bitwise identical to serial.
+    pub inner_threads: usize,
 }
 
 impl Default for EngineConfig {
@@ -150,6 +157,7 @@ impl Default for EngineConfig {
             executor: ExecutorKind::Sim,
             backend: BackendSpec::Native,
             trace: false,
+            inner_threads: 1,
         }
     }
 }
@@ -190,6 +198,13 @@ impl<'a> MpkEngineBuilder<'a> {
         self
     }
 
+    /// Inner threads per rank (see [`EngineConfig::inner_threads`]);
+    /// `k <= 1` keeps the serial per-rank path.
+    pub fn inner_threads(mut self, k: usize) -> Self {
+        self.cfg.inner_threads = k.max(1);
+        self
+    }
+
     pub fn build(self) -> anyhow::Result<MpkEngine> {
         MpkEngine::from_config(self.dist, self.p_m, &self.cfg)
     }
@@ -227,6 +242,12 @@ pub struct MpkEngine {
     executor: ExecutorKind,
     state: VariantState,
     pool: Option<RankPool>,
+    /// Configured inner threads per rank (1 = serial per-rank compute).
+    inner_threads: usize,
+    /// Per-rank inner pools for the *sequential* executor (empty when
+    /// `inner_threads <= 1`; the threads executor's pool workers own their
+    /// own [`InnerExec`]s instead).
+    inners: Vec<InnerExec>,
     /// Span-trace collection (`None` unless [`EngineConfig::trace`]).
     trace: Option<TraceSession>,
     /// Host-side backend: runs every kernel under the sequential executor,
@@ -308,11 +329,23 @@ impl MpkEngine {
             }
         };
 
+        let inner_threads = cfg.inner_threads.max(1);
         let trace = if cfg.trace { Some(TraceSession::new(dist_io.n_ranks())) } else { None };
-        let pool = match cfg.executor {
-            ExecutorKind::Sim => None,
+        let (pool, inners) = match cfg.executor {
+            ExecutorKind::Sim => {
+                let inners = if inner_threads >= 2 {
+                    (0..dist_io.n_ranks())
+                        .map(|r| InnerExec::new(inner_threads, r, &cfg.backend, trace.as_ref()))
+                        .collect()
+                } else {
+                    Vec::new()
+                };
+                (None, inners)
+            }
             ExecutorKind::Threads { .. } => {
-                Some(RankPool::spawn(dist_io.n_ranks(), &cfg.backend, trace.as_ref()))
+                let pool =
+                    RankPool::spawn(dist_io.n_ranks(), &cfg.backend, trace.as_ref(), inner_threads);
+                (Some(pool), Vec::new())
             }
         };
 
@@ -323,6 +356,8 @@ impl MpkEngine {
             executor: cfg.executor,
             state,
             pool,
+            inner_threads,
+            inners,
             trace,
             host_backend: cfg.backend.make(),
             plans_built,
@@ -372,6 +407,7 @@ impl MpkEngine {
         rec: Recurrence,
     ) -> SweepResult {
         if matches!(self.state, VariantState::Trad) {
+            let inners = sim_inners(&mut self.inners);
             return trad_recurrence_traced(
                 &self.dist,
                 x0,
@@ -380,10 +416,12 @@ impl MpkEngine {
                 rec,
                 self.host_backend.as_mut(),
                 self.trace.as_mut(),
+                inners,
             );
         }
         if matches!(self.state, VariantState::Dlb { .. }) {
             let plan = self.dlb_plan_for(p_m);
+            let inners = sim_inners(&mut self.inners);
             let (ws, trace) = match &mut self.state {
                 VariantState::Dlb { ws, .. } => (ws, self.trace.as_mut()),
                 _ => unreachable!(),
@@ -396,6 +434,7 @@ impl MpkEngine {
                 self.host_backend.as_mut(),
                 ws,
                 trace,
+                inners,
             );
         }
         let sess = self.ca_session_for(p_m);
@@ -403,7 +442,9 @@ impl MpkEngine {
             VariantState::Ca { a, .. } => a.clone(),
             _ => unreachable!(),
         };
-        ca::ca_execute_planned_traced(&a, &self.dist, &sess.plan, x0, self.trace.as_mut()).result
+        let inners = sim_inners(&mut self.inners);
+        ca::ca_execute_planned_traced(&a, &self.dist, &sess.plan, x0, self.trace.as_mut(), inners)
+            .result
     }
 
     /// Dispatch one sweep over the persistent rank pool and merge the
@@ -548,17 +589,39 @@ impl MpkEngine {
         self.pool.as_ref().map(|p| p.stats())
     }
 
+    /// Configured inner threads per rank (1 = serial per-rank compute).
+    pub fn inner_threads(&self) -> usize {
+        self.inner_threads
+    }
+
     /// Whether per-rank span tracing is on (see [`EngineConfig::trace`]).
     pub fn is_tracing(&self) -> bool {
         self.trace.is_some()
     }
 
-    /// Pull rank-pool workers' trace buffers into the session (sim-executor
-    /// kernels absorb eagerly; pool workers buffer until harvested).
+    /// Pull buffered trace events into the session: pool workers' main
+    /// streams plus every inner-pool worker's lane stream (sim-executor
+    /// main streams absorb eagerly; all worker threads buffer until
+    /// harvested).
     fn harvest_pool(&mut self) {
-        if let (Some(pool), Some(ts)) = (self.pool.as_mut(), self.trace.as_mut()) {
-            for (rank, ev) in pool.harvest().into_iter().enumerate() {
-                ts.absorb(rank, ev);
+        let Some(ts) = self.trace.as_mut() else {
+            return;
+        };
+        if let Some(pool) = self.pool.as_mut() {
+            for (rank, (main, lanes)) in pool.harvest().into_iter().enumerate() {
+                ts.absorb(rank, main);
+                for (lane, ev) in lanes {
+                    if !ev.is_empty() {
+                        ts.absorb_lane(rank, lane, ev);
+                    }
+                }
+            }
+        }
+        for (rank, ie) in self.inners.iter_mut().enumerate() {
+            for (lane, ev) in ie.harvest() {
+                if !ev.is_empty() {
+                    ts.absorb_lane(rank, lane, ev);
+                }
             }
         }
     }
@@ -598,6 +661,17 @@ impl MpkEngine {
             }
             _ => None,
         }
+    }
+}
+
+/// The sim-executor inner pools as the kernels' optional seam: `None` when
+/// every rank is serial (the default), so that path stays exactly today's
+/// code.
+fn sim_inners(inners: &mut [InnerExec]) -> Option<&mut [InnerExec]> {
+    if inners.is_empty() {
+        None
+    } else {
+        Some(inners)
     }
 }
 

@@ -35,6 +35,7 @@ use std::thread::JoinHandle;
 use crate::distsim::{CommStats, DistMatrix};
 use crate::exec::comm::{thread_comms, Communicator, ThreadComm};
 use crate::exec::RankRun;
+use crate::inner::InnerExec;
 use crate::matrix::CsrMatrix;
 use crate::mpk::ca::CaExecPlan;
 use crate::mpk::dlb::{DlbPlan, Recurrence};
@@ -68,10 +69,11 @@ pub(crate) enum Job {
         x: Vec<f64>,
         p_m: usize,
     },
-    /// Drain the worker's trace buffer (no sweep, no stats delta). The
-    /// worker replies on the dedicated sender so the result channel's
-    /// one-reply-per-sweep invariant is untouched.
-    Harvest(Sender<Vec<Event>>),
+    /// Drain the worker's trace buffers — its main-thread events plus the
+    /// `(lane, events)` streams of its inner pool (no sweep, no stats
+    /// delta). The worker replies on the dedicated sender so the result
+    /// channel's one-reply-per-sweep invariant is untouched.
+    Harvest(Sender<(Vec<Event>, Vec<(usize, Vec<Event>)>)>),
 }
 
 /// Pool health/usage counters (see [`crate::engine::MpkEngine::pool_stats`]).
@@ -94,11 +96,17 @@ pub(crate) struct RankPool {
 }
 
 impl RankPool {
-    /// Spawn the rank threads, each with its [`ThreadComm`] endpoint and a
-    /// private backend instance from `backend`. With `trace` set, each
-    /// endpoint gets an enabled recorder (shared session epoch) before it
-    /// moves into its worker.
-    pub(crate) fn spawn(n: usize, backend: &BackendSpec, trace: Option<&TraceSession>) -> Self {
+    /// Spawn the rank threads, each with its [`ThreadComm`] endpoint, a
+    /// private backend instance from `backend`, and (for
+    /// `inner_threads >= 2`) its own [`InnerExec`] inner pool. With `trace`
+    /// set, each endpoint gets an enabled recorder (shared session epoch)
+    /// before it moves into its worker.
+    pub(crate) fn spawn(
+        n: usize,
+        backend: &BackendSpec,
+        trace: Option<&TraceSession>,
+        inner_threads: usize,
+    ) -> Self {
         let mut comms = thread_comms(n);
         if let Some(ts) = trace {
             for (i, c) in comms.iter_mut().enumerate() {
@@ -112,9 +120,10 @@ impl RankPool {
             let (job_tx, job_rx) = channel::<Job>();
             let (res_tx, res_rx) = channel::<(RankRun, CommStats)>();
             let be = backend.make();
+            let inner = InnerExec::new(inner_threads, i, backend, trace);
             let handle = std::thread::Builder::new()
                 .name(format!("mpk-rank-{i}"))
-                .spawn(move || worker(i, comm, be, job_rx, res_tx))
+                .spawn(move || worker(i, comm, be, inner, job_rx, res_tx))
                 .expect("spawn rank thread");
             jobs.push(job_tx);
             results.push(res_rx);
@@ -147,12 +156,13 @@ impl RankPool {
             .collect()
     }
 
-    /// Drain every worker's trace buffer, in rank order. Does not count as
-    /// a sweep. Returns empty buffers when tracing is disabled.
-    pub(crate) fn harvest(&mut self) -> Vec<Vec<Event>> {
+    /// Drain every worker's trace buffers (main events + inner-pool lanes),
+    /// in rank order. Does not count as a sweep. Returns empty buffers when
+    /// tracing is disabled.
+    pub(crate) fn harvest(&mut self) -> Vec<(Vec<Event>, Vec<(usize, Vec<Event>)>)> {
         let mut out = Vec::with_capacity(self.n);
         for tx in &self.jobs {
-            let (ev_tx, ev_rx) = channel::<Vec<Event>>();
+            let (ev_tx, ev_rx) = channel();
             tx.send(Job::Harvest(ev_tx)).expect("rank worker died before harvest");
             out.push(ev_rx.recv().expect("rank worker died during harvest"));
         }
@@ -179,6 +189,7 @@ fn worker(
     i: usize,
     mut comm: ThreadComm,
     mut backend: Box<dyn SpmvBackend + Send>,
+    mut inner: InnerExec,
     jobs: Receiver<Job>,
     results: Sender<(RankRun, CommStats)>,
 ) {
@@ -188,7 +199,7 @@ fn worker(
         let job = match job {
             Job::Harvest(tx) => {
                 let ev = comm.tracer().take_events();
-                let _ = tx.send(ev);
+                let _ = tx.send((ev, inner.harvest()));
                 park_t0 = comm.tracer().now();
                 continue;
             }
@@ -205,6 +216,7 @@ fn worker(
                 rec,
                 &mut comm,
                 backend.as_mut(),
+                &mut inner,
             ),
             Job::Dlb { plan, x, x_m1, rec } => dlb::dlb_rank(
                 &plan.dist.ranks[i],
@@ -215,6 +227,7 @@ fn worker(
                 rec,
                 &mut comm,
                 backend.as_mut(),
+                &mut inner,
             ),
             Job::Ca { a, dist, plan, x, p_m } => ca::ca_rank(
                 &a,
@@ -225,6 +238,7 @@ fn worker(
                 &x,
                 p_m,
                 &mut comm,
+                &mut inner,
             ),
             Job::Harvest(_) => unreachable!("handled above"),
         };

@@ -9,6 +9,7 @@
 //! how the OS interleaved the rank threads.
 
 use crate::distsim::{merge_rank_stats, CommStats, DistMatrix};
+use crate::inner::InnerExec;
 use crate::mpk::dlb::{DlbPlan, Recurrence};
 use crate::mpk::{ca, dlb, trad, MpkResult, MpkVariant, NativeBackend};
 
@@ -134,7 +135,8 @@ pub fn trad_threaded(
         let r = &dist.ranks[i];
         let xm1 = xm1s.as_ref().map(|v| v[i].as_slice());
         let mut backend = NativeBackend;
-        let run = trad::trad_rank(r, &xs[i], xm1, p_m, rec, &mut comm, &mut backend);
+        let mut inner = InnerExec::serial();
+        let run = trad::trad_rank(r, &xs[i], xm1, p_m, rec, &mut comm, &mut backend, &mut inner);
         let stats = comm.stats().clone();
         (run, stats)
     });
@@ -157,6 +159,7 @@ pub fn dlb_threaded(
         let r = &dist.ranks[i];
         let xm1 = xm1s.as_ref().map(|v| v[i].as_slice());
         let mut backend = NativeBackend;
+        let mut inner = InnerExec::serial();
         let run = dlb::dlb_rank(
             r,
             &plan.ranks[i],
@@ -166,6 +169,7 @@ pub fn dlb_threaded(
             rec,
             &mut comm,
             &mut backend,
+            &mut inner,
         );
         let stats = comm.stats().clone();
         (run, stats)
@@ -185,6 +189,7 @@ pub fn ca_threaded(
     let xs = dist.scatter(x);
     let outs = run_ranks(dist.n_ranks(), |i, mut comm| {
         let r = &dist.ranks[i];
+        let mut inner = InnerExec::serial();
         let run = ca::ca_rank(
             a,
             r,
@@ -194,6 +199,7 @@ pub fn ca_threaded(
             &xs[i],
             p_m,
             &mut comm,
+            &mut inner,
         );
         let stats = comm.stats().clone();
         (run, stats)

@@ -1,0 +1,547 @@
+//! Shared-memory parallel wavefront execution *inside* one rank — the
+//! second level of the ranks × inner-threads hierarchy (the paper's
+//! MPI+OpenMP composition, RACE's level-based shared-memory scheduling).
+//!
+//! # What runs in parallel, and why it is safe
+//!
+//! A rank's compute is a sequence of *steps* `(group, power)` — promote the
+//! rows of one level group from `A^{p-1}x` to `A^p x`. Two steps may run
+//! concurrently only if neither reads what the other writes:
+//!
+//! * **Same power, different groups** — both write power `p` at disjoint
+//!   row ranges and read only power `p − 1`, which is finished. Safe.
+//! * **Powers apart by one** — the step at power `p + 1` reads power `p`
+//!   on its level span ± 1 (the SpMV dependency window). Safe only when
+//!   the writer's span is ≥ 2 levels away — RACE's rule that levels at
+//!   distance ≥ 2 never share matrix rows.
+//! * **Powers apart by two or more** — different write buffers; the only
+//!   lower-power read is the three-term recurrence's `prev2`, which is the
+//!   step's *own* rows at `p − 2`, finished long before. Safe.
+//!
+//! [`crate::race::parallel_batches`] turns a wavefront schedule into
+//! batches of steps that satisfy exactly these conditions (skewed fronts
+//! `node + 2·power`; see its docs for the full argument), so an
+//! [`InnerExec`] may run all tasks of one batch concurrently and only
+//! barrier between batches.
+//!
+//! # Bitwise identity with the serial path
+//!
+//! Every task computes each of its rows with the same primitive the serial
+//! code uses ([`crate::mpk::kernel_step`] / CA's `row_dot`), on the same
+//! backend kind, over the same fully-finished inputs. Each row is written
+//! exactly once per power, so neither the batch order nor which thread
+//! runs a task can change a single bit of the output — `inner_threads(k)`
+//! is bitwise identical to serial for every `k` (asserted across variants
+//! and executors in `rust/tests/inner_exec.rs`).
+//!
+//! # Shape of the pool
+//!
+//! An [`InnerExec`] with `k` participants owns `k − 1` parked worker
+//! threads (`mpk-rank-{r}-inner-{w}`); the calling rank thread is
+//! participant 0 and executes its own share of every batch, so `k = 1`
+//! degenerates to today's serial code with zero overhead. Workers own
+//! their own [`SpmvBackend`] instance and, when tracing, a lane
+//! [`RankRecorder`] whose `inner.task(g,p)` spans export as separate
+//! chrome-trace tids (`rank * LANE_STRIDE + lane`).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::engine::BackendSpec;
+use crate::matrix::CsrMatrix;
+use crate::mpk::dlb::Recurrence;
+use crate::mpk::{kernel_step, SpmvBackend};
+use crate::trace::{Event, RankRecorder, Span, TraceSession};
+
+/// Read-only view of a power buffer, sendable to inner workers.
+///
+/// Raw pointers instead of borrows because one batch may read and write
+/// *disjoint row ranges of the same buffer* from different tasks — a
+/// sharing pattern Rust references cannot express. Soundness rests on the
+/// [`crate::race::parallel_batches`] invariant (no same-batch read/write
+/// overlap) plus [`InnerExec::run_batch`] blocking until every task has
+/// acked, so no pointer outlives the buffers it was built from.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct SharedBuf {
+    ptr: *const f64,
+    len: usize,
+}
+
+unsafe impl Send for SharedBuf {}
+
+impl SharedBuf {
+    pub(crate) fn of(v: &[f64]) -> Self {
+        Self { ptr: v.as_ptr(), len: v.len() }
+    }
+
+    /// # Safety
+    /// Only within a task of a batch whose buffers are still borrowed by
+    /// the blocked `run_batch` caller, and never overlapping a same-batch
+    /// write (the `parallel_batches` invariant).
+    unsafe fn slice<'a>(self) -> &'a [f64] {
+        std::slice::from_raw_parts(self.ptr, self.len)
+    }
+}
+
+/// Write view of a power buffer — same rules as [`SharedBuf`], plus:
+/// same-batch tasks write disjoint row ranges of it.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct SharedBufMut {
+    ptr: *mut f64,
+    len: usize,
+}
+
+unsafe impl Send for SharedBufMut {}
+
+impl SharedBufMut {
+    pub(crate) fn of(v: &mut [f64]) -> Self {
+        Self { ptr: v.as_mut_ptr(), len: v.len() }
+    }
+
+    pub(crate) fn read(self) -> SharedBuf {
+        SharedBuf { ptr: self.ptr, len: self.len }
+    }
+
+    /// # Safety
+    /// See [`SharedBuf::slice`]; additionally the caller must only write
+    /// rows its own task owns.
+    unsafe fn slice_mut<'a>(self) -> &'a mut [f64] {
+        std::slice::from_raw_parts_mut(self.ptr, self.len)
+    }
+}
+
+/// Shared rank-local matrix pointer (the matrix is immutable for the whole
+/// sweep; workers only read it).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct MatPtr(pub(crate) *const CsrMatrix);
+
+unsafe impl Send for MatPtr {}
+
+impl MatPtr {
+    pub(crate) fn of(a: &CsrMatrix) -> Self {
+        Self(a)
+    }
+}
+
+/// Borrowed row-index list (CA promotion rounds walk explicit row lists).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct RowsPtr {
+    ptr: *const usize,
+    len: usize,
+}
+
+unsafe impl Send for RowsPtr {}
+
+impl RowsPtr {
+    pub(crate) fn of(rows: &[usize]) -> Self {
+        Self { ptr: rows.as_ptr(), len: rows.len() }
+    }
+}
+
+/// One dependency-free task of a batch.
+pub(crate) enum InnerWork {
+    /// A contiguous row range of one three-term recurrence step
+    /// (TRAD sweeps, DLB wavefront + remainder) via `kernel_step`.
+    Range {
+        a: MatPtr,
+        rec: Recurrence,
+        prev2: Option<SharedBuf>,
+        prev: SharedBuf,
+        cur: SharedBufMut,
+        lo: usize,
+        hi: usize,
+        span: Span,
+    },
+    /// An explicit row list of one CA promotion round (global indexing,
+    /// plain row dot products — CA never goes through a backend).
+    Rows { a: MatPtr, rows: RowsPtr, prev: SharedBuf, cur: SharedBufMut, span: Span },
+}
+
+/// Execute one task; returns the nonzeros touched (the `flop_nnz` share).
+fn exec_work(w: &InnerWork, backend: &mut dyn SpmvBackend, tracer: &mut RankRecorder) -> usize {
+    match *w {
+        InnerWork::Range { a, rec, prev2, prev, cur, lo, hi, span } => {
+            let t0 = tracer.now();
+            // SAFETY: `run_batch` blocks its caller (who holds the real
+            // borrows) until this task acks, and the batch invariant says
+            // no same-batch task writes what we read or touches rows we
+            // write — see the SharedBuf docs.
+            let nnz = unsafe {
+                let prev2 = prev2.map(|b| b.slice());
+                kernel_step(&*a.0, rec, prev2, prev.slice(), cur.slice_mut(), lo, hi, backend)
+            };
+            tracer.closed_span(span, t0);
+            nnz
+        }
+        InnerWork::Rows { a, rows, prev, cur, span } => {
+            let t0 = tracer.now();
+            // SAFETY: as above; row lists of one batch are disjoint.
+            let nnz = unsafe {
+                let a = &*a.0;
+                let rows = std::slice::from_raw_parts(rows.ptr, rows.len);
+                let (prev, cur) = (prev.slice(), cur.slice_mut());
+                let mut nnz = 0usize;
+                for &g in rows {
+                    cur[g] = crate::mpk::ca::row_dot(a, g, prev);
+                    nnz += a.row_cols(g).len();
+                }
+                nnz
+            };
+            tracer.closed_span(span, t0);
+            nnz
+        }
+    }
+}
+
+enum ToWorker {
+    /// Run a bundle of tasks, then ack the summed nnz on the done channel.
+    Run(Vec<InnerWork>),
+    /// Drain the lane recorder's buffered events.
+    Harvest(Sender<Vec<Event>>),
+}
+
+struct Pool {
+    workers: Vec<Sender<ToWorker>>,
+    done_rx: Receiver<usize>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// A rank's inner thread pool: participant 0 is the calling rank thread,
+/// participants `1..k` are parked worker threads. `k <= 1` is the serial
+/// executor — no threads, no channels, and the kernels bypass it entirely.
+pub struct InnerExec {
+    pool: Option<Pool>,
+}
+
+impl InnerExec {
+    /// The serial executor (`inner_threads(1)`, the default).
+    pub fn serial() -> Self {
+        Self { pool: None }
+    }
+
+    /// An executor with `k` total participants for `rank`. Workers own a
+    /// fresh backend from `backend` and, when `trace` is given, a lane
+    /// recorder on the session's epoch.
+    pub fn new(k: usize, rank: usize, backend: &BackendSpec, trace: Option<&TraceSession>) -> Self {
+        if k <= 1 {
+            return Self::serial();
+        }
+        let (done_tx, done_rx) = channel();
+        let mut workers = Vec::with_capacity(k - 1);
+        let mut handles = Vec::with_capacity(k - 1);
+        for w in 1..k {
+            let (tx, rx) = channel::<ToWorker>();
+            let be = backend.make();
+            let tracer = match trace {
+                Some(ts) => ts.recorder(rank),
+                None => RankRecorder::disabled(),
+            };
+            let done = done_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("mpk-rank-{rank}-inner-{w}"))
+                .spawn(move || worker_loop(rx, done, be, tracer))
+                .expect("spawn inner worker thread");
+            workers.push(tx);
+            handles.push(handle);
+        }
+        Self { pool: Some(Pool { workers, done_rx, handles }) }
+    }
+
+    /// Whether batches actually fan out (`k >= 2`). Kernels keep their
+    /// exact serial code path (same spans, no task boxing) when false.
+    pub fn is_parallel(&self) -> bool {
+        self.pool.is_some()
+    }
+
+    /// Total participants (caller + workers).
+    pub fn participants(&self) -> usize {
+        self.pool.as_ref().map_or(1, |p| p.workers.len() + 1)
+    }
+
+    /// Run one dependency-free batch: task `i` goes to participant
+    /// `i % k` (deterministic, so traces are stable), the caller executes
+    /// its own bundle on `backend`/`tracer`, and the call returns the
+    /// summed nnz only after every dispatched bundle has acked — the
+    /// barrier that makes the raw-pointer views sound.
+    pub(crate) fn run_batch(
+        &mut self,
+        work: Vec<InnerWork>,
+        backend: &mut dyn SpmvBackend,
+        tracer: &mut RankRecorder,
+    ) -> usize {
+        let Some(pool) = self.pool.as_ref() else {
+            let mut nnz = 0usize;
+            for w in &work {
+                nnz += exec_work(w, backend, tracer);
+            }
+            return nnz;
+        };
+        let k = pool.workers.len() + 1;
+        let mut bundles: Vec<Vec<InnerWork>> = (0..k).map(|_| Vec::new()).collect();
+        for (i, w) in work.into_iter().enumerate() {
+            bundles[i % k].push(w);
+        }
+        let mut bundles = bundles.into_iter();
+        let mine = bundles.next().expect("k >= 1");
+        let mut dispatched = 0usize;
+        for (tx, bundle) in pool.workers.iter().zip(bundles) {
+            if !bundle.is_empty() {
+                tx.send(ToWorker::Run(bundle)).expect("inner worker died");
+                dispatched += 1;
+            }
+        }
+        let mut nnz = 0usize;
+        for w in &mine {
+            nnz += exec_work(w, backend, tracer);
+        }
+        for _ in 0..dispatched {
+            nnz += pool.done_rx.recv().expect("inner worker died mid-batch");
+        }
+        nnz
+    }
+
+    /// Drain every worker's lane recorder; returns `(lane, events)` pairs
+    /// with lanes numbered from 1 (lane 0 is the rank's main thread).
+    pub fn harvest(&mut self) -> Vec<(usize, Vec<Event>)> {
+        let Some(pool) = self.pool.as_ref() else {
+            return Vec::new();
+        };
+        let mut out = Vec::with_capacity(pool.workers.len());
+        for (w, tx) in pool.workers.iter().enumerate() {
+            let (ev_tx, ev_rx) = channel();
+            tx.send(ToWorker::Harvest(ev_tx)).expect("inner worker died");
+            out.push((w + 1, ev_rx.recv().expect("inner worker died during harvest")));
+        }
+        out
+    }
+}
+
+impl Drop for InnerExec {
+    fn drop(&mut self) {
+        if let Some(mut pool) = self.pool.take() {
+            pool.workers.clear(); // closes the job channels
+            for h in pool.handles.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    jobs: Receiver<ToWorker>,
+    done: Sender<usize>,
+    mut backend: Box<dyn SpmvBackend + Send>,
+    mut tracer: RankRecorder,
+) {
+    while let Ok(msg) = jobs.recv() {
+        match msg {
+            ToWorker::Run(bundle) => {
+                let mut nnz = 0usize;
+                for w in &bundle {
+                    nnz += exec_work(w, backend.as_mut(), &mut tracer);
+                }
+                if done.send(nnz).is_err() {
+                    break;
+                }
+            }
+            ToWorker::Harvest(tx) => {
+                let _ = tx.send(tracer.take_events());
+            }
+        }
+    }
+}
+
+/// Deterministic near-equal split of `[lo, hi)` into at most `k` non-empty
+/// contiguous chunks.
+pub(crate) fn split_range(lo: usize, hi: usize, k: usize) -> Vec<(usize, usize)> {
+    let n = hi.saturating_sub(lo);
+    if n == 0 {
+        return Vec::new();
+    }
+    let k = k.clamp(1, n);
+    (0..k).map(|i| (lo + n * i / k, lo + n * (i + 1) / k)).collect()
+}
+
+/// Split one recurrence step `[lo, hi)` into per-participant [`InnerWork`]
+/// chunks and run them as a single batch. All chunks share `power`, so
+/// they are mutually independent — used by the TRAD full sweeps and the
+/// DLB phase-3 class advances.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_split_range(
+    inner: &mut InnerExec,
+    a: &CsrMatrix,
+    rec: Recurrence,
+    prev2: Option<&[f64]>,
+    prev: &[f64],
+    cur: &mut [f64],
+    lo: usize,
+    hi: usize,
+    power: usize,
+    backend: &mut dyn SpmvBackend,
+    tracer: &mut RankRecorder,
+) -> usize {
+    let prev2 = prev2.map(SharedBuf::of);
+    let prevv = SharedBuf::of(prev);
+    let curv = SharedBufMut::of(cur);
+    let work: Vec<InnerWork> = split_range(lo, hi, inner.participants())
+        .into_iter()
+        .enumerate()
+        .map(|(i, (clo, chi))| InnerWork::Range {
+            a: MatPtr::of(a),
+            rec,
+            prev2,
+            prev: prevv,
+            cur: curv,
+            lo: clo,
+            hi: chi,
+            span: Span::InnerTask { group: i as u32, power: power as u32 },
+        })
+        .collect();
+    inner.run_batch(work, backend, tracer)
+}
+
+/// One CA promotion round as a single batch: the owned row list plus every
+/// still-live external class, each split into per-participant chunks. All
+/// tasks write power `p` at disjoint rows and read only power `p − 1`, so
+/// the whole round is dependency-free.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_ca_round(
+    inner: &mut InnerExec,
+    a: &CsrMatrix,
+    owned: &[usize],
+    ext: &[Vec<usize>],
+    p_m: usize,
+    p: usize,
+    prev: &[f64],
+    cur: &mut [f64],
+    tracer: &mut RankRecorder,
+) -> usize {
+    let k = inner.participants();
+    let prevv = SharedBuf::of(prev);
+    let curv = SharedBufMut::of(cur);
+    let mut work: Vec<InnerWork> = Vec::new();
+    let mut group = 0u32;
+    let mut push_list = |rows: &[usize], work: &mut Vec<InnerWork>, group: &mut u32| {
+        for (clo, chi) in split_range(0, rows.len(), k) {
+            work.push(InnerWork::Rows {
+                a: MatPtr::of(a),
+                rows: RowsPtr::of(&rows[clo..chi]),
+                prev: prevv,
+                cur: curv,
+                span: Span::InnerTask { group: *group, power: p as u32 },
+            });
+            *group += 1;
+        }
+    };
+    push_list(owned, &mut work, &mut group);
+    for (kx, cls) in ext.iter().enumerate() {
+        let target = p_m.saturating_sub(1).saturating_sub(kx);
+        if p <= target {
+            push_list(cls, &mut work, &mut group);
+        }
+    }
+    // Rows tasks never touch the backend seam (CA's fixed row loop), but
+    // the caller participant still needs one to satisfy `run_batch`.
+    let mut host = crate::mpk::NativeBackend;
+    inner.run_batch(work, &mut host, tracer)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::mpk::NativeBackend;
+
+    #[test]
+    fn split_range_is_deterministic_and_covers() {
+        assert_eq!(split_range(0, 10, 3), vec![(0, 3), (3, 6), (6, 10)]);
+        assert_eq!(split_range(5, 5, 4), vec![]);
+        assert_eq!(split_range(2, 4, 8), vec![(2, 3), (3, 4)], "never emits empty chunks");
+        for (k, n) in [(1, 17), (3, 17), (5, 100)] {
+            let chunks = split_range(0, n, k);
+            assert_eq!(chunks.len(), k);
+            assert_eq!(chunks[0].0, 0);
+            assert_eq!(chunks.last().unwrap().1, n);
+            for w in chunks.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+                assert!(w[0].0 < w[0].1, "non-empty");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_range_batch_is_bitwise_equal_to_serial() {
+        let a = gen::stencil_2d_5pt(12, 12);
+        let n = a.n_rows();
+        let x: Vec<f64> = (0..n).map(|i| ((i % 13) as f64 - 6.0) / 7.0).collect();
+        let mut serial = vec![0.0; n];
+        let mut be = NativeBackend;
+        let nnz_serial =
+            kernel_step(&a, Recurrence::Power, None, &x, &mut serial, 0, n, &mut be);
+        for k in [2usize, 4] {
+            let mut inner = InnerExec::new(k, 0, &BackendSpec::Native, None);
+            assert!(inner.is_parallel());
+            assert_eq!(inner.participants(), k);
+            let mut cur = vec![0.0; n];
+            let mut tracer = RankRecorder::disabled();
+            let nnz = run_split_range(
+                &mut inner,
+                &a,
+                Recurrence::Power,
+                None,
+                &x,
+                &mut cur,
+                0,
+                n,
+                1,
+                &mut be,
+                &mut tracer,
+            );
+            assert_eq!(nnz, nnz_serial);
+            for (u, v) in serial.iter().zip(&cur) {
+                assert_eq!(u.to_bits(), v.to_bits(), "k={k} differs from serial");
+            }
+            assert!(inner.harvest().iter().all(|(_, ev)| ev.is_empty()), "untraced: no events");
+        }
+    }
+
+    #[test]
+    fn serial_executor_has_no_pool() {
+        let mut e = InnerExec::serial();
+        assert!(!e.is_parallel());
+        assert_eq!(e.participants(), 1);
+        assert!(e.harvest().is_empty());
+        let e1 = InnerExec::new(1, 3, &BackendSpec::Native, None);
+        assert!(!e1.is_parallel());
+    }
+
+    #[test]
+    fn workers_record_lane_events_when_traced() {
+        let ts = TraceSession::with_capacity(1, 64);
+        let a = gen::stencil_2d_5pt(10, 10);
+        let n = a.n_rows();
+        let x = vec![1.0; n];
+        let mut cur = vec![0.0; n];
+        let mut inner = InnerExec::new(2, 0, &BackendSpec::Native, Some(&ts));
+        let mut be = NativeBackend;
+        let mut tracer = ts.recorder(0);
+        run_split_range(
+            &mut inner,
+            &a,
+            Recurrence::Power,
+            None,
+            &x,
+            &mut cur,
+            0,
+            n,
+            1,
+            &mut be,
+            &mut tracer,
+        );
+        assert!(tracer.buffered() > 0, "caller participant records on the main lane");
+        let lanes = inner.harvest();
+        assert_eq!(lanes.len(), 1);
+        assert_eq!(lanes[0].0, 1);
+        assert!(!lanes[0].1.is_empty(), "worker recorded its inner.task span");
+    }
+}

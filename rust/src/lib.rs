@@ -29,6 +29,10 @@
 //! * [`engine`] — **the public execution API**: `MpkEngine`, a
 //!   prepare-once/apply-many session owning the variant plan, tail-plan
 //!   cache, workspaces, and (threads executor) a persistent rank pool.
+//! * [`inner`] — within-rank shared-memory wavefront execution: each rank's
+//!   inner thread pool runs dependency-safe step batches concurrently
+//!   (`MpkEngine::builder().inner_threads(k)`), giving ranks × inner-threads
+//!   hierarchical parallelism like MPI+OpenMP.
 //! * [`mpk`] — the three MPK variants: `trad`, `ca` (baseline from
 //!   Mohiyuddin et al. 2009), and `dlb` (the paper's contribution).
 //! * [`cachesim`] — LRU cache simulator replaying MPK reference streams to
@@ -47,6 +51,7 @@ pub mod distsim;
 pub mod engine;
 pub mod exec;
 pub mod graph;
+pub mod inner;
 pub mod matrix;
 pub mod mpk;
 pub mod partition;

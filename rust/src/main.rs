@@ -81,6 +81,9 @@ fn include_str_usage() -> &'static str {
        --executor E     sim | threads | threads(N)  (default sim; threads =\n\
                         one OS thread per rank, measured wall-clock;\n\
                         threads(N) runs N ranks/threads, overriding --ranks)\n\
+       --inner-threads K  within-rank worker threads (default 1 = serial;\n\
+                        K >= 2 row-splits each rank's compute across K\n\
+                        participants, bitwise identical to serial)\n\
        --reps R         timing repetitions (default 5)\n\
        --no-validate    skip TRAD/DLB equivalence check\n\
        --trace-out PATH (anderson) record per-rank spans, write a Chrome\n\
@@ -194,6 +197,7 @@ fn config(flags: &Flags) -> Result<RunConfig> {
         reps: flags.usize("reps", 5)?,
         validate: !flags.has("no-validate"),
         executor,
+        inner_threads: flags.usize("inner-threads", 1)?.max(1),
     })
 }
 
@@ -205,7 +209,12 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         r.print_row();
     }
     let speedup = out.reports[0].time.median_s / out.reports[1].time.median_s;
-    println!("\nexecutor: {} | DLB speedup over TRAD: {speedup:.2}x", cfg.executor);
+    let inner = if cfg.inner_threads > 1 {
+        format!(" x {} inner threads/rank", cfg.inner_threads)
+    } else {
+        String::new()
+    };
+    println!("\nexecutor: {}{inner} | DLB speedup over TRAD: {speedup:.2}x", cfg.executor);
     Ok(())
 }
 
@@ -270,6 +279,7 @@ fn cmd_anderson(flags: &Flags) -> Result<()> {
     let executor = ExecutorKind::parse(flags.get("executor").unwrap_or("sim"))
         .context("--executor must be sim|threads|threads(N)")?;
     let ranks = executor.ranks(flags.usize("ranks", 1)?);
+    let inner_threads = flags.usize("inner-threads", 1)?.max(1);
     let acfg = AndersonConfig { lx: l, ly: l, lz: l, w, t: 1.0, t_perp: 1.0, seed: 42 };
     let h = anderson(&acfg);
     println!("anderson {}^3: {} sites, {} nnz", l, h.n_rows(), h.nnz());
@@ -287,11 +297,13 @@ fn cmd_anderson(flags: &Flags) -> Result<()> {
             executor,
             backend: BackendSpec::Native,
             trace: trace_out.is_some(),
+            inner_threads,
         },
     };
     let mut prop = ChebyshevPropagator::new(&h, &dist, ccfg)?;
     println!(
-        "chebyshev: {} terms per step, block p_m = {p_m}, executor {executor} ({ranks} ranks)",
+        "chebyshev: {} terms per step, block p_m = {p_m}, executor {executor} ({ranks} ranks, \
+         {inner_threads} inner thread(s)/rank)",
         prop.n_terms
     );
     let mut psi = wave_packet(&acfg, l as f64 / 8.0, [std::f64::consts::FRAC_PI_2, 0.0, 0.0]);

@@ -14,6 +14,7 @@ use std::collections::HashMap;
 
 use crate::distsim::{CommStats, DistMatrix, RankLocal};
 use crate::exec::{Communicator, RankRun};
+use crate::inner::InnerExec;
 use crate::matrix::CsrMatrix;
 use crate::mpk::MpkResult;
 use crate::trace::{RankRecorder, Span, TraceSession};
@@ -130,7 +131,7 @@ pub fn ca_mpk_with(a: &CsrMatrix, dist: &DistMatrix, x: &[f64], p_m: usize) -> C
 /// (counting-simulator) path of [`crate::engine::MpkEngine`], which caches
 /// the plan across sweeps instead of rebuilding it per call.
 pub fn ca_execute_planned(a: &CsrMatrix, dist: &DistMatrix, plan: &CaPlan, x: &[f64]) -> CaOutput {
-    ca_execute_planned_traced(a, dist, plan, x, None)
+    ca_execute_planned_traced(a, dist, plan, x, None, None)
 }
 
 /// [`ca_execute_planned`] with an optional [`TraceSession`]. The sequential
@@ -138,13 +139,15 @@ pub fn ca_execute_planned(a: &CsrMatrix, dist: &DistMatrix, plan: &CaPlan, x: &[
 /// directly: the accounting pass becomes a `ca.exchange` span wrapping
 /// zero-duration synthetic `comm.recv` spans (one per peer message, real
 /// byte counts, so metrics flows still sum to [`CommStats`]), and each
-/// promotion round a `ca.promote(p)` span.
+/// promotion round a `ca.promote(p)` span. A parallel per-rank [`InnerExec`]
+/// (if supplied) fans each promotion round out as `inner.task` spans.
 pub fn ca_execute_planned_traced(
     a: &CsrMatrix,
     dist: &DistMatrix,
     plan: &CaPlan,
     x: &[f64],
     mut trace: Option<&mut TraceSession>,
+    mut inners: Option<&mut [InnerExec]>,
 ) -> CaOutput {
     let p_m = plan.p_m;
     let mut comm = CommStats::default();
@@ -201,10 +204,25 @@ pub fn ca_execute_planned_traced(
     for ((rank, r), classes) in dist.ranks.iter().enumerate().zip(&plan.ext) {
         for p in 1..=p_m {
             let (prevs, curs) = powers.split_at_mut(p);
-            let t0 = recorders[rank].now();
-            flop_nnz +=
-                ca_promote_round(a, &r.owned, classes, p_m, p, &prevs[p - 1], &mut curs[0]);
-            recorders[rank].closed_span(Span::CaPromote { power: p as u32 }, t0);
+            let par = inners.as_deref_mut().map(|v| &mut v[rank]).filter(|e| e.is_parallel());
+            if let Some(ie) = par {
+                flop_nnz += crate::inner::run_ca_round(
+                    ie,
+                    a,
+                    &r.owned,
+                    classes,
+                    p_m,
+                    p,
+                    &prevs[p - 1],
+                    &mut curs[0],
+                    &mut recorders[rank],
+                );
+            } else {
+                let t0 = recorders[rank].now();
+                flop_nnz +=
+                    ca_promote_round(a, &r.owned, classes, p_m, p, &prevs[p - 1], &mut curs[0]);
+                recorders[rank].closed_span(Span::CaPromote { power: p as u32 }, t0);
+            }
         }
     }
 
@@ -328,6 +346,7 @@ pub fn ca_rank(
     x0: &[f64],
     p_m: usize,
     comm: &mut dyn Communicator,
+    inner: &mut InnerExec,
 ) -> RankRun {
     let n = a.n_rows();
     let mut prev = vec![0.0; n];
@@ -361,9 +380,23 @@ pub fn ca_rank(
     ys.push(extract(&prev));
     let mut flop_nnz = 0usize;
     for p in 1..=p_m {
-        let t0 = comm.tracer().now();
-        flop_nnz += ca_promote_round(a, &r.owned, ext, p_m, p, &prev, &mut cur);
-        comm.tracer().closed_span(Span::CaPromote { power: p as u32 }, t0);
+        if inner.is_parallel() {
+            flop_nnz += crate::inner::run_ca_round(
+                inner,
+                a,
+                &r.owned,
+                ext,
+                p_m,
+                p,
+                &prev,
+                &mut cur,
+                comm.tracer(),
+            );
+        } else {
+            let t0 = comm.tracer().now();
+            flop_nnz += ca_promote_round(a, &r.owned, ext, p_m, p, &prev, &mut cur);
+            comm.tracer().closed_span(Span::CaPromote { power: p as u32 }, t0);
+        }
         ys.push(extract(&cur));
         std::mem::swap(&mut prev, &mut cur);
     }
@@ -371,8 +404,10 @@ pub fn ca_rank(
     RankRun { ys, flop_nnz }
 }
 
+/// Plain CSR row dot product — the CA compute primitive. `pub(crate)` so
+/// [`crate::inner`]'s `Rows` tasks reproduce the serial numerics exactly.
 #[inline]
-fn row_dot(a: &CsrMatrix, r: usize, x: &[f64]) -> f64 {
+pub(crate) fn row_dot(a: &CsrMatrix, r: usize, x: &[f64]) -> f64 {
     let mut sum = 0.0;
     for k in a.rowptr[r]..a.rowptr[r + 1] {
         sum += a.values[k] * x[a.colidx[k] as usize];

@@ -26,9 +26,10 @@ use crate::exec::comm::{lockstep_halo_exchange, sim_comms, Communicator};
 use crate::exec::RankRun;
 use crate::graph::distance::multi_source_distances;
 use crate::graph::{bfs_levels, Adjacency, Levels};
+use crate::inner::{InnerExec, InnerWork, MatPtr, SharedBuf, SharedBufMut};
 use crate::mpk::{kernel_step, MpkResult, SpmvBackend};
 use crate::race::grouping::group_levels_solo_prefix;
-use crate::race::schedule::{wavefront_capped, Step};
+use crate::race::schedule::{parallel_batches, wavefront_capped, Step};
 use crate::trace::{Span, TraceSession};
 
 /// Tuning knobs mirroring the paper's RACE parameters (§6.2).
@@ -61,6 +62,10 @@ pub struct DlbRankPlan {
     pub caps: Vec<usize>,
     /// Phase-2 wavefront schedule.
     pub schedule: Vec<Step>,
+    /// [`schedule`](Self::schedule) regrouped into dependency-free batches
+    /// ([`parallel_batches`]) for a parallel [`InnerExec`]; flattening the
+    /// batches yields a valid schedule over the same step multiset.
+    pub batches: Vec<Vec<Step>>,
     /// Row ranges of classes `I_1..I_{p_m-1}` (phase 3 work lists):
     /// `class_ranges[k-1]` = rows of `I_k`; empty if the class is empty.
     pub class_ranges: Vec<(usize, usize)>,
@@ -188,6 +193,7 @@ fn finish_rank_plan(r: &RankLocal, levels: &Levels, p_m: usize, opts: &DlbOption
         .map(|&(lo, _)| if r.n_halo() == 0 { p_m } else { (lo + 1).min(p_m) })
         .collect();
     let schedule = wavefront_capped(&groups, n_levels, p_m, &caps);
+    let batches = parallel_batches(&schedule, &groups);
 
     // class row ranges for phase 3 (level k-1 = class k)
     let class_ranges: Vec<(usize, usize)> = (0..p_m.saturating_sub(1))
@@ -213,6 +219,7 @@ fn finish_rank_plan(r: &RankLocal, levels: &Levels, p_m: usize, opts: &DlbOption
         ranges: groups.ranges.clone(),
         caps,
         schedule,
+        batches,
         class_ranges,
         bulk_rows,
     }
@@ -361,13 +368,16 @@ pub fn execute_recurrence_with(
     backend: &mut dyn SpmvBackend,
     ws: &mut Workspace,
 ) -> MpkResult {
-    execute_recurrence_traced(plan, x, x_m1, rec, backend, ws, None)
+    execute_recurrence_traced(plan, x, x_m1, rec, backend, ws, None, None)
 }
 
 /// [`execute_recurrence_with`] with an optional [`TraceSession`]: per-rank
 /// recorders ride the [`SimComm`] endpoints, wavefront steps become
 /// `dlb.wavefront(g,p)` spans and remainder advances `dlb.remainder(r,k)`
-/// spans, and the drained events are absorbed back.
+/// spans, and the drained events are absorbed back. Ranks whose entry in
+/// `inners` is a parallel [`InnerExec`] run phase 2 batch-by-batch and
+/// phase 3 row-split, emitting `inner.task` spans instead of the coarse
+/// per-step ones.
 #[allow(clippy::too_many_arguments)]
 pub fn execute_recurrence_traced(
     plan: &DlbPlan,
@@ -377,6 +387,7 @@ pub fn execute_recurrence_traced(
     backend: &mut dyn SpmvBackend,
     ws: &mut Workspace,
     mut trace: Option<&mut TraceSession>,
+    mut inners: Option<&mut [InnerExec]>,
 ) -> MpkResult {
     let p_m = plan.p_m;
     let dist = &plan.dist;
@@ -429,14 +440,42 @@ pub fn execute_recurrence_traced(
     // ---- phase 2: local level-blocked wavefront (cache-blocked)
     for i in 0..nr {
         let pl = &plan.ranks[i];
-        for s in &pl.schedule {
-            let (lo, hi) = pl.ranges[s.group];
-            let t0 = comms[i].tracer().now();
-            do_step(ys, &ym1, &mut flop_nnz, i, lo, hi, s.power, backend);
-            comms[i].tracer().closed_span(
-                Span::DlbWavefront { group: s.group as u32, power: s.power as u32 },
-                t0,
-            );
+        let par = inners.as_deref_mut().map(|v| &mut v[i]).filter(|e| e.is_parallel());
+        if let Some(ie) = par {
+            let r = &dist.ranks[i];
+            let xm1v = ym1.map(|v| SharedBuf::of(&v[i]));
+            let views: Vec<SharedBufMut> =
+                ys.iter_mut().map(|pw| SharedBufMut::of(&mut pw[i])).collect();
+            for batch in &pl.batches {
+                let work: Vec<InnerWork> = batch
+                    .iter()
+                    .map(|s| {
+                        let (lo, hi) = pl.ranges[s.group];
+                        let p = s.power;
+                        InnerWork::Range {
+                            a: MatPtr::of(&r.a),
+                            rec,
+                            prev2: if p >= 2 { Some(views[p - 2].read()) } else { xm1v },
+                            prev: views[p - 1].read(),
+                            cur: views[p],
+                            lo,
+                            hi,
+                            span: Span::InnerTask { group: s.group as u32, power: p as u32 },
+                        }
+                    })
+                    .collect();
+                flop_nnz += ie.run_batch(work, backend, comms[i].tracer());
+            }
+        } else {
+            for s in &pl.schedule {
+                let (lo, hi) = pl.ranges[s.group];
+                let t0 = comms[i].tracer().now();
+                do_step(ys, &ym1, &mut flop_nnz, i, lo, hi, s.power, backend);
+                comms[i].tracer().closed_span(
+                    Span::DlbWavefront { group: s.group as u32, power: s.power as u32 },
+                    t0,
+                );
+            }
         }
     }
 
@@ -445,18 +484,49 @@ pub fn execute_recurrence_traced(
         lockstep_halo_exchange(&mut comms, &dist.ranks, p as u64, &mut ys[p]);
         for i in 0..nr {
             let pl = &plan.ranks[i];
-            for k in 1..=(p_m - p) {
-                let (lo, hi) = pl.class_ranges[k - 1];
-                if lo == hi {
-                    continue;
+            let par = inners.as_deref_mut().map(|v| &mut v[i]).filter(|e| e.is_parallel());
+            if let Some(ie) = par {
+                let r = &dist.ranks[i];
+                for k in 1..=(p_m - p) {
+                    let (lo, hi) = pl.class_ranges[k - 1];
+                    if lo == hi {
+                        continue;
+                    }
+                    // advance I_k from power p + k - 1 to p + k, row-split
+                    let (prevs, cur) = ys.split_at_mut(p + k);
+                    let prev2: Option<&[f64]> = if p + k >= 2 {
+                        Some(&prevs[p + k - 2][i][..])
+                    } else {
+                        ym1.map(|v| &v[i][..])
+                    };
+                    flop_nnz += crate::inner::run_split_range(
+                        ie,
+                        &r.a,
+                        rec,
+                        prev2,
+                        &prevs[p + k - 1][i],
+                        &mut cur[0][i],
+                        lo,
+                        hi,
+                        p + k,
+                        backend,
+                        comms[i].tracer(),
+                    );
                 }
-                // advance I_k from power p + k - 1 to p + k
-                let t0 = comms[i].tracer().now();
-                do_step(ys, &ym1, &mut flop_nnz, i, lo, hi, p + k, backend);
-                comms[i].tracer().closed_span(
-                    Span::DlbRemainder { round: p as u32, class: k as u32 },
-                    t0,
-                );
+            } else {
+                for k in 1..=(p_m - p) {
+                    let (lo, hi) = pl.class_ranges[k - 1];
+                    if lo == hi {
+                        continue;
+                    }
+                    // advance I_k from power p + k - 1 to p + k
+                    let t0 = comms[i].tracer().now();
+                    do_step(ys, &ym1, &mut flop_nnz, i, lo, hi, p + k, backend);
+                    comms[i].tracer().closed_span(
+                        Span::DlbRemainder { round: p as u32, class: k as u32 },
+                        t0,
+                    );
+                }
             }
         }
     }
@@ -496,6 +566,7 @@ pub fn dlb_rank(
     rec: Recurrence,
     comm: &mut dyn Communicator,
     backend: &mut dyn SpmvBackend,
+    inner: &mut InnerExec,
 ) -> RankRun {
     assert!(p_m >= 1);
     let mut ys: Vec<Vec<f64>> = Vec::with_capacity(p_m + 1);
@@ -523,25 +594,61 @@ pub fn dlb_rank(
         comm.post_halo_sends(r, 1, &ys[1]);
         await_post = false;
     }
-    for s in &pl.schedule {
-        let (lo, hi) = pl.ranges[s.group];
-        let p = s.power;
-        {
-            let (prevs, cur) = ys.split_at_mut(p);
-            let prev2: Option<&[f64]> = if p >= 2 { Some(&prevs[p - 2][..]) } else { x_m1 };
-            let t0 = comm.tracer().now();
-            flop_nnz +=
-                kernel_step(&r.a, rec, prev2, &prevs[p - 1], &mut cur[0], lo, hi, backend);
-            comm.tracer().closed_span(
-                Span::DlbWavefront { group: s.group as u32, power: p as u32 },
-                t0,
-            );
+    if inner.is_parallel() {
+        let xm1v = x_m1.map(SharedBuf::of);
+        let views: Vec<SharedBufMut> = ys.iter_mut().map(|v| SharedBufMut::of(v)).collect();
+        for batch in &pl.batches {
+            let work: Vec<InnerWork> = batch
+                .iter()
+                .map(|s| {
+                    let (lo, hi) = pl.ranges[s.group];
+                    let p = s.power;
+                    InnerWork::Range {
+                        a: MatPtr::of(&r.a),
+                        rec,
+                        prev2: if p >= 2 { Some(views[p - 2].read()) } else { xm1v },
+                        prev: views[p - 1].read(),
+                        cur: views[p],
+                        lo,
+                        hi,
+                        span: Span::InnerTask { group: s.group as u32, power: p as u32 },
+                    }
+                })
+                .collect();
+            flop_nnz += inner.run_batch(work, backend, comm.tracer());
+            if await_post {
+                for s in batch {
+                    if s.power == 1 && pl.ranges[s.group].0 < send_max_row {
+                        groups_left -= 1;
+                    }
+                }
+                if groups_left == 0 {
+                    comm.post_halo_sends(r, 1, &ys[1]);
+                    await_post = false;
+                }
+            }
         }
-        if await_post && p == 1 && lo < send_max_row {
-            groups_left -= 1;
-            if groups_left == 0 {
-                comm.post_halo_sends(r, 1, &ys[1]);
-                await_post = false;
+    } else {
+        for s in &pl.schedule {
+            let (lo, hi) = pl.ranges[s.group];
+            let p = s.power;
+            {
+                let (prevs, cur) = ys.split_at_mut(p);
+                let prev2: Option<&[f64]> = if p >= 2 { Some(&prevs[p - 2][..]) } else { x_m1 };
+                let t0 = comm.tracer().now();
+                flop_nnz +=
+                    kernel_step(&r.a, rec, prev2, &prevs[p - 1], &mut cur[0], lo, hi, backend);
+                comm.tracer().closed_span(
+                    Span::DlbWavefront { group: s.group as u32, power: p as u32 },
+                    t0,
+                );
+            }
+            if await_post && p == 1 && lo < send_max_row {
+                groups_left -= 1;
+                if groups_left == 0 {
+                    comm.post_halo_sends(r, 1, &ys[1]);
+                    await_post = false;
+                }
             }
         }
     }
@@ -560,21 +667,37 @@ pub fn dlb_rank(
                 let (prevs, cur) = ys.split_at_mut(p + k);
                 let prev2: Option<&[f64]> =
                     if p + k >= 2 { Some(&prevs[p + k - 2][..]) } else { x_m1 };
-                let t0 = comm.tracer().now();
-                flop_nnz += kernel_step(
-                    &r.a,
-                    rec,
-                    prev2,
-                    &prevs[p + k - 1],
-                    &mut cur[0],
-                    lo,
-                    hi,
-                    backend,
-                );
-                comm.tracer().closed_span(
-                    Span::DlbRemainder { round: p as u32, class: k as u32 },
-                    t0,
-                );
+                if inner.is_parallel() {
+                    flop_nnz += crate::inner::run_split_range(
+                        inner,
+                        &r.a,
+                        rec,
+                        prev2,
+                        &prevs[p + k - 1],
+                        &mut cur[0],
+                        lo,
+                        hi,
+                        p + k,
+                        backend,
+                        comm.tracer(),
+                    );
+                } else {
+                    let t0 = comm.tracer().now();
+                    flop_nnz += kernel_step(
+                        &r.a,
+                        rec,
+                        prev2,
+                        &prevs[p + k - 1],
+                        &mut cur[0],
+                        lo,
+                        hi,
+                        backend,
+                    );
+                    comm.tracer().closed_span(
+                        Span::DlbRemainder { round: p as u32, class: k as u32 },
+                        t0,
+                    );
+                }
             }
             if k == 1 && p + 1 < p_m {
                 // y_{p+1} is now final on every send row (deeper classes
@@ -588,7 +711,6 @@ pub fn dlb_rank(
     comm.tracer().counter("flop_nnz", flop_nnz as f64);
     RankRun { ys, flop_nnz }
 }
-
 
 /// One-shot plan + execute (see [`plan`]/[`execute`] to amortize setup).
 pub fn dlb_mpk(

@@ -12,6 +12,7 @@
 use crate::distsim::{merge_rank_stats, DistMatrix, RankLocal};
 use crate::exec::comm::{lockstep_halo_exchange, sim_comms, Communicator};
 use crate::exec::RankRun;
+use crate::inner::InnerExec;
 use crate::mpk::dlb::Recurrence;
 use crate::mpk::{kernel_step, MpkResult, SpmvBackend};
 use crate::trace::{Span, TraceSession};
@@ -27,7 +28,10 @@ pub fn trad_mpk(
 
 /// Single-rank TRAD kernel: `p_m` rounds of {halo exchange of `y_{p-1}`,
 /// full local SpMV}. `x0` is this rank's scattered input (halo tail
-/// ignored); round `p` uses message tag `p - 1`.
+/// ignored); round `p` uses message tag `p - 1`. A parallel `inner`
+/// executor row-splits each full sweep across its participants (all chunks
+/// share one power, so they are trivially independent).
+#[allow(clippy::too_many_arguments)]
 pub fn trad_rank(
     r: &RankLocal,
     x0: &[f64],
@@ -36,6 +40,7 @@ pub fn trad_rank(
     rec: Recurrence,
     comm: &mut dyn Communicator,
     backend: &mut dyn SpmvBackend,
+    inner: &mut InnerExec,
 ) -> RankRun {
     assert!(p_m >= 1);
     let nl = r.n_local();
@@ -49,9 +54,25 @@ pub fn trad_rank(
         let (prevs, cur) = ys.split_at_mut(p);
         comm.exchange(r, (p - 1) as u64, &mut prevs[p - 1]);
         let prev2: Option<&[f64]> = if p >= 2 { Some(&prevs[p - 2][..]) } else { x_m1 };
-        let t0 = comm.tracer().now();
-        flop_nnz += kernel_step(&r.a, rec, prev2, &prevs[p - 1], &mut cur[0], 0, nl, backend);
-        comm.tracer().closed_span(Span::TradSpmv { power: p as u32 }, t0);
+        if inner.is_parallel() {
+            flop_nnz += crate::inner::run_split_range(
+                inner,
+                &r.a,
+                rec,
+                prev2,
+                &prevs[p - 1],
+                &mut cur[0],
+                0,
+                nl,
+                p,
+                backend,
+                comm.tracer(),
+            );
+        } else {
+            let t0 = comm.tracer().now();
+            flop_nnz += kernel_step(&r.a, rec, prev2, &prevs[p - 1], &mut cur[0], 0, nl, backend);
+            comm.tracer().closed_span(Span::TradSpmv { power: p as u32 }, t0);
+        }
     }
     comm.tracer().counter("flop_nnz", flop_nnz as f64);
     RankRun { ys, flop_nnz }
@@ -68,12 +89,15 @@ pub fn trad_recurrence(
     rec: Recurrence,
     backend: &mut dyn SpmvBackend,
 ) -> MpkResult {
-    trad_recurrence_traced(dist, x, x_m1, p_m, rec, backend, None)
+    trad_recurrence_traced(dist, x, x_m1, p_m, rec, backend, None, None)
 }
 
 /// [`trad_recurrence`] with an optional [`TraceSession`]: each rank's
 /// [`SimComm`] gets an attached recorder, compute steps are wrapped in
-/// `trad.spmv(p)` spans, and the drained events are absorbed back.
+/// `trad.spmv(p)` spans, and the drained events are absorbed back. Ranks
+/// whose entry in `inners` is a parallel [`InnerExec`] row-split each sweep
+/// and emit `inner.task` spans instead.
+#[allow(clippy::too_many_arguments)]
 pub fn trad_recurrence_traced(
     dist: &DistMatrix,
     x: &[f64],
@@ -82,6 +106,7 @@ pub fn trad_recurrence_traced(
     rec: Recurrence,
     backend: &mut dyn SpmvBackend,
     mut trace: Option<&mut TraceSession>,
+    mut inners: Option<&mut [InnerExec]>,
 ) -> MpkResult {
     assert!(p_m >= 1);
     let nr = dist.n_ranks();
@@ -112,18 +137,35 @@ pub fn trad_recurrence_traced(
             } else {
                 ym1.as_ref().map(|v| &v[i][..])
             };
-            let t0 = comms[i].tracer().now();
-            flop_nnz += kernel_step(
-                &r.a,
-                rec,
-                prev2,
-                &prevs[p - 1][i],
-                &mut cur[0][i],
-                0,
-                r.n_local(),
-                backend,
-            );
-            comms[i].tracer().closed_span(Span::TradSpmv { power: p as u32 }, t0);
+            let par = inners.as_deref_mut().map(|v| &mut v[i]).filter(|e| e.is_parallel());
+            if let Some(ie) = par {
+                flop_nnz += crate::inner::run_split_range(
+                    ie,
+                    &r.a,
+                    rec,
+                    prev2,
+                    &prevs[p - 1][i],
+                    &mut cur[0][i],
+                    0,
+                    r.n_local(),
+                    p,
+                    backend,
+                    comms[i].tracer(),
+                );
+            } else {
+                let t0 = comms[i].tracer().now();
+                flop_nnz += kernel_step(
+                    &r.a,
+                    rec,
+                    prev2,
+                    &prevs[p - 1][i],
+                    &mut cur[0][i],
+                    0,
+                    r.n_local(),
+                    backend,
+                );
+                comms[i].tracer().closed_span(Span::TradSpmv { power: p as u32 }, t0);
+            }
         }
     }
 

@@ -11,4 +11,4 @@ pub mod grouping;
 pub mod schedule;
 
 pub use grouping::{group_levels, LevelGroups};
-pub use schedule::{wavefront, Step};
+pub use schedule::{parallel_batches, wavefront, Step};

@@ -94,6 +94,54 @@ pub fn wavefront_capped(
     steps
 }
 
+/// Group a wavefront schedule into dependency-safe parallel batches.
+///
+/// Steps are re-ordered into *skewed fronts* `f = node + 2·power`, where
+/// `node` is the super-node index (consecutive groups sharing one
+/// `level_span` — exactly the chain [`wavefront_capped`] traverses). Every
+/// dependency of `(n, p)` lives on nodes `{n−1, n, n+1}` at power `p − 1`,
+/// i.e. on fronts `f − 3`, `f − 2`, `f − 1` — all strictly earlier — so the
+/// steps of one front are mutually independent:
+///
+/// * equal powers ⇒ equal nodes ⇒ sub-blocks of one split level, which
+///   write disjoint row ranges and read only finished `p − 1` data;
+/// * powers differing by 1 ⇒ nodes differing by 2 ⇒ level spans ≥ 2 apart
+///   (node spans tile the level axis), so neither step's span intersects
+///   the other's ±1 dependency window;
+/// * powers differing by ≥ 2 ⇒ different write buffers, and the three-term
+///   recurrence reads only a step's own rows two powers down.
+///
+/// Concatenating the batches in order is therefore itself a valid schedule
+/// (checked against [`validate_schedule`] in the tests below), and each
+/// batch may run its steps concurrently — the within-rank parallelism used
+/// by [`crate::inner`].
+pub fn parallel_batches(steps: &[Step], groups: &LevelGroups) -> Vec<Vec<Step>> {
+    parallel_batches_spans(steps, &groups.level_span)
+}
+
+/// [`parallel_batches`] over a raw `level_span` table (one entry per group).
+pub fn parallel_batches_spans(steps: &[Step], level_span: &[(usize, usize)]) -> Vec<Vec<Step>> {
+    // Super-node index per group, by the same consecutive-equality scan as
+    // `wavefront_capped`.
+    let mut node_of = vec![0usize; level_span.len()];
+    let mut node = 0usize;
+    let mut g = 0usize;
+    while g < level_span.len() {
+        let span = level_span[g];
+        while g < level_span.len() && level_span[g] == span {
+            node_of[g] = node;
+            g += 1;
+        }
+        node += 1;
+    }
+    let mut fronts: std::collections::BTreeMap<usize, Vec<Step>> =
+        std::collections::BTreeMap::new();
+    for &s in steps {
+        fronts.entry(node_of[s.group] + 2 * s.power).or_default().push(s);
+    }
+    fronts.into_values().collect()
+}
+
 /// Validate that a step order never violates dependencies (test harness for
 /// the scheduler and for alternative orders).
 pub fn validate_schedule(
@@ -224,6 +272,89 @@ mod tests {
         let last = s.len() - 1;
         s.swap(0, last);
         assert!(validate_schedule(&g, nl, 2, &s).is_err());
+    }
+
+    /// The pairwise independence rule the batching must satisfy: two
+    /// same-batch steps may never touch each other's dependency window.
+    fn independent(a: Step, b: Step, spans: &[(usize, usize)]) -> bool {
+        if a.group == b.group {
+            return false;
+        }
+        match a.power.abs_diff(b.power) {
+            0 => true, // same write buffer, disjoint row ranges
+            1 => {
+                let (rd, wr) = if a.power > b.power { (a, b) } else { (b, a) };
+                let (rlo, rhi) = spans[rd.group];
+                let (wlo, whi) = spans[wr.group];
+                // the reader's ±1 level window vs the writer's span
+                whi < rlo || wlo > rhi
+            }
+            _ => true, // different buffers; prev-2 reads only own rows
+        }
+    }
+
+    fn assert_batches_independent(batches: &[Vec<Step>], spans: &[(usize, usize)]) {
+        for batch in batches {
+            for (i, &x) in batch.iter().enumerate() {
+                for &y in &batch[i + 1..] {
+                    assert!(independent(x, y, spans), "dependent steps {x:?} / {y:?} share a batch");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batches_flatten_to_a_valid_schedule() {
+        let (g, nl, s) = setup(24, 4, 64 << 10);
+        let b = parallel_batches(&s, &g);
+        let flat: Vec<Step> = b.iter().flatten().copied().collect();
+        assert_eq!(flat.len(), s.len());
+        let key = |st: &Step| (st.group, st.power);
+        let mut ss = s.clone();
+        let mut ff = flat.clone();
+        ss.sort_by_key(key);
+        ff.sort_by_key(key);
+        assert_eq!(ss, ff, "batching preserves the step multiset");
+        validate_schedule(&g, nl, 4, &flat).unwrap();
+    }
+
+    #[test]
+    fn same_batch_steps_never_touch_adjacent_levels() {
+        for (nx, p_m, cache) in [(24, 4, 64 << 10), (48, 3, 2 << 10), (16, 2, 32 << 10)] {
+            let (g, _nl, s) = setup(nx, p_m, cache);
+            assert_batches_independent(&parallel_batches(&s, &g), &g.level_span);
+        }
+    }
+
+    #[test]
+    fn figure2_fronts() {
+        // Fig. 2 skewed fronts f = level + 2p: the first five batches.
+        let a = gen::tridiag(10);
+        let (b, lv) = bfs_reorder(&a, 0);
+        let g = group_levels(&b, &lv, 5, 1, 50);
+        let s = wavefront(&g, 10, 5);
+        let batches = parallel_batches(&s, &g);
+        let pairs = |b: &[Step]| {
+            let mut v: Vec<(usize, usize)> = b.iter().map(|s| (s.group, s.power)).collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(pairs(&batches[0]), vec![(0, 1)]);
+        assert_eq!(pairs(&batches[1]), vec![(1, 1)]);
+        assert_eq!(pairs(&batches[2]), vec![(0, 2), (2, 1)]);
+        assert_eq!(pairs(&batches[3]), vec![(1, 2), (3, 1)]);
+        assert_eq!(pairs(&batches[4]), vec![(0, 3), (2, 2), (4, 1)]);
+    }
+
+    #[test]
+    fn capped_schedule_batches_preserve_steps() {
+        // DLB phase-2 style caps (boundary distance) on a split grouping.
+        let (g, nl, _s) = setup(48, 3, 2 << 10);
+        let caps: Vec<usize> = g.level_span.iter().map(|&(lo, _)| (lo + 1).min(3)).collect();
+        let s = wavefront_capped(&g, nl, 3, &caps);
+        let b = parallel_batches(&s, &g);
+        assert_eq!(b.iter().map(Vec::len).sum::<usize>(), s.len());
+        assert_batches_independent(&b, &g.level_span);
     }
 
     #[test]

@@ -16,12 +16,26 @@ use crate::util::json::Json;
 
 use super::{Event, EventKind, Span};
 
-/// Serialize per-rank event streams to Chrome Trace Event Format JSON.
+/// Serialize per-rank event streams to Chrome Trace Event Format JSON
+/// (rank `r` exports as tid `r * LANE_STRIDE`, lane 0).
 pub fn chrome_trace_json(per_rank: &[Vec<Event>]) -> String {
-    let mut out = String::with_capacity(64 * per_rank.iter().map(Vec::len).sum::<usize>() + 64);
+    let streams: Vec<(usize, &[Event])> = per_rank
+        .iter()
+        .enumerate()
+        .map(|(rank, ev)| (rank * super::LANE_STRIDE, ev.as_slice()))
+        .collect();
+    chrome_trace_streams(&streams)
+}
+
+/// Serialize `(tid, events)` streams to Chrome Trace Event Format JSON —
+/// the lane-aware form [`super::TraceSession`] uses to export a rank's main
+/// thread and its inner-pool workers as separate timeline rows.
+pub(crate) fn chrome_trace_streams(streams: &[(usize, &[Event])]) -> String {
+    let mut out =
+        String::with_capacity(64 * streams.iter().map(|(_, ev)| ev.len()).sum::<usize>() + 64);
     out.push_str("{\"traceEvents\":[");
     let mut first = true;
-    for (rank, events) in per_rank.iter().enumerate() {
+    for &(tid, events) in streams {
         // Re-derive each End's span from the begin stack so its "name"
         // matches the opener (viewers tolerate nameless E events; our
         // validator and tests are stricter).
@@ -31,16 +45,16 @@ pub fn chrome_trace_json(per_rank: &[Vec<Event>]) -> String {
             let entry = match ev.kind {
                 EventKind::Begin(span) => {
                     stack.push(span);
-                    event_json(&span, "B", ts_us, rank)
+                    event_json(&span, "B", ts_us, tid)
                 }
                 EventKind::End => {
-                    let span = stack.pop().unwrap_or_else(|| {
-                        panic!("rank {rank}: End event without an open span")
-                    });
-                    event_json(&span, "E", ts_us, rank)
+                    let span = stack
+                        .pop()
+                        .unwrap_or_else(|| panic!("tid {tid}: End event without an open span"));
+                    event_json(&span, "E", ts_us, tid)
                 }
                 EventKind::Counter { name, value } => format!(
-                    "{{\"name\":{},\"ph\":\"C\",\"ts\":{ts_us:.3},\"pid\":0,\"tid\":{rank},\
+                    "{{\"name\":{},\"ph\":\"C\",\"ts\":{ts_us:.3},\"pid\":0,\"tid\":{tid},\
                      \"args\":{{{}:{value}}}}}",
                     json_str(name),
                     json_str(name),
@@ -52,17 +66,17 @@ pub fn chrome_trace_json(per_rank: &[Vec<Event>]) -> String {
             first = false;
             out.push_str(&entry);
         }
-        assert!(stack.is_empty(), "rank {rank}: {} span(s) left open at export", stack.len());
+        assert!(stack.is_empty(), "tid {tid}: {} span(s) left open at export", stack.len());
     }
     out.push_str("],\"displayTimeUnit\":\"ms\"}");
     out
 }
 
-fn event_json(span: &Span, ph: &str, ts_us: f64, rank: usize) -> String {
+fn event_json(span: &Span, ph: &str, ts_us: f64, tid: usize) -> String {
     let args = span_args(span);
     format!(
         "{{\"name\":{},\"cat\":\"{}\",\"ph\":\"{ph}\",\"ts\":{ts_us:.3},\"pid\":0,\
-         \"tid\":{rank}{args}}}",
+         \"tid\":{tid}{args}}}",
         json_str(&span.name()),
         span.cat(),
     )
@@ -83,6 +97,9 @@ fn span_args(span: &Span) -> String {
         }
         Span::TradSpmv { power } | Span::CaPromote { power } => {
             format!(",\"args\":{{\"power\":{power}}}")
+        }
+        Span::InnerTask { group, power } => {
+            format!(",\"args\":{{\"group\":{group},\"power\":{power}}}")
         }
         Span::CaExchange | Span::JobDispatch | Span::JobPark => String::new(),
     }
@@ -109,7 +126,8 @@ fn json_str(s: &str) -> String {
 pub struct TraceCheck {
     /// Total events in `traceEvents`.
     pub events: usize,
-    /// Balanced begin/end span pairs per tid (rank), ascending tid.
+    /// Balanced begin/end span pairs per rank (tid / `LANE_STRIDE`, so a
+    /// rank's inner-pool lanes count toward the rank), ascending rank.
     pub spans_per_rank: BTreeMap<i64, usize>,
     /// Distinct span names seen.
     pub names: Vec<String>,
@@ -129,7 +147,8 @@ impl TraceCheck {
 /// sound: `traceEvents` exists, every event carries `ph`/`ts`/`tid`, and on
 /// every tid the `B`/`E` events balance like a bracket sequence (no `E`
 /// without an open `B`, nothing left open). Returns per-rank span counts
-/// and the distinct names on success.
+/// (ranks recovered as tid / `LANE_STRIDE`) and the distinct names on
+/// success.
 pub fn validate_chrome_trace(json: &str) -> Result<TraceCheck, String> {
     let doc = Json::parse(json).map_err(|e| format!("not valid JSON: {e}"))?;
     let events = doc
@@ -166,7 +185,8 @@ pub fn validate_chrome_trace(json: &str) -> Result<TraceCheck, String> {
                     return Err(format!("event {i}: \"E\" with no open span on tid {tid}"));
                 }
                 *d -= 1;
-                *check.spans_per_rank.entry(tid).or_insert(0) += 1;
+                let rank = tid.div_euclid(super::LANE_STRIDE as i64);
+                *check.spans_per_rank.entry(rank).or_insert(0) += 1;
             }
             "C" | "X" | "M" | "i" | "I" => {}
             other => return Err(format!("event {i}: unsupported phase {other:?}")),

@@ -130,7 +130,7 @@ impl Metrics {
     }
 }
 
-fn aggregate_rank(rank: usize, events: &[Event]) -> RankMetrics {
+pub(crate) fn aggregate_rank(rank: usize, events: &[Event]) -> RankMetrics {
     let mut rm = RankMetrics { rank, ..RankMetrics::default() };
     let mut recv_from: BTreeMap<usize, PeerFlow> = BTreeMap::new();
     let mut sent_to: BTreeMap<usize, PeerFlow> = BTreeMap::new();
@@ -147,7 +147,10 @@ fn aggregate_rank(rank: usize, events: &[Event]) -> RankMetrics {
                 let dur = ev.t_ns.saturating_sub(t0);
                 rm.spans += 1;
                 match span {
-                    Span::TradSpmv { .. } | Span::DlbRemainder { .. } | Span::CaPromote { .. } => {
+                    Span::TradSpmv { .. }
+                    | Span::DlbRemainder { .. }
+                    | Span::CaPromote { .. }
+                    | Span::InnerTask { .. } => {
                         rm.compute_ns += dur;
                     }
                     Span::DlbWavefront { group, .. } => {

@@ -18,7 +18,10 @@
 //!   against one shared epoch, with two exporters: Chrome Trace Event
 //!   Format JSON ([`TraceSession::chrome_trace_json`], loadable in
 //!   `chrome://tracing` or <https://ui.perfetto.dev>) and an aggregated
-//!   [`Metrics`] summary ([`TraceSession::metrics`]).
+//!   [`Metrics`] summary ([`TraceSession::metrics`]). Inner-pool worker
+//!   threads ([`crate::inner`]) contribute per-thread *lane* streams that
+//!   export as separate tids (`rank * LANE_STRIDE + lane`) and fold into
+//!   their rank's metric totals.
 //!
 //! Recorders travel inside the transports ([`crate::exec::comm::SimComm`],
 //! [`crate::exec::comm::ThreadComm`]) via [`crate::exec::Communicator::tracer`],
@@ -33,10 +36,17 @@ pub mod metrics;
 pub use chrome::{validate_chrome_trace, TraceCheck};
 pub use metrics::{Metrics, PeerFlow, RankMetrics};
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 /// Default per-rank event-buffer capacity (events, not bytes).
 pub const DEFAULT_EVENT_CAPACITY: usize = 1 << 14;
+
+/// Chrome-trace tid spacing between ranks: rank `r`'s main thread exports
+/// as tid `r * LANE_STRIDE`, and its inner-pool workers ([`crate::inner`])
+/// as tids `r * LANE_STRIDE + lane` for lane `1..LANE_STRIDE`. The
+/// validator maps tids back to ranks by integer division.
+pub const LANE_STRIDE: usize = 64;
 
 /// An instrumented region. Payload fields are small copies (peer ids,
 /// byte counts, round numbers) so events stay `Copy` and the recorder's
@@ -64,6 +74,9 @@ pub enum Span {
     JobDispatch,
     /// Rank-pool worker parked on its job channel.
     JobPark,
+    /// One inner-pool task ([`crate::inner`]): level-group `group` promoted
+    /// to `power` on some participant of a rank's inner thread pool.
+    InnerTask { group: u32, power: u32 },
 }
 
 impl Span {
@@ -81,6 +94,7 @@ impl Span {
             Self::CommWait { round } => format!("comm.wait(r{round})"),
             Self::JobDispatch => "job.dispatch".to_string(),
             Self::JobPark => "job.park".to_string(),
+            Self::InnerTask { group, power } => format!("inner.task(g{group},p{power})"),
         }
     }
 
@@ -90,7 +104,8 @@ impl Span {
             Self::TradSpmv { .. }
             | Self::DlbWavefront { .. }
             | Self::DlbRemainder { .. }
-            | Self::CaPromote { .. } => "compute",
+            | Self::CaPromote { .. }
+            | Self::InnerTask { .. } => "compute",
             Self::CaExchange | Self::CommSend { .. } | Self::CommRecv { .. }
             | Self::CommWait { .. } => "comm",
             Self::JobDispatch | Self::JobPark => "pool",
@@ -231,11 +246,13 @@ impl RankRecorder {
 }
 
 /// Engine-owned trace state: one epoch shared by every rank's recorder,
-/// plus the absorbed per-rank event streams.
+/// plus the absorbed per-rank event streams — the main (lane-0) stream of
+/// every rank, and any inner-pool lane streams keyed `(rank, lane)`.
 pub struct TraceSession {
     epoch: Instant,
     capacity: usize,
     per_rank: Vec<Vec<Event>>,
+    lanes: BTreeMap<(usize, usize), Vec<Event>>,
 }
 
 impl TraceSession {
@@ -244,7 +261,12 @@ impl TraceSession {
     }
 
     pub fn with_capacity(n_ranks: usize, capacity: usize) -> Self {
-        Self { epoch: Instant::now(), capacity, per_rank: vec![Vec::new(); n_ranks] }
+        Self {
+            epoch: Instant::now(),
+            capacity,
+            per_rank: vec![Vec::new(); n_ranks],
+            lanes: BTreeMap::new(),
+        }
     }
 
     pub fn n_ranks(&self) -> usize {
@@ -258,9 +280,17 @@ impl TraceSession {
         RankRecorder::enabled(rank, self.epoch, self.capacity)
     }
 
-    /// Append a drained event buffer to `rank`'s stream.
+    /// Append a drained event buffer to `rank`'s main (lane-0) stream.
     pub fn absorb(&mut self, rank: usize, events: Vec<Event>) {
         self.per_rank[rank].extend(events);
+    }
+
+    /// Append a drained inner-pool worker buffer to `rank`'s lane stream
+    /// `lane` (lanes start at 1; lane 0 is the rank's main thread).
+    pub fn absorb_lane(&mut self, rank: usize, lane: usize, events: Vec<Event>) {
+        assert!(rank < self.per_rank.len(), "lane events for out-of-range rank {rank}");
+        assert!((1..LANE_STRIDE).contains(&lane), "inner lane {lane} out of range");
+        self.lanes.entry((rank, lane)).or_default().extend(events);
     }
 
     pub fn events(&self, rank: usize) -> &[Event] {
@@ -268,18 +298,38 @@ impl TraceSession {
     }
 
     pub fn total_events(&self) -> usize {
-        self.per_rank.iter().map(Vec::len).sum()
+        self.per_rank.iter().map(Vec::len).sum::<usize>()
+            + self.lanes.values().map(Vec::len).sum::<usize>()
     }
 
-    /// Chrome Trace Event Format JSON (B/E phase events, ts in µs, one tid
-    /// per rank). Open in `chrome://tracing` or <https://ui.perfetto.dev>.
+    /// Chrome Trace Event Format JSON (B/E phase events, ts in µs, tid
+    /// `rank * LANE_STRIDE + lane`). Open in `chrome://tracing` or
+    /// <https://ui.perfetto.dev>.
     pub fn chrome_trace_json(&self) -> String {
-        chrome::chrome_trace_json(&self.per_rank)
+        let mut streams: Vec<(usize, &[Event])> = self
+            .per_rank
+            .iter()
+            .enumerate()
+            .map(|(rank, ev)| (rank * LANE_STRIDE, ev.as_slice()))
+            .collect();
+        for (&(rank, lane), ev) in &self.lanes {
+            streams.push((rank * LANE_STRIDE + lane, ev.as_slice()));
+        }
+        chrome::chrome_trace_streams(&streams)
     }
 
-    /// Aggregate the absorbed streams into per-rank + total [`Metrics`].
+    /// Aggregate the absorbed streams into per-rank + total [`Metrics`] —
+    /// inner-pool lane streams fold into their owning rank's totals.
     pub fn metrics(&self) -> Metrics {
-        Metrics::from_events(&self.per_rank)
+        let mut m = Metrics::from_events(&self.per_rank);
+        for (&(rank, _lane), events) in &self.lanes {
+            let lm = metrics::aggregate_rank(rank, events);
+            m.total_compute_ns += lm.compute_ns;
+            let rm = &mut m.per_rank[rank];
+            rm.compute_ns += lm.compute_ns;
+            rm.spans += lm.spans;
+        }
+        m
     }
 }
 
@@ -334,5 +384,28 @@ mod tests {
         assert_eq!(Span::JobPark.cat(), "pool");
         assert_eq!(Span::CaExchange.cat(), "comm");
         assert_eq!(Span::CaPromote { power: 1 }.cat(), "compute");
+        assert_eq!(Span::InnerTask { group: 2, power: 3 }.name(), "inner.task(g2,p3)");
+        assert_eq!(Span::InnerTask { group: 2, power: 3 }.cat(), "compute");
+    }
+
+    #[test]
+    fn lane_streams_export_and_fold_into_rank_metrics() {
+        let mut s = TraceSession::with_capacity(2, 16);
+        let mut main = s.recorder(1);
+        let t0 = main.now();
+        main.closed_span(Span::InnerTask { group: 0, power: 1 }, t0);
+        s.absorb(1, main.take_events());
+        let mut lane = s.recorder(1);
+        let t0 = lane.now();
+        lane.closed_span(Span::InnerTask { group: 1, power: 1 }, t0);
+        s.absorb_lane(1, 1, lane.take_events());
+        assert_eq!(s.total_events(), 4);
+        let m = s.metrics();
+        assert_eq!(m.per_rank.len(), 2);
+        assert_eq!(m.per_rank[1].spans, 2, "lane spans fold into the owning rank");
+        let check = chrome::validate_chrome_trace(&s.chrome_trace_json()).unwrap();
+        assert_eq!(check.n_ranks(), 1, "main + lane tids map to one rank");
+        assert_eq!(check.spans_per_rank[&1], 2);
+        assert!(check.has_name_prefix("inner.task"));
     }
 }

@@ -48,6 +48,7 @@ fn propagator_threads_pool_matches_sim_bitwise_over_three_steps() {
             executor,
             backend: BackendSpec::Native,
             trace: false,
+            inner_threads: 1,
         },
     };
     let mut sim = ChebyshevPropagator::new(&h, &dist, mk(ExecutorKind::Sim)).unwrap();
@@ -170,6 +171,7 @@ fn pcg_routes_all_spmvs_through_engine_backend() {
             Box::new(CountingBackend { calls: calls_in_factory.clone() })
         })),
         trace: false,
+        inner_threads: 1,
     };
     let mut pre = ChebyshevPreconditioner::new(&dist, lmin, lmax, 4, &cfg).unwrap();
     let b = vec![1.0; a.n_rows()];

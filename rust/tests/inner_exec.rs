@@ -1,0 +1,170 @@
+//! Acceptance tests for the within-rank inner executor (`crate::inner`):
+//!
+//! * `inner_threads(k)` is **bitwise invisible to results** — for every
+//!   variant × executor × `p_m` × recurrence, `k ∈ {2, 4}` produces the
+//!   same powers, merged [`dlb_mpk::distsim::CommStats`], and flop count
+//!   as the serial `k = 1` engine;
+//! * one `inner_threads(2)` engine is reusable across ≥ 3 sweeps (the
+//!   inner pools persist with the rank pool — no per-sweep spawning);
+//! * tracing with inner threads stays invisible, exports a valid chrome
+//!   trace whose `inner.task(g,p)` spans land on per-worker lanes, and
+//!   keeps the metrics flow totals equal to the CommStats.
+
+use dlb_mpk::distsim::DistMatrix;
+use dlb_mpk::engine::{MpkEngine, SweepResult, Variant};
+use dlb_mpk::exec::ExecutorKind;
+use dlb_mpk::matrix::gen;
+use dlb_mpk::mpk::dlb::{DlbOptions, Recurrence};
+use dlb_mpk::partition::{partition, Method};
+use dlb_mpk::trace::validate_chrome_trace;
+
+fn dist(np: usize) -> DistMatrix {
+    let a = gen::stencil_2d_5pt(14, 12);
+    let part = partition(&a, np, Method::Block);
+    DistMatrix::build(&a, &part)
+}
+
+fn input(n: usize) -> Vec<f64> {
+    (0..n).map(|i| ((i % 17) as f64 - 8.0) / 9.0).collect()
+}
+
+fn variants() -> Vec<Variant> {
+    vec![
+        Variant::Trad,
+        Variant::Ca,
+        Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50 }),
+    ]
+}
+
+fn build(d: &DistMatrix, v: Variant, ex: ExecutorKind, p_m: usize, k: usize) -> MpkEngine {
+    MpkEngine::builder(d)
+        .p_m(p_m)
+        .variant(v)
+        .executor(ex)
+        .inner_threads(k)
+        .build()
+        .expect("engine builds")
+}
+
+fn assert_bitwise(a: &SweepResult, b: &SweepResult, what: &str) {
+    assert_eq!(a.powers.len(), b.powers.len(), "{what}: power count");
+    for (p, (pa, pb)) in a.powers.iter().zip(&b.powers).enumerate() {
+        for (i, (u, v)) in pa.iter().zip(pb).enumerate() {
+            assert!(
+                u.to_bits() == v.to_bits(),
+                "{what}: powers[{p}][{i}] differs bitwise: {u:?} vs {v:?}"
+            );
+        }
+    }
+    assert_eq!(a.comm, b.comm, "{what}: comm stats");
+    assert_eq!(a.flop_nnz, b.flop_nnz, "{what}: flop count");
+}
+
+/// Acceptance: `inner_threads(k)` never changes a sweep — bitwise-equal
+/// powers, comm stats, and flops against the serial engine for every
+/// variant on both executors, at `p_m ∈ {1, 4}`.
+#[test]
+fn inner_threads_are_bitwise_equal_to_serial() {
+    let d = dist(3);
+    let x = input(d.n_global);
+    for v in variants() {
+        for ex in [ExecutorKind::Sim, ExecutorKind::Threads { n: 0 }] {
+            for p_m in [1usize, 4] {
+                let base = build(&d, v, ex, p_m, 1).sweep(&x, None, Recurrence::Power);
+                for k in [2usize, 4] {
+                    let mut eng = build(&d, v, ex, p_m, k);
+                    assert_eq!(eng.inner_threads(), k);
+                    let got = eng.sweep(&x, None, Recurrence::Power);
+                    let what = format!("{} on {ex}, p_m={p_m}, k={k}", v.label());
+                    assert_bitwise(&base, &got, &what);
+                }
+            }
+        }
+    }
+}
+
+/// The three-term Chebyshev recurrence (prev2 feeds every row update)
+/// splits just as cleanly: same-batch tasks never read a power that a
+/// concurrent task writes.
+#[test]
+fn inner_threads_match_serial_on_chebyshev_recurrence() {
+    let d = dist(2);
+    let x = input(d.n_global);
+    let xm1 = input(d.n_global).iter().map(|v| v * 0.5).collect::<Vec<_>>();
+    for v in [Variant::Trad, Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50 })] {
+        for ex in [ExecutorKind::Sim, ExecutorKind::Threads { n: 0 }] {
+            let base = build(&d, v, ex, 4, 1).sweep(&x, Some(&xm1), Recurrence::Chebyshev);
+            let got = build(&d, v, ex, 4, 2).sweep(&x, Some(&xm1), Recurrence::Chebyshev);
+            assert_bitwise(&base, &got, &format!("chebyshev {} on {ex}", v.label()));
+        }
+    }
+}
+
+/// One hierarchical engine serves many sweeps: the rank pool and its inner
+/// pools are spawned once, and every repeat of the same input is identical
+/// (per-sweep stats never accumulate).
+#[test]
+fn hierarchical_engine_is_reusable_across_sweeps() {
+    let d = dist(2);
+    let x = input(d.n_global);
+    let mut serial = build(
+        &d,
+        Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50 }),
+        ExecutorKind::Threads { n: 0 },
+        4,
+        1,
+    );
+    let base = serial.sweep(&x, None, Recurrence::Power);
+    let mut eng = build(
+        &d,
+        Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50 }),
+        ExecutorKind::Threads { n: 0 },
+        4,
+        2,
+    );
+    for s in 1..=3 {
+        let got = eng.sweep(&x, None, Recurrence::Power);
+        assert_bitwise(&base, &got, &format!("sweep {s}"));
+        let pool = eng.pool_stats().expect("threads executor keeps a pool");
+        assert_eq!(pool.threads, d.n_ranks(), "sweep {s}: rank pool never re-spawns");
+        assert_eq!(pool.sweeps, s, "sweep {s}: same pool serves every sweep");
+    }
+}
+
+/// Tracing a hierarchical sweep stays invisible to results, and the
+/// export carries the inner-task spans on per-worker lanes that map back
+/// to their owning rank.
+#[test]
+fn traced_inner_threads_stay_invisible_and_export_lanes() {
+    let d = dist(2);
+    let x = input(d.n_global);
+    for (v, ex) in [
+        (Variant::Trad, ExecutorKind::Sim),
+        (Variant::Ca, ExecutorKind::Threads { n: 0 }),
+        (
+            Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50 }),
+            ExecutorKind::Threads { n: 0 },
+        ),
+    ] {
+        let plain = build(&d, v, ex, 4, 2).sweep(&x, None, Recurrence::Power);
+        let mut eng = MpkEngine::builder(&d)
+            .p_m(4)
+            .variant(v)
+            .executor(ex)
+            .inner_threads(2)
+            .trace(true)
+            .build()
+            .expect("engine builds");
+        let traced = eng.sweep(&x, None, Recurrence::Power);
+        let what = format!("{} on {ex}", v.label());
+        assert_bitwise(&plain, &traced, &what);
+        let json = eng.chrome_trace_json().expect("tracing enabled");
+        let check =
+            validate_chrome_trace(&json).unwrap_or_else(|e| panic!("{what}: invalid trace: {e}"));
+        assert_eq!(check.n_ranks(), d.n_ranks(), "{what}: every rank contributes spans");
+        assert!(check.has_name_prefix("inner.task"), "{what}: names {:?}", check.names);
+        let m = eng.metrics().expect("tracing enabled");
+        assert_eq!(m.total_bytes, traced.comm.bytes, "{what}: received bytes");
+        assert_eq!(m.total_messages, traced.comm.messages, "{what}: received messages");
+    }
+}
