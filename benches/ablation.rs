@@ -28,7 +28,7 @@ fn main() {
         let p = partition(&a, 8, m);
         let st = PartitionStats::compute(&a, &p);
         let d = DistMatrix::build(&a, &p);
-        let o_dlb = overheads::dlb_overhead(&d, 4, &DlbOptions { cache_bytes: 8 << 20, s_m: 50 });
+        let o_dlb = overheads::dlb_overhead(&d, 4, &DlbOptions { cache_bytes: 8 << 20, s_m: 50, async_remainder: false });
         println!(
             "{:<8} {:>10} {:>9.3} {:>9.3} {:>9.4} {:>9.4}",
             format!("{m:?}").chars().take(8).collect::<String>(),
@@ -68,7 +68,7 @@ fn main() {
     let pre = dlb::preprocess(&d);
     let t_pre = t0.elapsed().as_secs_f64();
     let t1 = std::time::Instant::now();
-    let _p = dlb::plan_from_pre(&pre, 8, &DlbOptions { cache_bytes: 8 << 20, s_m: 50 });
+    let _p = dlb::plan_from_pre(&pre, 8, &DlbOptions { cache_bytes: 8 << 20, s_m: 50, async_remainder: false });
     let t_plan = t1.elapsed().as_secs_f64();
     println!("preprocess (BFS+permute): {t_pre:.3}s; plan_from_pre (group+schedule): {t_plan:.4}s");
 }

@@ -18,6 +18,13 @@
 //! (`ranks × inner ∈ {4×1, 2×2, 1×4}`): fewer ranks shrink halo traffic
 //! but push more of the parallelism into the wavefront task batches.
 //!
+//! The async-remainder section runs DLB under threads(4) with the phase-3
+//! pipeline off vs on (`DlbOptions::async_remainder`), asserts the powers
+//! are bitwise identical, and compares the trace-derived phase-3 wait
+//! totals — async drops the intermediate round barriers, so its wait must
+//! be strictly lower. Written to the `"async_remainder"` key of
+//! `BENCH_fig10.json`.
+//!
 //! Run: `cargo bench --bench fig10_strong_scaling`
 
 use dlb_mpk::distsim::costmodel::halo_traffic;
@@ -78,7 +85,7 @@ fn main() {
             for &np in &ranks {
                 let part = partition(a, np, Method::RecursiveBisect);
                 let dist = DistMatrix::build(a, &part);
-                let opts = DlbOptions { cache_bytes: 8 << 20, s_m: 50 };
+                let opts = DlbOptions { cache_bytes: 8 << 20, s_m: 50, async_remainder: false };
                 let plan = dlb::plan(&dist, p_m, &opts);
                 let o_dlb = overheads::dlb_overhead_from_plan(&plan);
                 let x = vec![1.0; a.n_rows()];
@@ -116,7 +123,8 @@ fn main() {
         &mut recs,
     );
     hierarchical(&matrices, warmup, reps, &mut recs);
-    match write_json(&recs) {
+    let async_recs = async_remainder(&matrices, warmup, reps);
+    match write_json(&recs, &async_recs) {
         Ok(path) => println!("\nwrote {} measurement rows to {path}", recs.len()),
         Err(e) => eprintln!("\nfailed to write BENCH_fig10.json: {e}"),
     }
@@ -146,7 +154,7 @@ fn measured_parallel(
         for &np in &ranks {
             let part = partition(a, np, Method::RecursiveBisect);
             let dist = DistMatrix::build(a, &part);
-            let opts = DlbOptions { cache_bytes: 8 << 20, s_m: 50 };
+            let opts = DlbOptions { cache_bytes: 8 << 20, s_m: 50, async_remainder: false };
             let plan = dlb::plan(&dist, p_m, &opts);
 
             // spawn-per-sweep: every rep pays n_ranks thread spawns + joins
@@ -226,7 +234,7 @@ fn hierarchical(
         for (np, inner) in shapes {
             let part = partition(a, np, Method::RecursiveBisect);
             let dist = DistMatrix::build(a, &part);
-            let opts = DlbOptions { cache_bytes: 8 << 20, s_m: 50 };
+            let opts = DlbOptions { cache_bytes: 8 << 20, s_m: 50, async_remainder: false };
             let mut eng = MpkEngine::builder(&dist)
                 .p_m(p_m)
                 .variant(Variant::Dlb(opts))
@@ -258,9 +266,97 @@ fn hierarchical(
     println!(" intra-rank task batches, 4x1 is the flat-MPI baseline)");
 }
 
+/// One sync-vs-async row of the async-remainder section.
+struct AsyncRec {
+    matrix: String,
+    sync_s: f64,
+    async_s: f64,
+    sync_wait_ns: u64,
+    async_wait_ns: u64,
+}
+
+/// Total traced `comm.wait` time spent in phase-3 round barriers. Each
+/// sweep closes exactly `p_m` rounds (phase 1, then `p_m − 1` remainder
+/// rounds), so across the accumulated trace the rounds with cumulative
+/// index `% p_m != 0` are precisely the remainder ones.
+fn phase3_wait_ns(m: &dlb_mpk::trace::Metrics, p_m: usize) -> u64 {
+    m.per_rank
+        .iter()
+        .flat_map(|r| &r.wait_by_round)
+        .filter(|(round, _)| *round as usize % p_m != 0)
+        .map(|&(_, ns)| ns)
+        .sum()
+}
+
+/// Sync vs async DLB phase-3 remainder under threads(4): wall-clock plus
+/// the trace-derived phase-3 wait totals. The async pipeline replaces the
+/// `p_m − 1` remainder barriers per sweep with one (the final round), so
+/// its phase-3 wait must be strictly lower; the powers stay bitwise equal.
+fn async_remainder(
+    matrices: &[(&str, dlb_mpk::matrix::CsrMatrix)],
+    warmup: usize,
+    reps: usize,
+) -> Vec<AsyncRec> {
+    let p_m = 4;
+    let np = 4;
+    let mut out = Vec::new();
+    for (name, a) in matrices {
+        println!("\n# Async remainder pipelining, threads({np}), {name}, p_m = {p_m}");
+        println!(
+            "{:>7} {:>12} {:>14} {:>12}",
+            "mode", "median_s", "p3_wait_ms", "wait ratio"
+        );
+        let x = vec![1.0; a.n_rows()];
+        let part = partition(a, np, Method::RecursiveBisect);
+        let dist = DistMatrix::build(a, &part);
+        let mut run = |on: bool| {
+            let opts = DlbOptions { cache_bytes: 8 << 20, s_m: 50, async_remainder: on };
+            let mut eng = MpkEngine::builder(&dist)
+                .p_m(p_m)
+                .variant(Variant::Dlb(opts))
+                .executor(ExecutorKind::Threads { n: 0 })
+                .trace(true)
+                .build()
+                .expect("engine builds");
+            let mut res = None;
+            let t = median_time_warm(warmup, reps, || {
+                res = Some(eng.sweep(&x, None, Recurrence::Power));
+            });
+            let m = eng.metrics().expect("tracing is on");
+            // per-sweep average so warmup/rep counts don't skew the ratio
+            let wait = phase3_wait_ns(&m, p_m) / eng.sweeps_run().max(1) as u64;
+            (t.median_s, wait, res.unwrap().powers)
+        };
+        let (sync_s, sync_wait, sync_pow) = run(false);
+        let (async_s, async_wait, async_pow) = run(true);
+        assert_eq!(sync_pow, async_pow, "{name}: async remainder must be bitwise neutral");
+        assert!(
+            async_wait < sync_wait,
+            "{name}: async phase-3 wait ({async_wait} ns) must undercut sync ({sync_wait} ns)"
+        );
+        let ratio = async_wait as f64 / sync_wait.max(1) as f64;
+        println!("{:>7} {sync_s:>12.4} {:>14.3} {:>12}", "sync", sync_wait as f64 / 1e6, "-");
+        println!(
+            "{:>7} {async_s:>12.4} {:>14.3} {ratio:>11.2}x",
+            "async",
+            async_wait as f64 / 1e6
+        );
+        out.push(AsyncRec {
+            matrix: name.to_string(),
+            sync_s,
+            async_s,
+            sync_wait_ns: sync_wait,
+            async_wait_ns: async_wait,
+        });
+    }
+    println!("\n(phase-3 wait = traced comm.wait in remainder rounds, per sweep; async");
+    println!(" keeps only the final-round barrier, overlapping the rest with compute)");
+    out
+}
+
 /// Emit the measured rows as `BENCH_fig10.json` so the perf trajectory is
 /// machine-comparable across PRs.
-fn write_json(recs: &[Rec]) -> std::io::Result<&'static str> {
+fn write_json(recs: &[Rec], async_recs: &[AsyncRec]) -> std::io::Result<&'static str> {
     let mut s = String::from("{\n  \"bench\": \"fig10\",\n  \"p_m\": 4,\n  \"results\": [\n");
     for (i, r) in recs.iter().enumerate() {
         let sep = if i + 1 < recs.len() { "," } else { "" };
@@ -268,6 +364,20 @@ fn write_json(recs: &[Rec]) -> std::io::Result<&'static str> {
             "    {{\"matrix\": \"{}\", \"variant\": \"{}\", \"ranks\": {}, \"inner\": {}, \
              \"mode\": \"{}\", \"median_s\": {}}}{sep}\n",
             r.matrix, r.variant, r.ranks, r.inner, r.mode, r.median_s
+        ));
+    }
+    s.push_str("  ],\n  \"async_remainder\": [\n");
+    for (i, r) in async_recs.iter().enumerate() {
+        let sep = if i + 1 < async_recs.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"matrix\": \"{}\", \"ranks\": 4, \"sync_s\": {}, \"async_s\": {}, \
+             \"sync_p3_wait_ns\": {}, \"async_p3_wait_ns\": {}, \"wait_ratio\": {}}}{sep}\n",
+            r.matrix,
+            r.sync_s,
+            r.async_s,
+            r.sync_wait_ns,
+            r.async_wait_ns,
+            r.async_wait_ns as f64 / r.sync_wait_ns.max(1) as f64
         ));
     }
     s.push_str("  ]\n}\n");

@@ -37,13 +37,13 @@ fn main() {
         let part = partition(&h, *d, Method::RecursiveBisect);
         let dist = DistMatrix::build(&h, &part);
         let o_mpi = dist.mpi_overhead();
-        let o_dlb = overheads::dlb_overhead(&dist, p_m, &DlbOptions { cache_bytes: 8 << 20, s_m: 50 });
+        let o_dlb = overheads::dlb_overhead(&dist, p_m, &DlbOptions { cache_bytes: 8 << 20, s_m: 50, async_remainder: false });
         let psi0 = wave_packet(cfg, base_l as f64 / 6.0, [FRAC_PI_2, 0.0, 0.0]);
 
         let mut times = [0.0f64; 2];
         let variants = [
             Variant::Trad,
-            Variant::Dlb(DlbOptions { cache_bytes: 8 << 20, s_m: 50 }),
+            Variant::Dlb(DlbOptions { cache_bytes: 8 << 20, s_m: 50, async_remainder: false }),
         ];
         for (i, variant) in variants.into_iter().enumerate() {
             let ccfg = ChebyshevConfig {

@@ -45,7 +45,7 @@ fn main() {
     for &p in &p_values {
         print!("{:>4}", p);
         for &c in &c_values_mib {
-            let opts = DlbOptions { cache_bytes: c << 20, s_m: 50 };
+            let opts = DlbOptions { cache_bytes: c << 20, s_m: 50, async_remainder: false };
             let plan = dlb::plan_from_pre(&pre, p, &opts);
             let mut flops = 0usize;
             let t = median_time(reps, || {

@@ -94,7 +94,7 @@ fn main() {
         let mut best_t = tt;
         for &p in &p_candidates {
             for &c in &c_candidates_mib {
-                let opts = DlbOptions { cache_bytes: c << 20, s_m: 50 };
+                let opts = DlbOptions { cache_bytes: c << 20, s_m: 50, async_remainder: false };
                 let plan = dlb::plan_from_pre(&pre, p, &opts);
                 let mut flops = 0usize;
                 let t = median_time_warm(warmup, reps, || {

@@ -59,7 +59,7 @@ fn main() {
     // --- DLB plan construction (preprocessing cost, amortized in practice)
     println!("\n# kernel: DLB plan construction");
     let t = median_time(reps.min(3), || {
-        let _ = dlb::plan(&dist, 6, &DlbOptions { cache_bytes: 8 << 20, s_m: 50 });
+        let _ = dlb::plan(&dist, 6, &DlbOptions { cache_bytes: 8 << 20, s_m: 50, async_remainder: false });
     });
     println!(
         "plan({} rows, 8 ranks, p_m=6): {:.3}s ({:.1}x one TRAD p_m=6 run)",

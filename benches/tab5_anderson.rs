@@ -36,7 +36,7 @@ fn main() {
         let dist = DistMatrix::build(&a, &part);
         let mut eng = MpkEngine::builder(&dist)
             .p_m(p_m)
-            .variant(Variant::Dlb(DlbOptions { cache_bytes: 8 << 20, s_m: 50 }))
+            .variant(Variant::Dlb(DlbOptions { cache_bytes: 8 << 20, s_m: 50, async_remainder: false }))
             .executor(ExecutorKind::Threads { n: 0 })
             .build()
             .expect("engine builds");

@@ -80,7 +80,7 @@ fn main() -> anyhow::Result<()> {
     let mut times = Vec::new();
     let variants = [
         ("trad", Variant::Trad),
-        ("dlb", Variant::Dlb(DlbOptions { cache_bytes: 24 << 20, s_m: 50 })),
+        ("dlb", Variant::Dlb(DlbOptions { cache_bytes: 24 << 20, s_m: 50, async_remainder: false })),
     ];
     for (name, variant) in variants {
         let ccfg = ChebyshevConfig {
@@ -121,7 +121,7 @@ fn propagate_native(cfg: &AndersonConfig, dt: f64, steps: usize) -> anyhow::Resu
         dt,
         p_m: 6,
         engine: EngineConfig {
-            variant: Variant::Dlb(DlbOptions { cache_bytes: 8 << 20, s_m: 50 }),
+            variant: Variant::Dlb(DlbOptions { cache_bytes: 8 << 20, s_m: 50, async_remainder: false }),
             ..EngineConfig::default()
         },
     };

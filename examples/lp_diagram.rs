@@ -96,7 +96,7 @@ fn fig4_variant_comparison() {
         cp.overheads.extra_halo, cp.overheads.redundant_rows
     );
 
-    let plan = dlb::plan(&d, p_m, &DlbOptions { cache_bytes: 1, s_m: 50 });
+    let plan = dlb::plan(&d, p_m, &DlbOptions { cache_bytes: 1, s_m: 50, async_remainder: false });
     println!("\n(c) DLB-MPK: TRAD's halos, no redundancy; per-rank phase-2 schedule:");
     for (i, rp) in plan.ranks.iter().enumerate() {
         let steps: Vec<String> = rp

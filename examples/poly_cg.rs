@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     let lmin = 4.0 * ((std::f64::consts::PI / (2.0 * (n + 1.0))).sin().powi(2)) * 2.0;
     let lmax = a.inf_norm();
     let engine_cfg = EngineConfig {
-        variant: Variant::Dlb(DlbOptions { cache_bytes: 4 << 20, s_m: 50 }),
+        variant: Variant::Dlb(DlbOptions { cache_bytes: 4 << 20, s_m: 50, async_remainder: false }),
         ..EngineConfig::default()
     };
 

@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
     // every sweep after that reuses it.
     let x = vec![1.0; a.n_rows()];
     let p_m = 4;
-    let dlb_opts = DlbOptions { cache_bytes: 1 << 20, s_m: 50 };
+    let dlb_opts = DlbOptions { cache_bytes: 1 << 20, s_m: 50, async_remainder: false };
     let mut trad_eng = MpkEngine::builder(&dist).p_m(p_m).variant(Variant::Trad).build()?;
     let mut dlb_eng =
         MpkEngine::builder(&dist).p_m(p_m).variant(Variant::Dlb(dlb_opts)).build()?;

@@ -40,7 +40,7 @@ fn strong_scaling(fast: bool) -> anyhow::Result<()> {
         "ranks", "O_MPI", "O_DLB", "T_model_s", "eff", "comm_us"
     );
     let model = CommCostModel::default();
-    let opts = DlbOptions { cache_bytes: 8 << 20, s_m: 50 };
+    let opts = DlbOptions { cache_bytes: 8 << 20, s_m: 50, async_remainder: false };
     let p_m = 4;
     let mut t1 = 0.0f64;
     for np in [1usize, 2, 4, 8, 16] {
@@ -94,7 +94,7 @@ fn weak_scaling(fast: bool) -> anyhow::Result<()> {
         let dist = DistMatrix::build(&h, &part);
         let x = vec![1.0; h.n_rows()];
         let p_m = 6;
-        let opts = DlbOptions { cache_bytes: 8 << 20, s_m: 50 };
+        let opts = DlbOptions { cache_bytes: 8 << 20, s_m: 50, async_remainder: false };
         let plan = dlb::plan(&dist, p_m, &opts);
         let reps = if fast { 1 } else { 3 };
         let tt = median_time(reps, || {

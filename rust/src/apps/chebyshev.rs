@@ -272,7 +272,7 @@ mod tests {
     }
 
     fn dlb_small() -> Variant {
-        Variant::Dlb(DlbOptions { cache_bytes: 64 << 10, s_m: 50 })
+        Variant::Dlb(DlbOptions { cache_bytes: 64 << 10, s_m: 50, async_remainder: false })
     }
 
     #[test]
@@ -316,7 +316,7 @@ mod tests {
         let ccfg = ChebyshevConfig {
             dt: 0.4,
             p_m: 4,
-            engine: engine_cfg(Variant::Dlb(DlbOptions { cache_bytes: 32 << 10, s_m: 50 })),
+            engine: engine_cfg(Variant::Dlb(DlbOptions { cache_bytes: 32 << 10, s_m: 50, async_remainder: false })),
         };
         let mut prop = ChebyshevPropagator::new(&h, &dist, ccfg).unwrap();
         let tail = prop.n_terms % prop.cfg.p_m;
@@ -351,7 +351,7 @@ mod tests {
         let mk = |dt: f64| ChebyshevConfig {
             dt,
             p_m: 3,
-            engine: engine_cfg(Variant::Dlb(DlbOptions { cache_bytes: 1 << 20, s_m: 50 })),
+            engine: engine_cfg(Variant::Dlb(DlbOptions { cache_bytes: 1 << 20, s_m: 50, async_remainder: false })),
         };
         let mut full = ChebyshevPropagator::new(&h, &dist, mk(0.6)).unwrap();
         let mut half = ChebyshevPropagator::new(&h, &dist, mk(0.3)).unwrap();

@@ -190,7 +190,7 @@ mod tests {
 
     fn dlb_cfg(cache_bytes: usize) -> EngineConfig {
         EngineConfig {
-            variant: Variant::Dlb(DlbOptions { cache_bytes, s_m: 50 }),
+            variant: Variant::Dlb(DlbOptions { cache_bytes, s_m: 50, async_remainder: false }),
             ..EngineConfig::default()
         }
     }

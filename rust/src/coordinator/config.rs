@@ -65,6 +65,11 @@ pub struct RunConfig {
     /// kernels, `k >= 2` row-splits each rank's compute across `k`
     /// participants with bitwise-identical results.
     pub inner_threads: usize,
+    /// Pipeline DLB's phase-3 remainder rounds: complete halo receives in
+    /// arrival order and overlap the per-segment class-`I_1` advances with
+    /// the messages still in flight (bitwise identical; see
+    /// [`crate::mpk::dlb::DlbOptions::async_remainder`]).
+    pub async_remainder: bool,
 }
 
 impl Default for RunConfig {
@@ -80,6 +85,7 @@ impl Default for RunConfig {
             validate: true,
             executor: ExecutorKind::Sim,
             inner_threads: 1,
+            async_remainder: false,
         }
     }
 }

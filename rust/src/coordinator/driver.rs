@@ -42,7 +42,11 @@ pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
         .map(|i| 1.0 + ((i * 2654435761) % 1000) as f64 / 1000.0)
         .collect();
 
-    let opts = DlbOptions { cache_bytes: cfg.cache_bytes, s_m: cfg.s_m };
+    let opts = DlbOptions {
+        cache_bytes: cfg.cache_bytes,
+        s_m: cfg.s_m,
+        async_remainder: cfg.async_remainder,
+    };
     let mk_cfg = |variant: Variant| EngineConfig {
         variant,
         executor: cfg.executor,
@@ -51,7 +55,11 @@ pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
         inner_threads: cfg.inner_threads,
     };
     let mut trad_eng = MpkEngine::from_shared(dist.clone(), cfg.p_m, &mk_cfg(Variant::Trad))?;
-    let mut dlb_eng = MpkEngine::from_shared(dist.clone(), cfg.p_m, &mk_cfg(Variant::Dlb(opts)))?;
+    // Overlap accounting replays spans, so the DLB engine traces whenever
+    // the pipelined remainder is on (the `ovlp_ms` report column).
+    let mut dlb_cfg = mk_cfg(Variant::Dlb(opts));
+    dlb_cfg.trace = cfg.async_remainder;
+    let mut dlb_eng = MpkEngine::from_shared(dist.clone(), cfg.p_m, &dlb_cfg)?;
     let o_dlb = dlb_eng.dlb_overhead().expect("DLB engine has a primary plan");
     let o_mpi = dist.mpi_overhead();
 
@@ -73,9 +81,18 @@ pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
     } else {
         None
     };
+    // Per-sweep average: the trace accumulates over every sweep run so far.
+    let dlb_overlap_ms = dlb_eng.metrics().map(|m| {
+        m.total_overlap_ns as f64 / 1e6 / dlb_eng.sweeps_run().max(1) as f64
+    });
 
     let label = exec_label(cfg);
-    let mk = |name: &str, res: &MpkResult, t: crate::perf::Timed, o_dlb: f64, validated| Report {
+    let mk = |name: &str,
+              res: &MpkResult,
+              t: crate::perf::Timed,
+              o_dlb: f64,
+              validated,
+              overlap_ms| Report {
         variant: format!("{name}@{label}"),
         n_rows: a.n_rows(),
         nnz: a.nnz(),
@@ -85,14 +102,15 @@ pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
         time: t,
         gflops: roofline::gflops(res.flop_nnz, t.median_s),
         comm: res.comm.clone(),
+        overlap_ms,
         o_mpi,
         o_dlb,
         validated,
     };
 
     let reports = vec![
-        mk("trad", &trad_res, t_trad, 0.0, None),
-        mk("dlb", &dlb_res, t_dlb, o_dlb, validated),
+        mk("trad", &trad_res, t_trad, 0.0, None, None),
+        mk("dlb", &dlb_res, t_dlb, o_dlb, validated, dlb_overlap_ms),
     ];
     Ok(RunOutput { reports, trad: trad_res, dlb: dlb_res, dlb_overhead: o_dlb })
 }
@@ -130,6 +148,7 @@ pub fn run_ca(cfg: &RunConfig) -> Result<(Report, crate::mpk::CaOverheads)> {
         time: t,
         gflops: roofline::gflops(res.flop_nnz, t.median_s),
         comm: res.comm.clone(),
+        overlap_ms: None,
         o_mpi: dist.mpi_overhead(),
         o_dlb: 0.0,
         validated: None,
@@ -238,6 +257,27 @@ mod tests {
         assert_eq!(par.dlb.powers, ser.dlb.powers);
         assert_eq!(par.trad.comm, ser.trad.comm);
         assert_eq!(par.dlb.comm, ser.dlb.comm);
+    }
+
+    #[test]
+    fn pipeline_async_remainder_validates_and_reports_overlap() {
+        let cfg = RunConfig {
+            matrix: MatrixSpec::Stencil2D { nx: 20, ny: 20 },
+            n_ranks: 3,
+            p_m: 3,
+            reps: 1,
+            cache_bytes: 32 << 10,
+            async_remainder: true,
+            ..Default::default()
+        };
+        let out = run(&cfg).unwrap();
+        assert_eq!(out.reports[1].validated, Some(true));
+        assert!(out.reports[0].overlap_ms.is_none(), "TRAD has no overlap accounting");
+        assert!(out.reports[1].overlap_ms.is_some(), "async DLB run is traced");
+        let sync = run(&RunConfig { async_remainder: false, ..cfg }).unwrap();
+        assert_eq!(out.dlb.powers, sync.dlb.powers, "pipelining must be bitwise neutral");
+        assert_eq!(out.dlb.comm, sync.dlb.comm);
+        assert!(sync.reports[1].overlap_ms.is_none(), "sync run is untraced");
     }
 
     #[test]

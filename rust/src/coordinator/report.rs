@@ -14,6 +14,11 @@ pub struct Report {
     pub time: Timed,
     pub gflops: f64,
     pub comm: CommStats,
+    /// Per-sweep compute time overlapped with in-flight receives
+    /// (trace-derived; `None` when tracing was off or the variant has no
+    /// overlap accounting). Read next to `wait_ms`: overlap is the part of
+    /// the wait the async remainder hid behind compute.
+    pub overlap_ms: Option<f64>,
     pub o_mpi: f64,
     pub o_dlb: f64,
     pub validated: Option<bool>,
@@ -22,15 +27,16 @@ pub struct Report {
 impl Report {
     pub fn print_header() {
         println!(
-            "{:<10} {:>9} {:>10} {:>8} {:>5} {:>4} {:>9} {:>8} {:>9} {:>8} {:>9} {:>7} {:>7} {:>5}",
+            "{:<10} {:>9} {:>10} {:>8} {:>5} {:>4} {:>9} {:>8} {:>9} {:>8} {:>9} {:>8} {:>7} \
+             {:>7} {:>5}",
             "variant", "rows", "nnz", "MiB", "ranks", "p_m", "median_s", "Gflop/s", "comm_MiB",
-            "maxmsg_B", "wait_ms", "O_MPI", "O_DLB", "ok"
+            "maxmsg_B", "wait_ms", "ovlp_ms", "O_MPI", "O_DLB", "ok"
         );
     }
 
     pub fn print_row(&self) {
         println!(
-            "{:<10} {:>9} {:>10} {:>8} {:>5} {:>4} {:>9.4} {:>8.2} {:>9.2} {:>8} {:>9.3} \
+            "{:<10} {:>9} {:>10} {:>8} {:>5} {:>4} {:>9.4} {:>8.2} {:>9.2} {:>8} {:>9.3} {:>8} \
              {:>7.4} {:>7.4} {:>5}",
             self.variant,
             self.n_rows,
@@ -43,6 +49,10 @@ impl Report {
             self.comm.bytes as f64 / (1 << 20) as f64,
             self.comm.max_message_bytes,
             self.comm.total_wait_ns() as f64 / 1e6,
+            match self.overlap_ms {
+                Some(v) => format!("{v:.3}"),
+                None => "-".to_string(),
+            },
             self.o_mpi,
             self.o_dlb,
             match self.validated {

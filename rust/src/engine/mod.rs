@@ -205,6 +205,15 @@ impl<'a> MpkEngineBuilder<'a> {
         self
     }
 
+    /// Pipeline DLB's phase-3 remainder (see
+    /// [`DlbOptions::async_remainder`]). No-op for non-DLB variants.
+    pub fn async_remainder(mut self, on: bool) -> Self {
+        if let Variant::Dlb(ref mut opts) = self.cfg.variant {
+            opts.async_remainder = on;
+        }
+        self
+    }
+
     pub fn build(self) -> anyhow::Result<MpkEngine> {
         MpkEngine::from_config(self.dist, self.p_m, &self.cfg)
     }
@@ -719,7 +728,7 @@ mod tests {
         assert_eq!(want.comm, got.comm);
         assert_eq!(want.flop_nnz, got.flop_nnz);
 
-        let opts = DlbOptions { cache_bytes: 8 << 10, s_m: 50 };
+        let opts = DlbOptions { cache_bytes: 8 << 10, s_m: 50, async_remainder: false };
         let plan = dlb::plan(&d, p_m, &opts);
         let want = dlb::execute(&plan, &x, &mut NativeBackend);
         let mut eng =
@@ -742,7 +751,7 @@ mod tests {
     fn tail_plans_are_cached() {
         let d = dist(2);
         let x = vec![1.0; d.n_global];
-        let opts = DlbOptions { cache_bytes: 8 << 10, s_m: 50 };
+        let opts = DlbOptions { cache_bytes: 8 << 10, s_m: 50, async_remainder: false };
         let mut eng =
             MpkEngine::builder(&d).p_m(4).variant(Variant::Dlb(opts)).build().unwrap();
         assert_eq!(eng.plans_built(), 1);
@@ -754,6 +763,37 @@ mod tests {
         eng.sweep_len(2, &x, None, Recurrence::Power);
         assert_eq!(eng.plans_built(), 2, "repeated tail sweeps hit the cache");
         assert_eq!(eng.sweeps_run(), 4);
+    }
+
+    #[test]
+    fn async_remainder_builder_knob_is_bitwise_neutral() {
+        let d = dist(3);
+        let x: Vec<f64> = (0..d.n_global).map(|i| ((i % 11) as f64 - 5.0) / 3.0).collect();
+        let opts = DlbOptions { cache_bytes: 8 << 10, s_m: 50, async_remainder: false };
+        let mut sync_eng =
+            MpkEngine::builder(&d).p_m(3).variant(Variant::Dlb(opts)).build().unwrap();
+        let want = sync_eng.sweep(&x, None, Recurrence::Power);
+        for exec in [ExecutorKind::Sim, ExecutorKind::Threads { n: 0 }] {
+            let mut eng = MpkEngine::builder(&d)
+                .p_m(3)
+                .variant(Variant::Dlb(opts))
+                .async_remainder(true)
+                .executor(exec)
+                .build()
+                .unwrap();
+            let got = eng.sweep(&x, None, Recurrence::Power);
+            assert_eq!(want.powers, got.powers, "async remainder must be bitwise neutral");
+            assert_eq!(want.comm, got.comm, "volume/round counters must match lockstep");
+            assert_eq!(want.flop_nnz, got.flop_nnz);
+        }
+        // the knob is a no-op on non-DLB variants
+        let mut eng = MpkEngine::builder(&d)
+            .p_m(2)
+            .variant(Variant::Trad)
+            .async_remainder(true)
+            .build()
+            .unwrap();
+        eng.sweep(&x, None, Recurrence::Power);
     }
 
     #[test]

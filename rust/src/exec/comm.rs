@@ -3,16 +3,22 @@
 //! and [`ThreadComm`] (real `std::sync::mpsc` channels, one OS thread per
 //! rank).
 //!
-//! The trait mirrors the nonblocking MPI triple the paper's kernels are
+//! The trait mirrors the nonblocking MPI set the paper's kernels are
 //! written against: `MPI_Isend` ([`Communicator::send`]), a matching
 //! tagged receive ([`Communicator::recv`], buffering out-of-order
-//! arrivals like an eager-protocol unexpected-message queue), and a round
-//! close ([`Communicator::end_round`], `MPI_Waitall` + barrier). On top of
-//! the primitives sit provided halo helpers that follow each rank's
-//! [`SendPlan`]/[`RecvPlan`]: [`Communicator::post_halo_sends`] and
-//! [`Communicator::wait_halo`]. Kernels that overlap communication with
-//! computation (DLB phase 3) call the post/wait halves separately; bulk-
-//! synchronous kernels use [`Communicator::exchange`].
+//! arrivals like an eager-protocol unexpected-message queue), nonblocking
+//! completion (`MPI_Test` → [`Communicator::try_recv`], `MPI_Waitany` →
+//! [`Communicator::recv_any`]), and a round close
+//! ([`Communicator::end_round`], `MPI_Waitall` + barrier;
+//! [`Communicator::advance_round`] is the barrier-free variant the async
+//! remainder uses on intermediate rounds). On top of the primitives sit
+//! provided halo helpers that follow each rank's [`SendPlan`]/[`RecvPlan`]:
+//! [`Communicator::post_halo_sends`] and [`Communicator::wait_halo`].
+//! Kernels that overlap communication with computation (DLB phase 3) call
+//! the post/wait halves separately — or, with
+//! `DlbOptions::async_remainder`, complete individual peer segments in
+//! arrival order via [`Communicator::recv_any`]; bulk-synchronous kernels
+//! use [`Communicator::exchange`].
 //!
 //! ## Accounting
 //!
@@ -50,10 +56,49 @@ pub trait Communicator: Send {
     /// Blocking tagged receive; arrivals with other tags are buffered.
     fn recv(&mut self, from: usize, tag: u64) -> Vec<f64>;
 
+    /// Nonblocking tagged receive (`MPI_Test` on a posted `Irecv`):
+    /// complete `(from, tag)` if it has already arrived, else return
+    /// `None` immediately. A miss records a `comm.probe` span; a hit
+    /// accounts exactly like [`Communicator::recv`].
+    ///
+    /// Default: no nonblocking support — always a miss. Callers must
+    /// therefore fall back to [`Communicator::recv_any`]/`recv`, which
+    /// stay correct (just fully blocking) on such transports.
+    fn try_recv(&mut self, _from: usize, _tag: u64) -> Option<Vec<f64>> {
+        None
+    }
+
+    /// Block until any one of the posted receives `reqs` = `[(from, tag)]`
+    /// completes (`MPI_Waitany`); returns `(index into reqs, payload)`.
+    /// Ties are broken by lowest request index so deterministic transports
+    /// complete in a reproducible order.
+    ///
+    /// Default: degrade to a blocking receive of `reqs[0]` — correct but
+    /// without out-of-order completion.
+    fn recv_any(&mut self, reqs: &[(usize, u64)]) -> (usize, Vec<f64>) {
+        assert!(!reqs.is_empty(), "recv_any on an empty request set");
+        let (from, tag) = reqs[0];
+        (0, self.recv(from, tag))
+    }
+
     /// Close one bulk-synchronous exchange round: bumps `rounds` and, on
     /// threaded transports, synchronizes ranks and asserts the round
     /// counters agree.
     fn end_round(&mut self);
+
+    /// Count a round **without** a rendezvous: bumps `rounds` and appends a
+    /// zero to the wait series so per-round stats stay aligned with the
+    /// sync path, but no rank blocks. The async remainder uses this on
+    /// intermediate rounds — every message was already matched exactly
+    /// once by `(from, tag)`, so the barrier only costs wait time there;
+    /// the sweep's **final** round must still call
+    /// [`Communicator::end_round`] to preserve the cross-sweep tag-reuse
+    /// invariant (see `engine::pool`).
+    ///
+    /// Default: a full [`Communicator::end_round`] (safe, just slower).
+    fn advance_round(&mut self) {
+        self.end_round();
+    }
 
     /// Per-rank accumulated statistics.
     fn stats(&self) -> &CommStats;
@@ -187,12 +232,56 @@ impl Communicator for SimComm {
         payload
     }
 
+    fn try_recv(&mut self, from: usize, tag: u64) -> Option<Vec<f64>> {
+        let t0 = self.tracer.now();
+        match self.mailbox.lock().unwrap().remove(&(from, self.rank, tag)) {
+            Some(payload) => {
+                account_recv(&mut self.stats, payload.len());
+                self.tracer.closed_span(
+                    Span::CommRecv { from: from as u32, bytes: span_bytes(payload.len()) },
+                    t0,
+                );
+                Some(payload)
+            }
+            None => {
+                self.tracer.closed_span(Span::CommProbe { from: from as u32 }, t0);
+                None
+            }
+        }
+    }
+
+    fn recv_any(&mut self, reqs: &[(usize, u64)]) -> (usize, Vec<f64>) {
+        assert!(!reqs.is_empty(), "recv_any on an empty request set");
+        let t0 = self.tracer.now();
+        let mut mb = self.mailbox.lock().unwrap();
+        for (i, &(from, tag)) in reqs.iter().enumerate() {
+            if let Some(payload) = mb.remove(&(from, self.rank, tag)) {
+                drop(mb);
+                account_recv(&mut self.stats, payload.len());
+                self.tracer.closed_span(
+                    Span::CommRecv { from: from as u32, bytes: span_bytes(payload.len()) },
+                    t0,
+                );
+                return (i, payload);
+            }
+        }
+        panic!(
+            "SimComm: none of {} posted receives available on rank {}; \
+             the sequential executor must post all sends of a round first",
+            reqs.len(),
+            self.rank
+        );
+    }
+
     fn end_round(&mut self) {
         let t0 = self.tracer.now();
         self.stats.rounds += 1;
         self.stats.wait_ns.push(0); // sequential lockstep: nobody waits
         self.tracer.closed_span(Span::CommWait { round: (self.stats.rounds - 1) as u32 }, t0);
     }
+
+    // `advance_round` keeps the trait default (= `end_round`): the
+    // sequential transport never blocks in a round close anyway.
 
     fn stats(&self) -> &CommStats {
         &self.stats
@@ -412,6 +501,53 @@ impl Communicator for ThreadComm {
         payload
     }
 
+    fn try_recv(&mut self, from: usize, tag: u64) -> Option<Vec<f64>> {
+        let t0 = self.tracer.now();
+        // Drain everything already delivered into the unexpected queue,
+        // then complete from it — never blocks.
+        while let Ok((f, t, p)) = self.rx.try_recv() {
+            assert_ne!(t, POISON_TAG, "peer rank {f} died mid-run");
+            let prev = self.pending.insert((f, t), p);
+            assert!(prev.is_none(), "duplicate message {f} -> {} tag {t}", self.rank);
+        }
+        match self.pending.remove(&(from, tag)) {
+            Some(payload) => {
+                account_recv(&mut self.stats, payload.len());
+                self.tracer.closed_span(
+                    Span::CommRecv { from: from as u32, bytes: span_bytes(payload.len()) },
+                    t0,
+                );
+                Some(payload)
+            }
+            None => {
+                self.tracer.closed_span(Span::CommProbe { from: from as u32 }, t0);
+                None
+            }
+        }
+    }
+
+    fn recv_any(&mut self, reqs: &[(usize, u64)]) -> (usize, Vec<f64>) {
+        assert!(!reqs.is_empty(), "recv_any on an empty request set");
+        let t0 = self.tracer.now();
+        let (idx, payload) = loop {
+            // Unexpected queue first, lowest request index winning ties —
+            // the same deterministic tiebreak SimComm uses.
+            if let Some(i) = reqs.iter().position(|key| self.pending.contains_key(key)) {
+                break (i, self.pending.remove(&reqs[i]).unwrap());
+            }
+            let (f, t, p) = self.rx.recv().expect("all peer ranks hung up");
+            assert_ne!(t, POISON_TAG, "peer rank {f} died mid-run");
+            let prev = self.pending.insert((f, t), p);
+            assert!(prev.is_none(), "duplicate message {f} -> {} tag {t}", self.rank);
+        };
+        account_recv(&mut self.stats, payload.len());
+        self.tracer.closed_span(
+            Span::CommRecv { from: reqs[idx].0 as u32, bytes: span_bytes(payload.len()) },
+            t0,
+        );
+        (idx, payload)
+    }
+
     fn end_round(&mut self) {
         // Barrier wait is measured unconditionally (CommStats carries it
         // even with tracing off) — one extra Instant read per round is
@@ -421,6 +557,19 @@ impl Communicator for ThreadComm {
         self.stats.rounds += 1;
         self.barrier.wait(self.stats.rounds);
         self.stats.wait_ns.push(wall0.elapsed().as_nanos() as u64);
+        self.tracer.closed_span(Span::CommWait { round: (self.stats.rounds - 1) as u32 }, t0);
+    }
+
+    fn advance_round(&mut self) {
+        // Barrier-free round close for the async remainder: every message
+        // of the round was matched exactly once by `(from, tag)` before
+        // this call, so the rendezvous would only add wait time. The round
+        // counter still advances in lockstep logically — all ranks execute
+        // the same sequence — which keeps the final `end_round` barrier's
+        // counter assertion valid.
+        let t0 = self.tracer.now();
+        self.stats.rounds += 1;
+        self.stats.wait_ns.push(0);
         self.tracer.closed_span(Span::CommWait { round: (self.stats.rounds - 1) as u32 }, t0);
     }
 
@@ -515,6 +664,52 @@ mod tests {
         assert_eq!(c1.stats().messages, 2);
         assert_eq!(c1.stats().bytes, 16);
         assert_eq!(c1.stats().rounds, 2);
+    }
+
+    #[test]
+    fn sim_try_recv_and_recv_any_are_deterministic() {
+        let mut comms = sim_comms(3);
+        assert!(comms[0].try_recv(1, 4).is_none(), "nothing posted yet");
+        assert_eq!(comms[0].stats().messages, 0, "a miss must not account");
+        comms[1].send(0, 4, vec![1.5]);
+        comms[2].send(0, 4, vec![2.5]);
+        // Both available -> lowest request index completes first.
+        let (i, p) = comms[0].recv_any(&[(1, 4), (2, 4)]);
+        assert_eq!((i, p), (0, vec![1.5]));
+        let (i, p) = comms[0].recv_any(&[(1, 4), (2, 4)]);
+        assert_eq!((i, p), (1, vec![2.5]));
+        assert_eq!(comms[0].stats().messages, 2);
+        assert_eq!(comms[0].stats().bytes, 16);
+    }
+
+    #[test]
+    fn thread_try_recv_and_recv_any_complete_out_of_order() {
+        let mut comms = thread_comms(2);
+        let mut c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        assert!(c1.try_recv(0, 7).is_none(), "nothing posted yet");
+        assert_eq!(c1.stats().messages, 0, "a miss must not account");
+        c0.send(1, 7, vec![7.0]);
+        c0.send(1, 3, vec![3.0]);
+        // Complete against posting order: tag 3 first.
+        assert_eq!(c1.try_recv(0, 3), Some(vec![3.0]));
+        // recv_any skips the never-posted request and completes the
+        // buffered one without blocking.
+        let (i, p) = c1.recv_any(&[(0, 9), (0, 7)]);
+        assert_eq!((i, p), (1, vec![7.0]));
+        assert_eq!(c1.stats().messages, 2);
+        assert_eq!(c1.stats().bytes, 16);
+    }
+
+    #[test]
+    fn advance_round_counts_without_rendezvous() {
+        // One endpoint of a 2-rank set advancing alone: a barrier would
+        // deadlock here, advance_round must not.
+        let mut comms = thread_comms(2);
+        let mut c0 = comms.remove(0);
+        c0.advance_round();
+        assert_eq!(c0.stats().rounds, 1);
+        assert_eq!(c0.stats().wait_ns, vec![0]);
     }
 
     #[test]

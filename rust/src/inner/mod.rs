@@ -400,6 +400,49 @@ pub(crate) fn run_split_range(
     inner.run_batch(work, backend, tracer)
 }
 
+/// Split a list of contiguous runs — one landed halo segment's class rows,
+/// see [`crate::mpk::dlb`]'s async remainder — into per-participant chunks
+/// and run them as a single batch: the "batch per landed segment" seam.
+/// All chunks share `power` and write disjoint rows, so the batch is
+/// dependency-free; a single run produces exactly the tasks
+/// [`run_split_range`] would.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_split_runs(
+    inner: &mut InnerExec,
+    a: &CsrMatrix,
+    rec: Recurrence,
+    prev2: Option<&[f64]>,
+    prev: &[f64],
+    cur: &mut [f64],
+    runs: &[(usize, usize)],
+    power: usize,
+    backend: &mut dyn SpmvBackend,
+    tracer: &mut RankRecorder,
+) -> usize {
+    let prev2 = prev2.map(SharedBuf::of);
+    let prevv = SharedBuf::of(prev);
+    let curv = SharedBufMut::of(cur);
+    let k = inner.participants();
+    let mut group = 0u32;
+    let mut work: Vec<InnerWork> = Vec::new();
+    for &(lo, hi) in runs {
+        for (clo, chi) in split_range(lo, hi, k) {
+            work.push(InnerWork::Range {
+                a: MatPtr::of(a),
+                rec,
+                prev2,
+                prev: prevv,
+                cur: curv,
+                lo: clo,
+                hi: chi,
+                span: Span::InnerTask { group, power: power as u32 },
+            });
+            group += 1;
+        }
+    }
+    inner.run_batch(work, backend, tracer)
+}
+
 /// One CA promotion round as a single batch: the owned row list plus every
 /// still-live external class, each split into per-participant chunks. All
 /// tasks write power `p` at disjoint rows and read only power `p − 1`, so
@@ -502,6 +545,43 @@ mod tests {
                 assert_eq!(u.to_bits(), v.to_bits(), "k={k} differs from serial");
             }
             assert!(inner.harvest().iter().all(|(_, ev)| ev.is_empty()), "untraced: no events");
+        }
+    }
+
+    #[test]
+    fn run_split_runs_is_bitwise_equal_to_per_run_serial() {
+        let a = gen::stencil_2d_5pt(12, 12);
+        let n = a.n_rows();
+        let x: Vec<f64> = (0..n).map(|i| ((i % 13) as f64 - 6.0) / 7.0).collect();
+        // Non-contiguous runs, as a landed halo segment's class rows look.
+        let runs = [(3usize, 9usize), (17, 18), (40, 71)];
+        let mut be = NativeBackend;
+        let mut serial = vec![0.0; n];
+        let mut nnz_serial = 0;
+        for &(lo, hi) in &runs {
+            nnz_serial +=
+                kernel_step(&a, Recurrence::Power, None, &x, &mut serial, lo, hi, &mut be);
+        }
+        for k in [2usize, 3] {
+            let mut inner = InnerExec::new(k, 0, &BackendSpec::Native, None);
+            let mut cur = vec![0.0; n];
+            let mut tracer = RankRecorder::disabled();
+            let nnz = run_split_runs(
+                &mut inner,
+                &a,
+                Recurrence::Power,
+                None,
+                &x,
+                &mut cur,
+                &runs,
+                1,
+                &mut be,
+                &mut tracer,
+            );
+            assert_eq!(nnz, nnz_serial);
+            for (u, v) in serial.iter().zip(&cur) {
+                assert_eq!(u.to_bits(), v.to_bits(), "k={k} differs from serial");
+            }
         }
     }
 

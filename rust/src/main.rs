@@ -86,6 +86,10 @@ fn include_str_usage() -> &'static str {
                         participants, bitwise identical to serial)\n\
        --reps R         timing repetitions (default 5)\n\
        --no-validate    skip TRAD/DLB equivalence check\n\
+       --async-remainder  pipeline DLB's remainder rounds: complete halo\n\
+                        receives in arrival order and advance each peer\n\
+                        segment's rows while the rest is still in flight\n\
+                        (bitwise identical to the lockstep path)\n\
        --trace-out PATH (anderson) record per-rank spans, write a Chrome\n\
                         Trace Event JSON (chrome://tracing / Perfetto) and\n\
                         print a metrics summary\n"
@@ -103,7 +107,7 @@ impl Flags {
                 bail!("unexpected argument {a:?}");
             }
             let key = a.trim_start_matches("--").to_string();
-            let boolean = matches!(key.as_str(), "no-validate" | "fast");
+            let boolean = matches!(key.as_str(), "no-validate" | "fast" | "async-remainder");
             if boolean {
                 m.insert(key, "true".into());
                 i += 1;
@@ -198,6 +202,7 @@ fn config(flags: &Flags) -> Result<RunConfig> {
         validate: !flags.has("no-validate"),
         executor,
         inner_threads: flags.usize("inner-threads", 1)?.max(1),
+        async_remainder: flags.has("async-remainder"),
     })
 }
 
@@ -293,6 +298,7 @@ fn cmd_anderson(flags: &Flags) -> Result<()> {
             variant: Variant::Dlb(DlbOptions {
                 cache_bytes: flags.usize("cache-mib", 16)? << 20,
                 s_m: 50,
+                async_remainder: flags.has("async-remainder"),
             }),
             executor,
             backend: BackendSpec::Native,
@@ -334,18 +340,22 @@ fn cmd_anderson(flags: &Flags) -> Result<()> {
         let m = prop.engine_mut().metrics().expect("tracing was enabled for --trace-out");
         println!("trace: {path} ({} ranks)", m.per_rank.len());
         println!(
-            "trace totals: compute {:.3} ms | wait {:.3} ms | {} msgs | {} bytes",
+            "trace totals: compute {:.3} ms | wait {:.3} ms | overlap {:.3} ms | {} msgs | \
+             {} bytes",
             m.total_compute_ns as f64 / 1e6,
             m.total_wait_ns as f64 / 1e6,
+            m.total_overlap_ns as f64 / 1e6,
             m.total_messages,
             m.total_bytes,
         );
         for r in &m.per_rank {
             println!(
-                "  rank {}: compute {:.3} ms | wait {:.3} ms | recv {} msgs / {} bytes",
+                "  rank {}: compute {:.3} ms | wait {:.3} ms | overlap {:.3} ms | recv {} msgs \
+                 / {} bytes",
                 r.rank,
                 r.compute_ns as f64 / 1e6,
                 r.wait_ns as f64 / 1e6,
+                r.overlap_ns as f64 / 1e6,
                 r.messages,
                 r.bytes,
             );

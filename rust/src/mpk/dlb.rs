@@ -13,6 +13,29 @@
 //!    `y_p`, promote every unfinished class by one power}. Round `p`
 //!    advances `I_k` from power `p + k − 1` to `p + k` for `k ≤ p_m − p`.
 //!
+//! ## Pipelined remainder (`DlbOptions::async_remainder`)
+//!
+//! In round `p` only class `I_1` (exactly the boundary rows) reads the
+//! incoming halo of `y_p`; every deeper class reads already-final local
+//! data. The async remainder exploits this: the plan splits `I_1` by which
+//! peer's halo segment feeds each row ([`DlbRankPlan::seg_rows`] /
+//! [`DlbRankPlan::multi_rows`]), receives complete in **arrival order**
+//! ([`Communicator::recv_any`] over the round's posted receives, with a
+//! nonblocking `try_recv` sweep first), and a segment's exclusive rows
+//! advance the moment that segment lands — while the other messages are
+//! still in flight. Multi-peer rows and the deeper classes follow once the
+//! round's halo is complete, and intermediate rounds close without a
+//! barrier ([`Communicator::advance_round`]; the sweep's final round still
+//! barriers to keep cross-sweep tag reuse safe). Every row is advanced
+//! exactly once from fully-final inputs by the same per-row kernel, so the
+//! result is bitwise identical to the lockstep path in any completion
+//! order.
+//!
+//! Tag scheme: phase 1 uses tag `0`; remainder round `p` uses tag `p` for
+//! every peer, and a receive is identified by the pair `(from, p)` — one
+//! message per (round, peer-segment), matched out of order by the
+//! transport's unexpected-message queue.
+//!
 //! Level structure: local vertices are labeled by graph distance from the
 //! halo (multi-source BFS seeded at halo slots), so distance class `I_k`
 //! *is* BFS level `k − 1`, and the distance shells continue inward through
@@ -30,7 +53,7 @@ use crate::inner::{InnerExec, InnerWork, MatPtr, SharedBuf, SharedBufMut};
 use crate::mpk::{kernel_step, MpkResult, SpmvBackend};
 use crate::race::grouping::group_levels_solo_prefix;
 use crate::race::schedule::{parallel_batches, wavefront_capped, Step};
-use crate::trace::{Span, TraceSession};
+use crate::trace::{RankRecorder, Span, TraceSession};
 
 /// Tuning knobs mirroring the paper's RACE parameters (§6.2).
 #[derive(Clone, Copy, Debug)]
@@ -39,11 +62,17 @@ pub struct DlbOptions {
     pub cache_bytes: usize,
     /// Maximum recursion stage `s_m` (bulky-level split cap).
     pub s_m: usize,
+    /// Pipeline phase 3: complete each remainder round's receives in
+    /// arrival order and advance the class-`I_1` rows fed by a peer's halo
+    /// segment the moment that segment lands, closing intermediate rounds
+    /// without a barrier (see the module docs). Bitwise identical to the
+    /// lockstep path; off by default.
+    pub async_remainder: bool,
 }
 
 impl Default for DlbOptions {
     fn default() -> Self {
-        Self { cache_bytes: 32 << 20, s_m: 50 }
+        Self { cache_bytes: 32 << 20, s_m: 50, async_remainder: false }
     }
 }
 
@@ -71,6 +100,18 @@ pub struct DlbRankPlan {
     pub class_ranges: Vec<(usize, usize)>,
     /// |M| — bulk size (for Eq. 2 overhead).
     pub bulk_rows: usize,
+    /// Async phase-3 work split: `seg_rows[j]` = class-`I_1` rows whose
+    /// halo reads all fall inside recv plan `j`'s slot segment (sorted
+    /// ascending — advanceable the moment peer `j`'s message lands).
+    pub seg_rows: Vec<Vec<u32>>,
+    /// Class-`I_1` rows reading two or more peers' segments (or none, for
+    /// structurally one-sided couplings): advanced only after every
+    /// segment of the round has landed. Together with
+    /// [`seg_rows`](Self::seg_rows) this partitions `class_ranges[0]`.
+    pub multi_rows: Vec<u32>,
+    /// Copied from [`DlbOptions::async_remainder`] so per-rank kernels and
+    /// pool workers see the knob through the plan they already carry.
+    pub async_remainder: bool,
 }
 
 /// The full distributed plan: permuted rank-locals + per-rank plans.
@@ -213,6 +254,47 @@ fn finish_rank_plan(r: &RankLocal, levels: &Levels, p_m: usize, opts: &DlbOption
         nl - levels.level_ptr[first_bulk]
     };
 
+    // async phase-3 split of I_1 by feeding peer segment: a row whose halo
+    // reads all land in one recv plan's slots advances as soon as that
+    // message arrives; rows coupling several peers (or none, if the
+    // symmetrized graph adjacency has no matching column) wait for the
+    // full round.
+    let n_halo = r.n_halo();
+    let mut seg_rows: Vec<Vec<u32>> = vec![Vec::new(); r.recv.len()];
+    let mut multi_rows: Vec<u32> = Vec::new();
+    if n_halo > 0 {
+        if let Some(&(c_lo, c_hi)) = class_ranges.first() {
+            let mut slot_owner = vec![usize::MAX; n_halo];
+            for (j, rp) in r.recv.iter().enumerate() {
+                for s in rp.slots.clone() {
+                    slot_owner[s] = j;
+                }
+            }
+            for row in c_lo..c_hi {
+                let mut owner: Option<usize> = None;
+                let mut multi = false;
+                for &c in r.a.row_cols(row) {
+                    let c = c as usize;
+                    if c >= nl {
+                        let j = slot_owner[c - nl];
+                        match owner {
+                            None => owner = Some(j),
+                            Some(o) if o != j => {
+                                multi = true;
+                                break;
+                            }
+                            Some(_) => {}
+                        }
+                    }
+                }
+                match owner {
+                    Some(j) if !multi => seg_rows[j].push(row as u32),
+                    _ => multi_rows.push(row as u32),
+                }
+            }
+        }
+    }
+
     DlbRankPlan {
         perm: levels.perm.clone(),
         levels: levels.clone(),
@@ -222,6 +304,61 @@ fn finish_rank_plan(r: &RankLocal, levels: &Levels, p_m: usize, opts: &DlbOption
         batches,
         class_ranges,
         bulk_rows,
+        seg_rows,
+        multi_rows,
+        async_remainder: opts.async_remainder,
+    }
+}
+
+/// Collapse a sorted row list into maximal contiguous `[lo, hi)` runs so
+/// segment advances reuse the range kernel — bitwise identical to one
+/// contiguous call, since `spmv_range` computes each row independently.
+pub fn contiguous_runs(rows: &[u32]) -> Vec<(usize, usize)> {
+    let mut runs: Vec<(usize, usize)> = Vec::new();
+    for &row in rows {
+        let row = row as usize;
+        match runs.last_mut() {
+            Some((_, hi)) if *hi == row => *hi += 1,
+            _ => runs.push((row, row + 1)),
+        }
+    }
+    runs
+}
+
+/// Advance the contiguous `runs` of one class from power `power - 1` to
+/// `power` — the per-segment compute of the async remainder. Serial mode
+/// records `span` once around all runs; a parallel inner pool gets one
+/// row-split batch over the runs (emitting `inner.task` spans instead).
+#[allow(clippy::too_many_arguments)]
+fn advance_runs(
+    a: &crate::matrix::CsrMatrix,
+    runs: &[(usize, usize)],
+    power: usize,
+    rec: Recurrence,
+    prev2: Option<&[f64]>,
+    prev: &[f64],
+    cur: &mut [f64],
+    span: Span,
+    backend: &mut dyn SpmvBackend,
+    inner: Option<&mut InnerExec>,
+    tracer: &mut RankRecorder,
+) -> usize {
+    if runs.is_empty() {
+        return 0;
+    }
+    match inner {
+        Some(ie) if ie.is_parallel() => {
+            crate::inner::run_split_runs(ie, a, rec, prev2, prev, cur, runs, power, backend, tracer)
+        }
+        _ => {
+            let t0 = tracer.now();
+            let mut nnz = 0usize;
+            for &(lo, hi) in runs {
+                nnz += kernel_step(a, rec, prev2, prev, cur, lo, hi, backend);
+            }
+            tracer.closed_span(span, t0);
+            nnz
+        }
     }
 }
 
@@ -480,7 +617,42 @@ pub fn execute_recurrence_traced(
     }
 
     // ---- phase 3: p_m - 1 rounds of {exchange, advance classes}
+    let async_rem = plan.ranks.first().map_or(false, |rp| rp.async_remainder);
     for p in 1..p_m {
+        if async_rem {
+            // Pipelined variant: round 1 sends are posted here; every later
+            // round's sends were already posted by the previous round's
+            // `async_round` (right after its class-`I_1` advance), so by the
+            // time rank `i` drains round `p` the full halo is in its
+            // mailbox and the nonblocking sweep completes deterministically
+            // in recv-plan order.
+            if p == 1 {
+                for ((c, r), xv) in comms.iter_mut().zip(&dist.ranks).zip(ys[1].iter()) {
+                    c.post_halo_sends(r, 1, xv);
+                }
+            }
+            for i in 0..nr {
+                let r = &dist.ranks[i];
+                let pl = &plan.ranks[i];
+                let par =
+                    inners.as_deref_mut().map(|v| &mut v[i]).filter(|e| e.is_parallel());
+                let mut stack: Vec<&mut Vec<f64>> =
+                    ys.iter_mut().map(|pw| &mut pw[i]).collect();
+                async_round(
+                    r,
+                    pl,
+                    p_m,
+                    p,
+                    &mut stack,
+                    rec,
+                    &mut comms[i],
+                    backend,
+                    par,
+                    &mut flop_nnz,
+                );
+            }
+            continue;
+        }
         lockstep_halo_exchange(&mut comms, &dist.ranks, p as u64, &mut ys[p]);
         for i in 0..nr {
             let pl = &plan.ranks[i];
@@ -541,6 +713,126 @@ pub fn execute_recurrence_traced(
         powers: (1..=p_m).map(|p| dist.gather(&ys[p])).collect(),
         comm: merge_rank_stats(&per_rank),
         flop_nnz,
+    }
+}
+
+/// One async remainder round `p` for one rank (`DlbOptions::async_remainder`):
+/// complete the round's posted receives in **arrival order** (nonblocking
+/// `try_recv` sweep, then `recv_any`), advancing each landed segment's
+/// exclusive `I_1` rows immediately; once the whole halo landed, advance
+/// the multi-peer rows, post the next round's sends, and advance the
+/// deeper classes. Intermediate rounds close without a barrier
+/// ([`Communicator::advance_round`]); the final round keeps the real
+/// [`Communicator::end_round`] so cross-sweep tag reuse stays safe.
+///
+/// `ys` is one rank's power stack (`ys[q]` = `y_q`, halo tail included) —
+/// borrowed per power so both the per-rank kernel and the lockstep driver
+/// (whose storage is `[power][rank]`) can call this. Every row is advanced
+/// exactly once from fully-final inputs by the same per-row kernel as the
+/// lockstep path, so results are bitwise identical in any completion
+/// order.
+#[allow(clippy::too_many_arguments)]
+fn async_round(
+    r: &RankLocal,
+    pl: &DlbRankPlan,
+    p_m: usize,
+    p: usize,
+    ys: &mut [&mut Vec<f64>],
+    rec: Recurrence,
+    comm: &mut dyn Communicator,
+    backend: &mut dyn SpmvBackend,
+    mut inner: Option<&mut InnerExec>,
+    flop_nnz: &mut usize,
+) {
+    let nl = r.n_local();
+    let tag = p as u64;
+    let mut outstanding: Vec<usize> = (0..r.recv.len()).collect();
+    comm.tracer().counter("dlb.outstanding", outstanding.len() as f64);
+    while !outstanding.is_empty() {
+        // Opportunistic nonblocking sweep first, then block for whichever
+        // posted receive lands next.
+        let hit = outstanding
+            .iter()
+            .enumerate()
+            .find_map(|(pos, &j)| comm.try_recv(r.recv[j].from, tag).map(|pay| (pos, pay)));
+        let (pos, payload) = match hit {
+            Some(x) => x,
+            None => {
+                let reqs: Vec<(usize, u64)> =
+                    outstanding.iter().map(|&j| (r.recv[j].from, tag)).collect();
+                comm.recv_any(&reqs)
+            }
+        };
+        let j = outstanding.remove(pos);
+        let rp = &r.recv[j];
+        debug_assert_eq!(payload.len(), rp.slots.len(), "halo payload length");
+        ys[p][nl + rp.slots.start..nl + rp.slots.end].copy_from_slice(&payload);
+        comm.tracer().counter("dlb.outstanding", outstanding.len() as f64);
+        // Advance the rows fed only by this segment from power p to p + 1.
+        let runs = contiguous_runs(&pl.seg_rows[j]);
+        let (prevs, cur) = ys.split_at_mut(p + 1);
+        *flop_nnz += advance_runs(
+            &r.a,
+            &runs,
+            p + 1,
+            rec,
+            Some(&prevs[p - 1][..]),
+            &prevs[p][..],
+            &mut cur[0][..],
+            Span::DlbSegment { round: p as u32, class: 1, peer: rp.from as u32 },
+            backend,
+            inner.as_mut().map(|i| &mut **i),
+            comm.tracer(),
+        );
+    }
+    // Multi-peer rows complete class I_1 now that the whole halo landed.
+    {
+        let runs = contiguous_runs(&pl.multi_rows);
+        let (prevs, cur) = ys.split_at_mut(p + 1);
+        *flop_nnz += advance_runs(
+            &r.a,
+            &runs,
+            p + 1,
+            rec,
+            Some(&prevs[p - 1][..]),
+            &prevs[p][..],
+            &mut cur[0][..],
+            Span::DlbRemainder { round: p as u32, class: 1 },
+            backend,
+            inner.as_mut().map(|i| &mut **i),
+            comm.tracer(),
+        );
+    }
+    if p + 1 < p_m {
+        // Same early post as the lockstep path: y_{p+1} is final on every
+        // send row once all of I_1 reached power p + 1.
+        comm.post_halo_sends(r, (p + 1) as u64, &ys[p + 1][..]);
+    }
+    // Deeper classes read only local, already-final data.
+    for k in 2..=(p_m - p) {
+        let (lo, hi) = pl.class_ranges[k - 1];
+        if lo == hi {
+            continue;
+        }
+        let (prevs, cur) = ys.split_at_mut(p + k);
+        *flop_nnz += advance_runs(
+            &r.a,
+            &[(lo, hi)],
+            p + k,
+            rec,
+            Some(&prevs[p + k - 2][..]),
+            &prevs[p + k - 1][..],
+            &mut cur[0][..],
+            Span::DlbRemainder { round: p as u32, class: k as u32 },
+            backend,
+            inner.as_mut().map(|i| &mut **i),
+            comm.tracer(),
+        );
+    }
+    if p + 1 < p_m {
+        comm.advance_round();
+    } else {
+        comm.end_round();
     }
 }
 
@@ -657,8 +949,27 @@ pub fn dlb_rank(
     }
 
     // ---- phase 3: p_m - 1 rounds of {wait halo, advance classes}, with
-    // the next round's sends posted right after the I_1 advance
+    // the next round's sends posted right after the I_1 advance. With
+    // `async_remainder`, receives complete in arrival order and each
+    // landed segment's I_1 rows advance while the other messages are
+    // still in flight (see the module docs).
     for p in 1..p_m {
+        if pl.async_remainder {
+            let mut stack: Vec<&mut Vec<f64>> = ys.iter_mut().collect();
+            async_round(
+                r,
+                pl,
+                p_m,
+                p,
+                &mut stack,
+                rec,
+                comm,
+                backend,
+                Some(inner),
+                &mut flop_nnz,
+            );
+            continue;
+        }
         comm.wait_halo(r, p as u64, &mut ys[p]);
         for k in 1..=(p_m - p) {
             let (lo, hi) = pl.class_ranges[k - 1];
@@ -738,7 +1049,7 @@ mod tests {
         let part = partition(a, np, Method::Block);
         let d = DistMatrix::build(a, &part);
         let want = trad_mpk(&d, &x, p_m, &mut NativeBackend);
-        let opts = DlbOptions { cache_bytes: cache, s_m: 50 };
+        let opts = DlbOptions { cache_bytes: cache, s_m: 50, async_remainder: false };
         let got = dlb_mpk(&d, &x, p_m, &opts, &mut NativeBackend);
         assert_eq!(got.result.powers.len(), p_m);
         for (p, (gp, wp)) in got.result.powers.iter().zip(&want.powers).enumerate() {
@@ -825,7 +1136,7 @@ mod tests {
         let part = partition(&a, 1, Method::Block);
         let d = DistMatrix::build(&a, &part);
         let x = vec![1.0; 400];
-        let out = dlb_mpk(&d, &x, 3, &DlbOptions { cache_bytes: 4 << 10, s_m: 50 }, &mut NativeBackend);
+        let out = dlb_mpk(&d, &x, 3, &DlbOptions { cache_bytes: 4 << 10, s_m: 50, async_remainder: false }, &mut NativeBackend);
         assert_eq!(out.result.comm.bytes, 0);
         assert_eq!(out.overhead, 0.0, "no halo -> zero DLB overhead");
     }

@@ -32,6 +32,17 @@ pub struct RankMetrics {
     pub recv_ns: u64,
     /// Time inside `comm.wait` spans (the round-closing barrier).
     pub wait_ns: u64,
+    /// Time inside `comm.probe` spans (nonblocking receive misses).
+    pub probe_ns: u64,
+    /// Communication/computation overlap: compute time spent while at
+    /// least one receive of the current round was still outstanding
+    /// (tracked via the kernel's `dlb.outstanding` counter; only the async
+    /// remainder emits it, so this is 0 on the sync path).
+    pub overlap_ns: u64,
+    /// Overlapped compute per remainder round `(round, ns)`, ascending —
+    /// from round-carrying compute spans (`dlb.segment`/`dlb.remainder`)
+    /// closed while receives were outstanding.
+    pub overlap_by_round: Vec<(u32, u64)>,
     /// Time parked between pool jobs.
     pub park_ns: u64,
     /// Messages received (receiver-side, like [`crate::distsim::CommStats`]).
@@ -57,6 +68,9 @@ pub struct Metrics {
     pub per_rank: Vec<RankMetrics>,
     pub total_compute_ns: u64,
     pub total_wait_ns: u64,
+    /// Summed [`RankMetrics::overlap_ns`] — compute hidden behind
+    /// still-in-flight receives across all ranks.
+    pub total_overlap_ns: u64,
     pub total_messages: usize,
     pub total_bytes: usize,
 }
@@ -69,6 +83,7 @@ impl Metrics {
             let rm = aggregate_rank(rank, events);
             out.total_compute_ns += rm.compute_ns;
             out.total_wait_ns += rm.wait_ns;
+            out.total_overlap_ns += rm.overlap_ns;
             out.total_messages += rm.messages;
             out.total_bytes += rm.bytes;
             out.per_rank.push(rm);
@@ -81,8 +96,13 @@ impl Metrics {
         let mut s = String::from("{\n");
         s.push_str(&format!("  \"ranks\": {},\n", self.per_rank.len()));
         s.push_str(&format!(
-            "  \"total\": {{\"compute_ns\": {}, \"wait_ns\": {}, \"messages\": {}, \"bytes\": {}}},\n",
-            self.total_compute_ns, self.total_wait_ns, self.total_messages, self.total_bytes
+            "  \"total\": {{\"compute_ns\": {}, \"wait_ns\": {}, \"overlap_ns\": {}, \
+             \"messages\": {}, \"bytes\": {}}},\n",
+            self.total_compute_ns,
+            self.total_wait_ns,
+            self.total_overlap_ns,
+            self.total_messages,
+            self.total_bytes
         ));
         s.push_str("  \"per_rank\": [\n");
         for (i, r) in self.per_rank.iter().enumerate() {
@@ -107,20 +127,24 @@ impl Metrics {
             };
             s.push_str(&format!(
                 "    {{\"rank\": {}, \"compute_ns\": {}, \"send_ns\": {}, \"recv_ns\": {}, \
-                 \"wait_ns\": {}, \"park_ns\": {}, \"messages\": {}, \"bytes\": {}, \
+                 \"wait_ns\": {}, \"probe_ns\": {}, \"overlap_ns\": {}, \"park_ns\": {}, \
+                 \"messages\": {}, \"bytes\": {}, \
                  \"recv_from\": {}, \"sent_to\": {}, \"wait_by_round\": {}, \
-                 \"level_compute_ns\": {}}}{}\n",
+                 \"overlap_by_round\": {}, \"level_compute_ns\": {}}}{}\n",
                 r.rank,
                 r.compute_ns,
                 r.send_ns,
                 r.recv_ns,
                 r.wait_ns,
+                r.probe_ns,
+                r.overlap_ns,
                 r.park_ns,
                 r.messages,
                 r.bytes,
                 flows(&r.recv_from),
                 flows(&r.sent_to),
                 pairs(&r.wait_by_round, "round"),
+                pairs(&r.overlap_by_round, "round"),
                 pairs(&r.level_compute_ns, "group"),
                 if i + 1 < self.per_rank.len() { "," } else { "" },
             ));
@@ -135,8 +159,14 @@ pub(crate) fn aggregate_rank(rank: usize, events: &[Event]) -> RankMetrics {
     let mut recv_from: BTreeMap<usize, PeerFlow> = BTreeMap::new();
     let mut sent_to: BTreeMap<usize, PeerFlow> = BTreeMap::new();
     let mut wait_by_round: BTreeMap<u32, u64> = BTreeMap::new();
+    let mut overlap_by_round: BTreeMap<u32, u64> = BTreeMap::new();
     let mut level_ns: BTreeMap<u32, u64> = BTreeMap::new();
     let mut stack: Vec<(Span, u64)> = Vec::new();
+    // Outstanding-receive level from the async remainder's
+    // `dlb.outstanding` counter. The kernel updates it before each
+    // segment's compute span opens, so at a compute End the level is the
+    // number of receives that were still in flight during that span.
+    let mut outstanding = 0.0f64;
     for ev in events {
         match ev.kind {
             EventKind::Begin(span) => stack.push((span, ev.t_ns)),
@@ -146,9 +176,17 @@ pub(crate) fn aggregate_rank(rank: usize, events: &[Event]) -> RankMetrics {
                     .unwrap_or_else(|| panic!("rank {rank}: End event without an open span"));
                 let dur = ev.t_ns.saturating_sub(t0);
                 rm.spans += 1;
+                if outstanding >= 1.0 && span.cat() == "compute" {
+                    rm.overlap_ns += dur;
+                    if let Span::DlbSegment { round, .. } | Span::DlbRemainder { round, .. } = span
+                    {
+                        *overlap_by_round.entry(round).or_insert(0) += dur;
+                    }
+                }
                 match span {
                     Span::TradSpmv { .. }
                     | Span::DlbRemainder { .. }
+                    | Span::DlbSegment { .. }
                     | Span::CaPromote { .. }
                     | Span::InnerTask { .. } => {
                         rm.compute_ns += dur;
@@ -181,19 +219,25 @@ pub(crate) fn aggregate_rank(rank: usize, events: &[Event]) -> RankMetrics {
                         rm.wait_ns += dur;
                         *wait_by_round.entry(round).or_insert(0) += dur;
                     }
+                    Span::CommProbe { .. } => rm.probe_ns += dur,
                     Span::JobPark => rm.park_ns += dur,
                     // dispatch wraps the kernel's own spans; attributing its
                     // duration too would double-count
                     Span::CaExchange | Span::JobDispatch => {}
                 }
             }
-            EventKind::Counter { .. } => {}
+            EventKind::Counter { name, value } => {
+                if name == "dlb.outstanding" {
+                    outstanding = value;
+                }
+            }
         }
     }
     assert!(stack.is_empty(), "rank {rank}: {} span(s) left open", stack.len());
     rm.recv_from = recv_from.into_values().collect();
     rm.sent_to = sent_to.into_values().collect();
     rm.wait_by_round = wait_by_round.into_iter().collect();
+    rm.overlap_by_round = overlap_by_round.into_iter().collect();
     rm.level_compute_ns = level_ns.into_iter().collect();
     rm
 }
@@ -234,6 +278,40 @@ mod tests {
         assert_eq!(m.total_bytes, 48);
         assert_eq!(m.total_messages, 3);
         // the summary is valid JSON
+        assert!(crate::util::json::Json::parse(&m.to_json()).is_ok());
+    }
+
+    #[test]
+    fn overlap_counts_compute_while_receives_outstanding() {
+        let mut s = TraceSession::with_capacity(1, 32);
+        let mut r = s.recorder(0);
+        // Round start: two receives outstanding.
+        r.counter("dlb.outstanding", 2.0);
+        let t0 = r.now();
+        r.closed_span(Span::CommRecv { from: 1, bytes: 8 }, t0);
+        r.counter("dlb.outstanding", 1.0);
+        let t0 = r.now();
+        // Segment advanced while peer 2's message is still in flight.
+        r.closed_span(Span::DlbSegment { round: 1, class: 1, peer: 1 }, t0);
+        let t0 = r.now();
+        r.closed_span(Span::CommRecv { from: 2, bytes: 8 }, t0);
+        r.counter("dlb.outstanding", 0.0);
+        let t0 = r.now();
+        // Everything landed: this compute is NOT overlapped.
+        r.closed_span(Span::DlbSegment { round: 1, class: 1, peer: 2 }, t0);
+        let t0 = r.now();
+        r.closed_span(Span::CommProbe { from: 2 }, t0);
+        s.absorb(0, r.take_events());
+        let m = s.metrics();
+        let rm = &m.per_rank[0];
+        assert_eq!(rm.messages, 2);
+        // Only the first segment's compute overlapped a receive in flight,
+        // and it is attributed to round 1.
+        assert_eq!(rm.overlap_by_round.len(), 1);
+        assert_eq!(rm.overlap_by_round[0].0, 1);
+        assert_eq!(rm.overlap_by_round[0].1, rm.overlap_ns);
+        assert_eq!(m.total_overlap_ns, rm.overlap_ns);
+        assert!(rm.compute_ns >= rm.overlap_ns);
         assert!(crate::util::json::Json::parse(&m.to_json()).is_ok());
     }
 }

@@ -59,6 +59,10 @@ pub enum Span {
     DlbWavefront { group: u32, power: u32 },
     /// DLB phase-3 remainder: round `round` advancing class `I_class`.
     DlbRemainder { round: u32, class: u32 },
+    /// DLB async phase-3: the class-`I_class` rows fed exclusively by rank
+    /// `peer`'s halo segment, advanced in round `round` the moment that
+    /// segment landed (while other receives may still be in flight).
+    DlbSegment { round: u32, class: u32, peer: u32 },
     /// CA's single up-front extended-halo exchange.
     CaExchange,
     /// CA promotion round `power` (owned rows + still-live external classes).
@@ -67,6 +71,9 @@ pub enum Span {
     CommSend { to: u32, bytes: u32 },
     /// One matched receive (`bytes` of payload from rank `from`).
     CommRecv { from: u32, bytes: u32 },
+    /// A nonblocking receive probe that found nothing from rank `from`
+    /// (async remainder `try_recv` miss).
+    CommProbe { from: u32 },
     /// Round-closing barrier wait (`round` is the per-endpoint cumulative
     /// round counter at close).
     CommWait { round: u32 },
@@ -87,10 +94,14 @@ impl Span {
             Self::TradSpmv { power } => format!("trad.spmv(p{power})"),
             Self::DlbWavefront { group, power } => format!("dlb.wavefront(g{group},p{power})"),
             Self::DlbRemainder { round, class } => format!("dlb.remainder(r{round},k{class})"),
+            Self::DlbSegment { round, class, peer } => {
+                format!("dlb.segment(r{round},k{class},<-{peer})")
+            }
             Self::CaExchange => "ca.exchange".to_string(),
             Self::CaPromote { power } => format!("ca.promote(p{power})"),
             Self::CommSend { to, .. } => format!("comm.send(->{to})"),
             Self::CommRecv { from, .. } => format!("comm.recv(<-{from})"),
+            Self::CommProbe { from } => format!("comm.probe(<-{from})"),
             Self::CommWait { round } => format!("comm.wait(r{round})"),
             Self::JobDispatch => "job.dispatch".to_string(),
             Self::JobPark => "job.park".to_string(),
@@ -104,9 +115,13 @@ impl Span {
             Self::TradSpmv { .. }
             | Self::DlbWavefront { .. }
             | Self::DlbRemainder { .. }
+            | Self::DlbSegment { .. }
             | Self::CaPromote { .. }
             | Self::InnerTask { .. } => "compute",
-            Self::CaExchange | Self::CommSend { .. } | Self::CommRecv { .. }
+            Self::CaExchange
+            | Self::CommSend { .. }
+            | Self::CommRecv { .. }
+            | Self::CommProbe { .. }
             | Self::CommWait { .. } => "comm",
             Self::JobDispatch | Self::JobPark => "pool",
         }
@@ -386,6 +401,11 @@ mod tests {
         assert_eq!(Span::CaPromote { power: 1 }.cat(), "compute");
         assert_eq!(Span::InnerTask { group: 2, power: 3 }.name(), "inner.task(g2,p3)");
         assert_eq!(Span::InnerTask { group: 2, power: 3 }.cat(), "compute");
+        let seg = Span::DlbSegment { round: 1, class: 1, peer: 3 };
+        assert_eq!(seg.name(), "dlb.segment(r1,k1,<-3)");
+        assert_eq!(seg.cat(), "compute");
+        assert_eq!(Span::CommProbe { from: 2 }.name(), "comm.probe(<-2)");
+        assert_eq!(Span::CommProbe { from: 2 }.cat(), "comm");
     }
 
     #[test]

@@ -93,7 +93,7 @@ fn chebyshev_boomerang_localized_vs_delocalized() {
             dt: 2.0,
             p_m: 4,
             engine: EngineConfig {
-                variant: Variant::Dlb(DlbOptions { cache_bytes: 1 << 20, s_m: 50 }),
+                variant: Variant::Dlb(DlbOptions { cache_bytes: 1 << 20, s_m: 50, async_remainder: false }),
                 ..EngineConfig::default()
             },
         };

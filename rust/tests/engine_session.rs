@@ -44,7 +44,7 @@ fn propagator_threads_pool_matches_sim_bitwise_over_three_steps() {
         dt: 0.4,
         p_m: 4,
         engine: EngineConfig {
-            variant: Variant::Dlb(DlbOptions { cache_bytes: 64 << 10, s_m: 50 }),
+            variant: Variant::Dlb(DlbOptions { cache_bytes: 64 << 10, s_m: 50, async_remainder: false }),
             executor,
             backend: BackendSpec::Native,
             trace: false,
@@ -114,7 +114,7 @@ fn tail_plan_construction_count_is_constant_in_steps() {
         dt: 0.5,
         p_m,
         engine: EngineConfig {
-            variant: Variant::Dlb(DlbOptions { cache_bytes: 32 << 10, s_m: 50 }),
+            variant: Variant::Dlb(DlbOptions { cache_bytes: 32 << 10, s_m: 50, async_remainder: false }),
             ..EngineConfig::default()
         },
     };
@@ -165,7 +165,7 @@ fn pcg_routes_all_spmvs_through_engine_backend() {
     let calls = Arc::new(AtomicUsize::new(0));
     let calls_in_factory = calls.clone();
     let cfg = EngineConfig {
-        variant: Variant::Dlb(DlbOptions { cache_bytes: 1 << 20, s_m: 50 }),
+        variant: Variant::Dlb(DlbOptions { cache_bytes: 1 << 20, s_m: 50, async_remainder: false }),
         executor: ExecutorKind::Sim,
         backend: BackendSpec::Custom(Arc::new(move || {
             Box::new(CountingBackend { calls: calls_in_factory.clone() })

@@ -8,10 +8,10 @@
 
 use dlb_mpk::distsim::{merge_rank_stats, CommStats, DistMatrix};
 use dlb_mpk::engine::{MpkEngine, Variant};
-use dlb_mpk::exec::{self, thread_comms, Communicator, ExecutorKind};
+use dlb_mpk::exec::{self, sim_comms, thread_comms, Communicator, ExecutorKind};
 use dlb_mpk::matrix::{gen, CsrMatrix};
 use dlb_mpk::mpk::dlb::{self, DlbOptions, Recurrence};
-use dlb_mpk::mpk::{ca, trad_mpk, NativeBackend};
+use dlb_mpk::mpk::{ca, trad_mpk, NativeBackend, SpmvBackend};
 use dlb_mpk::partition::{partition, Method};
 use dlb_mpk::util::rng::Rng;
 
@@ -49,7 +49,7 @@ fn check_all_variants(a: &CsrMatrix, np: usize, p_m: usize, cache: usize) {
     assert_eq!(sim.flop_nnz, thr.flop_nnz, "trad flops {tag}");
 
     // DLB (same plan drives both executors)
-    let opts = DlbOptions { cache_bytes: cache, s_m: 50 };
+    let opts = DlbOptions { cache_bytes: cache, s_m: 50, async_remainder: false };
     let plan = dlb::plan(&d, p_m, &opts);
     let sim = dlb::execute(&plan, &x, &mut NativeBackend);
     let thr = exec::dlb_threaded(&plan, &x, None, Recurrence::Power);
@@ -99,7 +99,7 @@ fn sim_and_threads_agree_on_chebyshev_recurrence() {
         assert_bitwise(&sim.powers, &thr.powers, "cheb trad");
         assert_eq!(sim.comm, thr.comm);
 
-        let plan = dlb::plan(&d, p_m, &DlbOptions { cache_bytes: 8 << 10, s_m: 50 });
+        let plan = dlb::plan(&d, p_m, &DlbOptions { cache_bytes: 8 << 10, s_m: 50, async_remainder: false });
         let sim = dlb::execute_recurrence(&plan, &x, Some(&xm1), Recurrence::Chebyshev, &mut NativeBackend);
         let thr = exec::dlb_threaded(&plan, &x, Some(&xm1), Recurrence::Chebyshev);
         assert_bitwise(&sim.powers, &thr.powers, "cheb dlb");
@@ -121,7 +121,7 @@ fn engine_sim_and_threads_agree_on_chebyshev_sweeps() {
         let d = DistMatrix::build(&a, &part);
         for variant in [
             Variant::Trad,
-            Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50 }),
+            Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50, async_remainder: false }),
         ] {
             let mut sim_eng =
                 MpkEngine::builder(&d).p_m(3).variant(variant).build().unwrap();
@@ -155,7 +155,7 @@ fn engine_reuse_matches_fresh_engines() {
     for executor in [ExecutorKind::Sim, ExecutorKind::Threads { n: 0 }] {
         for variant in [
             Variant::Trad,
-            Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50 }),
+            Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50, async_remainder: false }),
             Variant::Ca,
         ] {
             let build = || {
@@ -267,5 +267,188 @@ fn threaded_exchange_delivers_every_send_plan_row_exactly_once() {
         assert_eq!(merged.messages, planned_msgs, "case {case}: one message per plan");
         assert_eq!(merged.bytes, planned_rows * 8, "case {case}: every row exactly once");
         assert_eq!(merged.rounds, 1, "case {case}");
+    }
+}
+
+/// Acceptance sweep for `DlbOptions::async_remainder`: across rank counts,
+/// block sizes, executors, and inner-thread counts, the pipelined remainder
+/// must be bitwise identical to the lockstep path — same powers, same
+/// volume/round counters, same flop count.
+#[test]
+fn async_remainder_matches_sync_across_executors() {
+    let a = gen::stencil_2d_5pt(16, 12);
+    let x = test_vector(a.n_rows());
+    for np in [2, 4] {
+        let part = partition(&a, np, Method::Block);
+        let d = DistMatrix::build(&a, &part);
+        for p_m in [2, 4] {
+            let opts = DlbOptions { cache_bytes: 8 << 10, s_m: 50, async_remainder: false };
+            let mut base_eng =
+                MpkEngine::builder(&d).p_m(p_m).variant(Variant::Dlb(opts)).build().unwrap();
+            let base = base_eng.sweep(&x, None, Recurrence::Power);
+            for executor in [ExecutorKind::Sim, ExecutorKind::Threads { n: 0 }] {
+                for inner in [1, 2] {
+                    let mut eng = MpkEngine::builder(&d)
+                        .p_m(p_m)
+                        .variant(Variant::Dlb(opts))
+                        .async_remainder(true)
+                        .executor(executor)
+                        .inner_threads(inner)
+                        .build()
+                        .unwrap();
+                    let got = eng.sweep(&x, None, Recurrence::Power);
+                    let tag = format!("async np={np} p_m={p_m} {executor} inner={inner}");
+                    assert_bitwise(&base.powers, &got.powers, &tag);
+                    assert_eq!(base.comm, got.comm, "{tag} stats");
+                    assert_eq!(base.flop_nnz, got.flop_nnz, "{tag} flops");
+                }
+            }
+        }
+    }
+}
+
+/// Adversarial out-of-order delivery on the channel transport: two peers
+/// post sends in ascending vs. descending tag order; the receiver completes
+/// them via `recv_any`/`try_recv`. Every `(from, tag)` message must arrive
+/// exactly once with the right payload, in the documented
+/// lowest-request-index completion order, with receiver-side counters equal
+/// to a `SimComm` run of the identical traffic.
+#[test]
+fn thread_comm_out_of_order_sends_deliver_exactly_once() {
+    fn payload(from: usize, tag: u64) -> Vec<f64> {
+        vec![from as f64 * 100.0 + tag as f64; 3]
+    }
+    fn run_receiver(c: &mut dyn Communicator) -> (Vec<(usize, u64, Vec<f64>)>, CommStats) {
+        let mut got = Vec::new();
+        // A probe for a message nobody sends misses without consuming.
+        assert_eq!(c.try_recv(1, 99), None);
+        // Complete the *last* tag each peer posts first: the transport
+        // must buffer the earlier-tag arrivals (per-sender FIFO channels
+        // guarantee they are already in, so the drain below can't block).
+        let (idx, pay) = c.recv_any(&[(1, 3)]);
+        assert_eq!(idx, 0);
+        got.push((1, 3, pay));
+        let (idx, pay) = c.recv_any(&[(2, 1)]);
+        assert_eq!(idx, 0);
+        got.push((2, 1, pay));
+        // Drain the buffered rest: all present, so completion order is
+        // exactly lowest request index first.
+        let mut reqs: Vec<(usize, u64)> = vec![(1, 1), (1, 2), (2, 2), (2, 3)];
+        while !reqs.is_empty() {
+            let (idx, pay) = c.recv_any(&reqs);
+            let (from, tag) = reqs.remove(idx);
+            got.push((from, tag, pay));
+        }
+        c.end_round();
+        (got, c.stats().clone())
+    }
+
+    // Threaded: real concurrent senders racing the receiver.
+    let mut comms = thread_comms(3);
+    let mut c2 = comms.pop().unwrap();
+    let mut c1 = comms.pop().unwrap();
+    let mut c0 = comms.pop().unwrap();
+    let (thr_got, thr_stats) = std::thread::scope(|s| {
+        s.spawn(move || {
+            for tag in [1u64, 2, 3] {
+                c1.send(0, tag, payload(1, tag));
+            }
+            c1.end_round();
+        });
+        s.spawn(move || {
+            for tag in [3u64, 2, 1] {
+                c2.send(0, tag, payload(2, tag));
+            }
+            c2.end_round();
+        });
+        run_receiver(&mut c0)
+    });
+
+    // Lockstep simulator: same traffic, sequential.
+    let mut sims = sim_comms(3);
+    for tag in [1u64, 2, 3] {
+        sims[1].send(0, tag, payload(1, tag));
+    }
+    for tag in [3u64, 2, 1] {
+        sims[2].send(0, tag, payload(2, tag));
+    }
+    let (sim_got, sim_stats) = run_receiver(&mut sims[0]);
+    sims[1].end_round();
+    sims[2].end_round();
+
+    let expect: Vec<(usize, u64, Vec<f64>)> = [(1, 3), (2, 1), (1, 1), (1, 2), (2, 2), (2, 3)]
+        .into_iter()
+        .map(|(f, t)| (f, t, payload(f, t)))
+        .collect();
+    assert_eq!(thr_got, expect, "threaded completion order/payloads");
+    assert_eq!(sim_got, expect, "sim completion order/payloads");
+    assert_eq!(thr_stats, sim_stats, "receiver-side counters match across transports");
+    assert_eq!(thr_stats.messages, 6);
+    assert_eq!(thr_stats.bytes, 6 * 3 * 8);
+}
+
+/// Proptest-style invariant behind the async remainder's bitwise claim:
+/// for random matrices/partitions, (1) `seg_rows` + `multi_rows` exactly
+/// partition class `I_1`, and (2) advancing the per-peer segments in *any*
+/// completion permutation (plus the multi-peer rows) is bitwise identical
+/// to one contiguous row sweep — rows are independent under `spmv_range`.
+#[test]
+fn remainder_segment_permutations_are_bitwise_identical() {
+    let mut rng = Rng::new(0xA57C);
+    for case in 0..12 {
+        let n = rng.range(60, 220);
+        let a = gen::random_banded_sym(n, rng.range(3, 8), rng.range(4, 1 + n / 4), rng.next_u64());
+        let np = rng.range(2, 6);
+        let part = partition(&a, np, Method::Block);
+        let d = DistMatrix::build(&a, &part);
+        let p_m = rng.range(2, 5);
+        let opts = DlbOptions { cache_bytes: 4 << 10, s_m: 50, async_remainder: true };
+        let plan = dlb::plan(&d, p_m, &opts);
+        for (r, pl) in plan.dist.ranks.iter().zip(&plan.ranks) {
+            let (lo, hi) = pl.class_ranges[0];
+            assert_eq!(pl.seg_rows.len(), r.recv.len(), "case {case}: one segment per peer");
+
+            // (1) partition: every I_1 row in exactly one bucket
+            let mut seen = vec![false; hi - lo];
+            for rows in pl.seg_rows.iter().chain(std::iter::once(&pl.multi_rows)) {
+                for &row in rows {
+                    let i = row as usize;
+                    assert!((lo..hi).contains(&i), "case {case}: row {i} outside I_1");
+                    assert!(!seen[i - lo], "case {case}: row {i} in two buckets");
+                    seen[i - lo] = true;
+                }
+            }
+            assert!(seen.iter().all(|&b| b), "case {case}: I_1 not covered");
+
+            // (2) any permutation of segment advances == contiguous sweep
+            let vl = r.vec_len();
+            let prev: Vec<f64> =
+                (0..vl).map(|j| ((j * 31 + case) % 17) as f64 / 7.0 - 1.0).collect();
+            let mut want = vec![0.0; vl];
+            NativeBackend.spmv_range(&r.a, lo, hi, &prev, &mut want);
+
+            let mut order: Vec<usize> = (0..pl.seg_rows.len()).collect();
+            rng.shuffle(&mut order);
+            let mut got = vec![0.0; vl];
+            let mut rows_done = 0usize;
+            for &j in &order {
+                for (rlo, rhi) in dlb::contiguous_runs(&pl.seg_rows[j]) {
+                    NativeBackend.spmv_range(&r.a, rlo, rhi, &prev, &mut got);
+                    rows_done += rhi - rlo;
+                }
+            }
+            for (rlo, rhi) in dlb::contiguous_runs(&pl.multi_rows) {
+                NativeBackend.spmv_range(&r.a, rlo, rhi, &prev, &mut got);
+                rows_done += rhi - rlo;
+            }
+            assert_eq!(rows_done, hi - lo, "case {case}: every row advanced once");
+            for i in lo..hi {
+                assert_eq!(
+                    want[i].to_bits(),
+                    got[i].to_bits(),
+                    "case {case}: row {i} differs under permuted completion"
+                );
+            }
+        }
     }
 }

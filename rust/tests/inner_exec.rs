@@ -32,7 +32,7 @@ fn variants() -> Vec<Variant> {
     vec![
         Variant::Trad,
         Variant::Ca,
-        Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50 }),
+        Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50, async_remainder: false }),
     ]
 }
 
@@ -91,7 +91,7 @@ fn inner_threads_match_serial_on_chebyshev_recurrence() {
     let d = dist(2);
     let x = input(d.n_global);
     let xm1 = input(d.n_global).iter().map(|v| v * 0.5).collect::<Vec<_>>();
-    for v in [Variant::Trad, Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50 })] {
+    for v in [Variant::Trad, Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50, async_remainder: false })] {
         for ex in [ExecutorKind::Sim, ExecutorKind::Threads { n: 0 }] {
             let base = build(&d, v, ex, 4, 1).sweep(&x, Some(&xm1), Recurrence::Chebyshev);
             let got = build(&d, v, ex, 4, 2).sweep(&x, Some(&xm1), Recurrence::Chebyshev);
@@ -109,7 +109,7 @@ fn hierarchical_engine_is_reusable_across_sweeps() {
     let x = input(d.n_global);
     let mut serial = build(
         &d,
-        Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50 }),
+        Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50, async_remainder: false }),
         ExecutorKind::Threads { n: 0 },
         4,
         1,
@@ -117,7 +117,7 @@ fn hierarchical_engine_is_reusable_across_sweeps() {
     let base = serial.sweep(&x, None, Recurrence::Power);
     let mut eng = build(
         &d,
-        Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50 }),
+        Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50, async_remainder: false }),
         ExecutorKind::Threads { n: 0 },
         4,
         2,
@@ -142,7 +142,7 @@ fn traced_inner_threads_stay_invisible_and_export_lanes() {
         (Variant::Trad, ExecutorKind::Sim),
         (Variant::Ca, ExecutorKind::Threads { n: 0 }),
         (
-            Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50 }),
+            Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50, async_remainder: false }),
             ExecutorKind::Threads { n: 0 },
         ),
     ] {

@@ -35,7 +35,7 @@ fn all_variants_all_partitioners_stencil() {
             let want = trad_mpk(&d, &x, p_m, &mut NativeBackend);
             let dlb_out = dlb::dlb_mpk(
                 &d, &x, p_m,
-                &DlbOptions { cache_bytes: 4 << 10, s_m: 20 },
+                &DlbOptions { cache_bytes: 4 << 10, s_m: 20, async_remainder: false },
                 &mut NativeBackend,
             );
             let ca_out = ca::ca_mpk_with(&a, &d, &x, p_m);
@@ -58,7 +58,7 @@ fn anderson_aniso_high_power() {
     let d = DistMatrix::build(&h, &part);
     let p_m = 10;
     let want = trad_mpk(&d, &x, p_m, &mut NativeBackend);
-    let got = dlb::dlb_mpk(&d, &x, p_m, &DlbOptions { cache_bytes: 8 << 10, s_m: 50 }, &mut NativeBackend);
+    let got = dlb::dlb_mpk(&d, &x, p_m, &DlbOptions { cache_bytes: 8 << 10, s_m: 50, async_remainder: false }, &mut NativeBackend);
     assert_close(&got.result.powers, &want.powers, "anderson p10");
 }
 
@@ -72,7 +72,7 @@ fn chebyshev_recurrence_dlb_equals_trad() {
         let d = DistMatrix::build(&a, &part);
         let p_m = 5;
         let want = trad_recurrence(&d, &x, Some(&xm1), p_m, Recurrence::Chebyshev, &mut NativeBackend);
-        let plan = dlb::plan(&d, p_m, &DlbOptions { cache_bytes: 2 << 10, s_m: 50 });
+        let plan = dlb::plan(&d, p_m, &DlbOptions { cache_bytes: 2 << 10, s_m: 50, async_remainder: false });
         let got = dlb::execute_recurrence(&plan, &x, Some(&xm1), Recurrence::Chebyshev, &mut NativeBackend);
         assert_close(&got.powers, &want.powers, &format!("cheb np={np}"));
         assert_eq!(got.comm.bytes, want.comm.bytes);
@@ -86,7 +86,7 @@ fn chebyshev_windup_without_vm1() {
     let part = partition(&a, 2, Method::Block);
     let d = DistMatrix::build(&a, &part);
     let want = trad_recurrence(&d, &x, None, 3, Recurrence::Chebyshev, &mut NativeBackend);
-    let plan = dlb::plan(&d, 3, &DlbOptions { cache_bytes: 1, s_m: 50 });
+    let plan = dlb::plan(&d, 3, &DlbOptions { cache_bytes: 1, s_m: 50, async_remainder: false });
     let got = dlb::execute_recurrence(&plan, &x, None, Recurrence::Chebyshev, &mut NativeBackend);
     assert_close(&got.powers, &want.powers, "windup");
     // wind-up step 1 is plain SpMV: y1 = A x
@@ -114,7 +114,7 @@ fn disconnected_matrix_all_variants() {
         let part = partition(&a, np, Method::GreedyGrow);
         let d = DistMatrix::build(&a, &part);
         let want = trad_mpk(&d, &x, 3, &mut NativeBackend);
-        let got = dlb::dlb_mpk(&d, &x, 3, &DlbOptions { cache_bytes: 1 << 10, s_m: 50 }, &mut NativeBackend);
+        let got = dlb::dlb_mpk(&d, &x, 3, &DlbOptions { cache_bytes: 1 << 10, s_m: 50, async_remainder: false }, &mut NativeBackend);
         assert_close(&got.result.powers, &want.powers, &format!("disconnected np={np}"));
     }
 }

@@ -110,7 +110,7 @@ fn prop_three_variants_agree_everywhere() {
             &d,
             &x,
             p_m,
-            &DlbOptions { cache_bytes: cache, s_m: 50 },
+            &DlbOptions { cache_bytes: cache, s_m: 50, async_remainder: false },
             &mut NativeBackend,
         );
         let got_ca = ca::ca_mpk_with(&a, &d, &x, p_m);
@@ -147,7 +147,7 @@ fn prop_dlb_overheads_bounded() {
         let o = dlb_mpk::mpk::overheads::dlb_overhead(
             &d,
             p_m,
-            &DlbOptions { cache_bytes: 1 << 14, s_m: 50 },
+            &DlbOptions { cache_bytes: 1 << 14, s_m: 50, async_remainder: false },
         );
         assert!((0.0..=1.0).contains(&o), "O_DLB = {o}");
         if np == 1 {

@@ -31,7 +31,7 @@ fn variants() -> Vec<Variant> {
     vec![
         Variant::Trad,
         Variant::Ca,
-        Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50 }),
+        Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50, async_remainder: false }),
     ]
 }
 
@@ -89,7 +89,7 @@ fn chrome_trace_covers_ranks_and_phases() {
     let d = dist(3);
     let (mut eng, _res) = sweep_once(
         &d,
-        Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50 }),
+        Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50, async_remainder: false }),
         ExecutorKind::Threads { n: 0 },
         true,
     );
@@ -115,7 +115,7 @@ fn sim_executor_traces_validate_per_variant() {
     for (v, want) in [
         (Variant::Trad, "trad.spmv"),
         (Variant::Ca, "ca.promote"),
-        (Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50 }), "dlb.wavefront"),
+        (Variant::Dlb(DlbOptions { cache_bytes: 8 << 10, s_m: 50, async_remainder: false }), "dlb.wavefront"),
     ] {
         let (mut eng, _res) = sweep_once(&d, v, ExecutorKind::Sim, true);
         let json = eng.chrome_trace_json().expect("tracing enabled");
