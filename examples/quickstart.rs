@@ -13,7 +13,11 @@
 //! 6. Turn on span tracing and read back aggregated metrics — the same
 //!    recorder that `dlb-mpk anderson --trace-out trace.json` uses to
 //!    write a Chrome Trace Event file for chrome://tracing / Perfetto.
-//! 7. Route the same SpMV through the AOT Pallas/JAX artifact via PJRT
+//! 7. Statically verify the plans with `.verify_plans(true)`: the engine
+//!    machine-checks schedule independence, send/recv matching, and the
+//!    async partition at prepare time (on by default in debug builds;
+//!    standalone: `dlb-mpk verify`).
+//! 8. Route the same SpMV through the AOT Pallas/JAX artifact via PJRT
 //!    (the three-layer path; requires `make artifacts`).
 //!
 //! Run: `cargo run --release --example quickstart`
@@ -123,6 +127,24 @@ fn main() -> anyhow::Result<()> {
         m.total_wait_ns as f64 / 1e6,
         m.total_messages,
         m.total_bytes
+    );
+
+    // Static verification: `.verify_plans(true)` runs the `verify` module's
+    // four analyzers (schedule races, inner-split aliasing, send/recv
+    // matching + deadlock, async partition) over the prepared plans before
+    // the first sweep — build() fails with rule-tagged diagnostics if any
+    // invariant breaks. Default-on in debug builds, explicit here because
+    // examples compile in release; nothing runs on the sweep hot path.
+    let mut verified_eng = MpkEngine::builder(&dist)
+        .p_m(p_m)
+        .variant(Variant::Dlb(dlb_opts))
+        .verify_plans(true)
+        .build()?;
+    let v1 = verified_eng.sweep(&x, None, Recurrence::Power);
+    assert_eq!(v1.powers, dlb.powers, "verification never changes results");
+    println!(
+        "static verification: plans checked at prepare time (verify_plans = {})",
+        verified_eng.verifies_plans()
     );
 
     // Three-layer path: the same SpMV through the AOT Pallas kernel on PJRT.

@@ -53,6 +53,7 @@ pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
         backend: BackendSpec::Native,
         trace: false,
         inner_threads: cfg.inner_threads,
+        ..EngineConfig::default()
     };
     let mut trad_eng = MpkEngine::from_shared(dist.clone(), cfg.p_m, &mk_cfg(Variant::Trad))?;
     // Overlap accounting replays spans, so the DLB engine traces whenever
@@ -130,6 +131,7 @@ pub fn run_ca(cfg: &RunConfig) -> Result<(Report, crate::mpk::CaOverheads)> {
         backend: BackendSpec::Native,
         trace: false,
         inner_threads: cfg.inner_threads,
+        ..EngineConfig::default()
     };
     let mut eng = MpkEngine::from_shared(dist.clone(), cfg.p_m, &eng_cfg)?;
     let overheads = eng.ca_overheads().expect("CA engine has a primary plan");

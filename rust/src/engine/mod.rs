@@ -148,6 +148,13 @@ pub struct EngineConfig {
     /// compute as dependency-free task batches on a `k`-participant inner
     /// pool, bitwise identical to serial.
     pub inner_threads: usize,
+    /// Statically verify every plan the engine builds (schedule races,
+    /// inner-split aliasing, communication matching/progress/tags, the DLB
+    /// async partition — see [`crate::verify`]) at prepare time: `build`
+    /// fails with the diagnostic report, and tail-plan cache misses assert.
+    /// On by default in debug builds, off in release; either way nothing
+    /// runs on the sweep hot path.
+    pub verify_plans: bool,
 }
 
 impl Default for EngineConfig {
@@ -158,6 +165,7 @@ impl Default for EngineConfig {
             backend: BackendSpec::Native,
             trace: false,
             inner_threads: 1,
+            verify_plans: cfg!(debug_assertions),
         }
     }
 }
@@ -214,6 +222,13 @@ impl<'a> MpkEngineBuilder<'a> {
         self
     }
 
+    /// Statically verify plans at prepare time (see
+    /// [`EngineConfig::verify_plans`]; defaults to on in debug builds).
+    pub fn verify_plans(mut self, on: bool) -> Self {
+        self.cfg.verify_plans = on;
+        self
+    }
+
     pub fn build(self) -> anyhow::Result<MpkEngine> {
         MpkEngine::from_config(self.dist, self.p_m, &self.cfg)
     }
@@ -266,6 +281,9 @@ pub struct MpkEngine {
     host_backend: Box<dyn SpmvBackend + Send>,
     plans_built: usize,
     sweeps: usize,
+    /// Verify tail plans built on cache miss (see
+    /// [`EngineConfig::verify_plans`]).
+    verify_plans: bool,
 }
 
 impl MpkEngine {
@@ -339,6 +357,18 @@ impl MpkEngine {
         };
 
         let inner_threads = cfg.inner_threads.max(1);
+        if cfg.verify_plans {
+            let v = crate::verify::Verifier::with_inner_threads(inner_threads);
+            let report = match &state {
+                VariantState::Trad => v.check_trad(&dist_io, p_m),
+                VariantState::Dlb { plans, .. } => {
+                    let plan = &plans[&p_m];
+                    v.check_all(&dist_io, &plan.ranks, p_m)
+                }
+                VariantState::Ca { sessions, .. } => v.check_ca(&dist_io, &sessions[&p_m].exec),
+            };
+            report.into_result()?;
+        }
         let trace = if cfg.trace { Some(TraceSession::new(dist_io.n_ranks())) } else { None };
         let (pool, inners) = match cfg.executor {
             ExecutorKind::Sim => {
@@ -371,6 +401,7 @@ impl MpkEngine {
             host_backend: cfg.backend.make(),
             plans_built,
             sweeps: 0,
+            verify_plans: cfg.verify_plans,
         })
     }
 
@@ -521,6 +552,11 @@ impl MpkEngine {
         };
         if built {
             self.plans_built += 1;
+            if self.verify_plans {
+                let rep = crate::verify::Verifier::with_inner_threads(self.inner_threads)
+                    .check_all(&self.dist, &plan.ranks, p_m);
+                assert!(rep.is_ok(), "tail plan (p_m = {p_m}) failed verification:\n{rep}");
+            }
         }
         plan
     }
@@ -544,6 +580,11 @@ impl MpkEngine {
         };
         if built {
             self.plans_built += 1;
+            if self.verify_plans {
+                let rep = crate::verify::Verifier::with_inner_threads(self.inner_threads)
+                    .check_ca(&self.dist, &sess.exec);
+                assert!(rep.is_ok(), "tail CA session (p_m = {p_m}) failed verification:\n{rep}");
+            }
         }
         sess
     }
@@ -601,6 +642,12 @@ impl MpkEngine {
     /// Configured inner threads per rank (1 = serial per-rank compute).
     pub fn inner_threads(&self) -> usize {
         self.inner_threads
+    }
+
+    /// Whether plans are statically verified at prepare time (see
+    /// [`EngineConfig::verify_plans`]).
+    pub fn verifies_plans(&self) -> bool {
+        self.verify_plans
     }
 
     /// Whether per-rank span tracing is on (see [`EngineConfig::trace`]).
@@ -794,6 +841,33 @@ mod tests {
             .build()
             .unwrap();
         eng.sweep(&x, None, Recurrence::Power);
+    }
+
+    #[test]
+    fn verify_plans_knob_gates_prepare_time_checks() {
+        let d = dist(3);
+        // Explicitly on: every variant's plans pass the static analyzers.
+        for variant in [Variant::Trad, Variant::Ca, Variant::Dlb(DlbOptions::default())] {
+            let eng = MpkEngine::builder(&d)
+                .p_m(3)
+                .variant(variant)
+                .verify_plans(true)
+                .build()
+                .unwrap();
+            assert!(eng.verifies_plans());
+        }
+        // Explicitly off: nothing verifies, results are unaffected.
+        let x = vec![1.0; d.n_global];
+        let mut on = MpkEngine::builder(&d).p_m(2).verify_plans(true).build().unwrap();
+        let mut off = MpkEngine::builder(&d).p_m(2).verify_plans(false).build().unwrap();
+        assert!(!off.verifies_plans());
+        let a = on.sweep(&x, None, Recurrence::Power);
+        let b = off.sweep(&x, None, Recurrence::Power);
+        assert_eq!(a.powers, b.powers, "verification must be bitwise invisible");
+        assert_eq!(a.comm, b.comm);
+        // Tail plans built on cache miss verify too (asserting internally).
+        on.sweep_len(1, &x, None, Recurrence::Power);
+        assert_eq!(on.plans_built(), 2);
     }
 
     #[test]

@@ -59,6 +59,14 @@ impl ExecutorKind {
 
     /// Check the knob against an already-built distributed matrix (for
     /// callers that cannot re-partition, like [`run`]).
+    ///
+    /// `Threads { n: 0 }` is deliberately *accepted* against any rank
+    /// count: zero is not a thread count but the parse of plain
+    /// `"threads"` — "one thread per already-configured rank" — so it
+    /// matches every matrix by construction (see [`ExecutorKind::ranks`],
+    /// which resolves 0 to the configured default and can never yield a
+    /// zero-rank run). Only an explicit `threads(n)`, which *sets* the
+    /// rank count, can disagree with a prebuilt matrix.
     pub fn validate(&self, n_ranks: usize) -> anyhow::Result<()> {
         if let Self::Threads { n } = self {
             anyhow::ensure!(
@@ -264,6 +272,22 @@ mod tests {
         assert_eq!(ExecutorKind::Threads { n: 3 }.ranks(8), 3);
         assert_eq!(ExecutorKind::Threads { n: 0 }.ranks(8), 8);
         assert_eq!(ExecutorKind::Sim.ranks(8), 8);
+    }
+
+    #[test]
+    fn validate_treats_zero_threads_as_auto() {
+        // `threads` (n = 0) is the auto form: one thread per configured
+        // rank, valid against any prebuilt matrix — including one rank.
+        for n_ranks in [1, 2, 8] {
+            assert!(ExecutorKind::Threads { n: 0 }.validate(n_ranks).is_ok());
+            assert!(ExecutorKind::Sim.validate(n_ranks).is_ok());
+        }
+        // An explicit count must match the matrix exactly.
+        assert!(ExecutorKind::Threads { n: 4 }.validate(4).is_ok());
+        let err = ExecutorKind::Threads { n: 4 }.validate(2).unwrap_err();
+        assert!(err.to_string().contains("threads(4)"), "{err}");
+        // And `ranks` can never resolve the auto form to zero ranks.
+        assert_eq!(ExecutorKind::Threads { n: 0 }.ranks(1), 1);
     }
 
     #[test]

@@ -67,6 +67,10 @@ pub(crate) struct SharedBuf {
     len: usize,
 }
 
+// SAFETY: a plain (ptr, len) pair with no thread affinity. Workers only
+// dereference it via `slice`, whose contract (batch buffers outlive the
+// blocked `run_batch` call; no same-batch write overlaps the read) is what
+// actually keeps cross-thread access sound.
 unsafe impl Send for SharedBuf {}
 
 impl SharedBuf {
@@ -91,6 +95,10 @@ pub(crate) struct SharedBufMut {
     len: usize,
 }
 
+// SAFETY: as for [`SharedBuf`], plus writes: each task writes only the row
+// range/run it owns, and batch tasks own pairwise-disjoint rows (the
+// `parallel_batches` invariant, machine-checked by `crate::verify::alias`),
+// so no two threads ever write the same element.
 unsafe impl Send for SharedBufMut {}
 
 impl SharedBufMut {
@@ -115,6 +123,9 @@ impl SharedBufMut {
 #[derive(Clone, Copy, Debug)]
 pub(crate) struct MatPtr(pub(crate) *const CsrMatrix);
 
+// SAFETY: the matrix is borrowed by the `run_batch` caller for the whole
+// blocking call and never mutated during a sweep; workers perform
+// read-only accesses, which may alias freely.
 unsafe impl Send for MatPtr {}
 
 impl MatPtr {
@@ -130,6 +141,9 @@ pub(crate) struct RowsPtr {
     len: usize,
 }
 
+// SAFETY: read-only (ptr, len) view of a row list that the blocked
+// `run_batch` caller keeps borrowed until every task acks; shared
+// immutable reads from worker threads are sound.
 unsafe impl Send for RowsPtr {}
 
 impl RowsPtr {

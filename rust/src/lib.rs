@@ -42,7 +42,14 @@
 //! * [`perf`] — roofline model (paper Eq. 4), bandwidth measurement, timers.
 //! * [`apps`] — Chebyshev time propagation of the Anderson model (paper §7).
 //! * [`runtime`] — PJRT/XLA execution of the AOT Pallas/JAX artifacts.
+//! * [`verify`] — static race & communication-plan checker: machine-checks
+//!   schedules, halo plans, and the unsafe inner-pool seams at prepare time
+//!   (`MpkEngine::builder().verify_plans(true)`, `dlb-mpk verify`).
 //! * [`coordinator`] — configuration + end-to-end drivers wiring the above.
+
+// Every `unsafe` block and impl must carry a `// SAFETY:` comment stating
+// the invariant it relies on (see `inner` and `matrix::csr`).
+#![warn(clippy::undocumented_unsafe_blocks)]
 
 pub mod apps;
 pub mod cachesim;
@@ -60,3 +67,4 @@ pub mod race;
 pub mod runtime;
 pub mod trace;
 pub mod util;
+pub mod verify;

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   run        run TRAD vs DLB on a matrix and report performance
 //!   ca         run CA-MPK and report its overheads
+//!   verify     statically check plans/schedules, print JSON diagnostics
 //!   suite      list the Table-4 synthetic benchmark suite
 //!   bandwidth  measure the load-only bandwidth ladder (Fig. 7)
 //!   anderson   Chebyshev propagation demo on the Anderson model
@@ -42,6 +43,7 @@ fn real_main() -> Result<()> {
     match cmd.as_str() {
         "run" => cmd_run(&flags),
         "ca" => cmd_ca(&flags),
+        "verify" => cmd_verify(&flags),
         "suite" => cmd_suite(&flags),
         "bandwidth" => cmd_bandwidth(&flags),
         "anderson" => cmd_anderson(&flags),
@@ -65,6 +67,9 @@ fn include_str_usage() -> &'static str {
      COMMANDS:\n\
        run        TRAD vs DLB performance on one matrix\n\
        ca         CA-MPK baseline overheads\n\
+       verify     static race & communication-plan check of the TRAD, CA,\n\
+                  and DLB plans for one configuration; prints a JSON report\n\
+                  and exits nonzero on any diagnostic\n\
        suite      print the Table-4 synthetic suite\n\
        bandwidth  load-only bandwidth ladder (Fig. 7)\n\
        anderson   Chebyshev/Anderson propagation demo (Fig. 11)\n\
@@ -239,6 +244,43 @@ fn cmd_ca(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
+fn cmd_verify(flags: &Flags) -> Result<()> {
+    use dlb_mpk::distsim::DistMatrix;
+    use dlb_mpk::mpk::{ca, dlb};
+    use dlb_mpk::partition::partition;
+    use dlb_mpk::verify::Verifier;
+
+    let cfg = config(flags)?;
+    let a = cfg.matrix.build()?;
+    let part = partition(&a, cfg.n_ranks, cfg.partitioner);
+    let dist = DistMatrix::build(&a, &part);
+    let v = Verifier::with_inner_threads(cfg.inner_threads);
+
+    let trad = v.check_trad(&dist, cfg.p_m);
+    let ca_plan = ca::ca_exec_plan(&a, &dist, cfg.p_m);
+    let ca_rep = v.check_ca(&dist, &ca_plan);
+    let opts = dlb::DlbOptions {
+        cache_bytes: cfg.cache_bytes,
+        s_m: cfg.s_m,
+        async_remainder: cfg.async_remainder,
+    };
+    let plan = dlb::plan(&dist, cfg.p_m, &opts);
+    let dlb_rep = v.check_all(&plan.dist, &plan.ranks, cfg.p_m);
+
+    let ok = trad.is_ok() && ca_rep.is_ok() && dlb_rep.is_ok();
+    println!(
+        "{{\"ok\": {ok}, \"ranks\": {}, \"pm\": {}, \"variants\": {{\"trad\": {}, \"ca\": {}, \
+         \"dlb\": {}}}}}",
+        dist.n_ranks(),
+        cfg.p_m,
+        trad.to_json(),
+        ca_rep.to_json(),
+        dlb_rep.to_json(),
+    );
+    anyhow::ensure!(ok, "static verification found diagnostics (see JSON above)");
+    Ok(())
+}
+
 fn cmd_suite(flags: &Flags) -> Result<()> {
     let scale = flags.f64("scale", 0.25)?;
     println!(
@@ -304,6 +346,7 @@ fn cmd_anderson(flags: &Flags) -> Result<()> {
             backend: BackendSpec::Native,
             trace: trace_out.is_some(),
             inner_threads,
+            ..EngineConfig::default()
         },
     };
     let mut prop = ChebyshevPropagator::new(&h, &dist, ccfg)?;

@@ -348,6 +348,11 @@ pub fn ca_rank(
     comm: &mut dyn Communicator,
     inner: &mut InnerExec,
 ) -> RankRun {
+    debug_assert!(
+        crate::verify::debug_check_rank(r).is_empty(),
+        "ca_rank: halo plans failed verification:\n{}",
+        crate::verify::render(&crate::verify::debug_check_rank(r))
+    );
     let n = a.n_rows();
     let mut prev = vec![0.0; n];
     let mut cur = vec![0.0; n];

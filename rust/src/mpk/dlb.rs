@@ -861,6 +861,11 @@ pub fn dlb_rank(
     inner: &mut InnerExec,
 ) -> RankRun {
     assert!(p_m >= 1);
+    debug_assert!(
+        crate::verify::debug_check_dlb_rank(r, pl).is_empty(),
+        "dlb_rank: plan failed verification:\n{}",
+        crate::verify::render(&crate::verify::debug_check_dlb_rank(r, pl))
+    );
     let mut ys: Vec<Vec<f64>> = Vec::with_capacity(p_m + 1);
     ys.push(x0.to_vec());
     for _ in 0..p_m {

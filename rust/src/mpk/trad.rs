@@ -43,6 +43,11 @@ pub fn trad_rank(
     inner: &mut InnerExec,
 ) -> RankRun {
     assert!(p_m >= 1);
+    debug_assert!(
+        crate::verify::debug_check_rank(r).is_empty(),
+        "trad_rank: halo plans failed verification:\n{}",
+        crate::verify::render(&crate::verify::debug_check_rank(r))
+    );
     let nl = r.n_local();
     let mut ys: Vec<Vec<f64>> = Vec::with_capacity(p_m + 1);
     ys.push(x0.to_vec());

@@ -1,0 +1,249 @@
+//! Analyzer 2 — aliasing checker for inner work splits.
+//!
+//! [`crate::inner`] hands raw-pointer buffer views
+//! (`SharedBuf`/`SharedBufMut`) to concurrent workers; the soundness
+//! argument is that every decomposition a kernel feeds to `run_batch`
+//! writes pairwise-disjoint row sets. This analyzer re-executes each
+//! decomposition the kernels actually use — [`split_range`] chunks over
+//! group/class/full-sweep ranges, [`contiguous_runs`] +
+//! per-run splitting over the async remainder's segment row lists, and
+//! the CA promote round's owned ∪ external row lists — and proves
+//! disjointness and coverage *statically*, before any pointer view is
+//! constructed.
+//!
+//! [`split_range`]: crate::inner::split_range
+//! [`contiguous_runs`]: crate::mpk::dlb::contiguous_runs
+
+use crate::distsim::RankLocal;
+use crate::inner::split_range;
+use crate::mpk::dlb::{contiguous_runs, DlbRankPlan};
+
+use super::{Diagnostic, Rule};
+
+/// Verify `split_range(lo, hi, k)`: non-empty chunks that tile `[lo, hi)`
+/// contiguously — each row written by exactly one worker.
+pub fn check_split(rank: usize, lo: usize, hi: usize, k: usize) -> Vec<Diagnostic> {
+    let what = format!("split_range([{lo}, {hi}), k={k})");
+    check_chunks(rank, &what, &split_range(lo, hi, k), lo, hi)
+}
+
+/// Verify an explicit chunk list against the range it must tile.
+fn check_chunks(
+    rank: usize,
+    what: &str,
+    chunks: &[(usize, usize)],
+    lo: usize,
+    hi: usize,
+) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut next = lo;
+    for &(clo, chi) in chunks {
+        if clo < next {
+            out.push(Diagnostic::new(
+                Rule::AliasSplitOverlap,
+                Some(rank),
+                format!("{what}: chunk [{clo}, {chi}) overlaps rows below {next}"),
+            ));
+            return out;
+        }
+        if clo > next {
+            out.push(Diagnostic::new(
+                Rule::AliasSplitGap,
+                Some(rank),
+                format!("{what}: rows [{next}, {clo}) belong to no chunk"),
+            ));
+            return out;
+        }
+        if chi <= clo {
+            out.push(Diagnostic::new(
+                Rule::AliasSplitGap,
+                Some(rank),
+                format!("{what}: empty chunk at {clo}"),
+            ));
+            return out;
+        }
+        next = chi;
+    }
+    if next != hi {
+        out.push(Diagnostic::new(
+            Rule::AliasSplitGap,
+            Some(rank),
+            format!("{what}: chunks end at {next}, range ends at {hi}"),
+        ));
+    }
+    out
+}
+
+/// Verify the async remainder's run decomposition of a sorted row list:
+/// `contiguous_runs` must reproduce exactly the input rows, the runs must
+/// be disjoint and ascending (two runs sharing a row = two concurrent
+/// writers), and each run must split cleanly for `k` participants.
+pub fn check_runs(rank: usize, what: &str, rows: &[u32], k: usize) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    // `contiguous_runs` assumes a sorted, duplicate-free list; a duplicate
+    // row yields two overlapping runs (two concurrent writers), and an
+    // out-of-order list breaks the run reconstruction entirely.
+    for w in rows.windows(2) {
+        if w[1] == w[0] {
+            out.push(Diagnostic::new(
+                Rule::AliasSplitOverlap,
+                Some(rank),
+                format!("{what}: row {} listed twice — two workers would write it", w[0]),
+            ));
+            return out;
+        }
+        if w[1] < w[0] {
+            out.push(Diagnostic::new(
+                Rule::AliasRunsMismatch,
+                Some(rank),
+                format!(
+                    "{what}: rows {} then {} out of order — contiguous_runs assumes ascending",
+                    w[0], w[1]
+                ),
+            ));
+            return out;
+        }
+    }
+    let runs = contiguous_runs(rows);
+    let flat: Vec<u32> = runs.iter().flat_map(|&(lo, hi)| (lo as u32..hi as u32)).collect();
+    if flat != rows {
+        out.push(Diagnostic::new(
+            Rule::AliasRunsMismatch,
+            Some(rank),
+            format!(
+                "{what}: contiguous_runs covers {} rows, input lists {} (content differs)",
+                flat.len(),
+                rows.len()
+            ),
+        ));
+        return out;
+    }
+    for &(lo, hi) in &runs {
+        out.extend(check_split(rank, lo, hi, k));
+    }
+    out
+}
+
+/// Verify every decomposition the DLB kernel feeds its inner pool: the
+/// phase-2 group ranges and phase-3 class ranges (range splits), and the
+/// async remainder's per-segment and multi-peer row lists (run splits).
+pub fn check_dlb_alias(
+    rank: usize,
+    _r: &RankLocal,
+    pl: &DlbRankPlan,
+    k: usize,
+) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for &(lo, hi) in &pl.ranges {
+        out.extend(check_split(rank, lo, hi, k));
+    }
+    for &(lo, hi) in &pl.class_ranges {
+        out.extend(check_split(rank, lo, hi, k));
+    }
+    for (j, rows) in pl.seg_rows.iter().enumerate() {
+        out.extend(check_runs(rank, &format!("seg_rows[{j}]"), rows, k));
+    }
+    out.extend(check_runs(rank, "multi_rows", &pl.multi_rows, k));
+    out
+}
+
+/// Verify the CA promote round's row lists: `run_ca_round` splits the
+/// owned list plus every still-live external class into concurrent tasks,
+/// so a row appearing in two of those lists would be written by two
+/// workers in the same batch.
+pub fn check_ca_alias(
+    rank: usize,
+    owned: &[usize],
+    ext: &[Vec<usize>],
+    p_m: usize,
+    k: usize,
+) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    // Lists live in at least one round p >= 1: owned always; class `E_kx`
+    // while p <= p_m - 1 - kx, i.e. iff its target is >= 1.
+    let mut lists: Vec<(String, &[usize])> = vec![("owned".into(), owned)];
+    for (kx, cls) in ext.iter().enumerate() {
+        if p_m.saturating_sub(1).saturating_sub(kx) >= 1 {
+            lists.push((format!("ext[{kx}]"), cls));
+        }
+    }
+    let mut seen: std::collections::BTreeMap<usize, usize> = std::collections::BTreeMap::new();
+    for (li, (name, rows)) in lists.iter().enumerate() {
+        for &g in rows.iter() {
+            if let Some(&prev) = seen.get(&g) {
+                out.push(Diagnostic::new(
+                    Rule::AliasCaRowsOverlap,
+                    Some(rank),
+                    format!(
+                        "row {g} appears in both {} and {name}: two same-round tasks would \
+                         write it",
+                        lists[prev].0
+                    ),
+                ));
+                return out;
+            }
+            seen.insert(g, li);
+        }
+        out.extend(check_split(rank, 0, rows.len(), k));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_range_decompositions_pass() {
+        for (lo, hi) in [(0usize, 0usize), (0, 1), (3, 17), (0, 1000)] {
+            for k in 1..=6 {
+                let diags = check_split(7, lo, hi, k);
+                assert!(diags.is_empty(), "[{lo},{hi}) k={k}: {}", super::super::render(&diags));
+            }
+        }
+    }
+
+    #[test]
+    fn bad_chunk_lists_are_rejected() {
+        assert!(check_chunks(0, "t", &[(0, 5), (4, 8)], 0, 8)
+            .iter()
+            .any(|d| d.rule == Rule::AliasSplitOverlap));
+        assert!(check_chunks(0, "t", &[(0, 3), (5, 8)], 0, 8)
+            .iter()
+            .any(|d| d.rule == Rule::AliasSplitGap));
+        assert!(check_chunks(0, "t", &[(0, 3)], 0, 8)
+            .iter()
+            .any(|d| d.rule == Rule::AliasSplitGap));
+    }
+
+    #[test]
+    fn run_decompositions_pass_and_reject_duplicates() {
+        assert!(check_runs(0, "t", &[3, 4, 5, 9, 20, 21], 3).is_empty());
+        assert!(check_runs(0, "t", &[], 2).is_empty());
+        // a duplicated row produces two overlapping runs
+        let diags = check_runs(0, "t", &[3, 4, 4], 2);
+        assert!(
+            diags
+                .iter()
+                .any(|d| matches!(d.rule, Rule::AliasSplitOverlap | Rule::AliasRunsMismatch)),
+            "{}",
+            super::super::render(&diags)
+        );
+        // an unsorted list cannot round-trip through contiguous_runs
+        let diags = check_runs(0, "t", &[9, 3], 2);
+        assert!(diags.iter().any(|d| d.rule == Rule::AliasRunsMismatch));
+    }
+
+    #[test]
+    fn ca_overlapping_lists_are_rejected() {
+        let owned = vec![0usize, 1, 2];
+        let ext = vec![vec![3usize, 4], vec![5, 6]];
+        assert!(check_ca_alias(0, &owned, &ext, 3, 2).is_empty());
+        let bad = vec![vec![2usize, 4], vec![5, 6]]; // row 2 also owned
+        let diags = check_ca_alias(0, &owned, &bad, 3, 2);
+        assert!(diags.iter().any(|d| d.rule == Rule::AliasCaRowsOverlap));
+        // a class past its target is never computed, so overlap there is fine
+        let dead = vec![vec![3usize, 4], vec![5, 6], vec![2]]; // ext[2] target 0
+        assert!(check_ca_alias(0, &owned, &dead, 3, 2).is_empty());
+    }
+}

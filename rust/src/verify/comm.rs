@@ -1,0 +1,618 @@
+//! Analyzer 3 — communication-plan checker.
+//!
+//! Three layers, all static:
+//!
+//! * **Plan matching** ([`check_dist`], [`check_ca_plans`]): every send
+//!   plan meets exactly one recv plan at its destination (peer + length),
+//!   and they agree on *which* global rows travel — the sender's
+//!   `owned[rows]` ids must equal the receiver's `halo_globals[slots]`
+//!   slot-for-slot. Recv plans must tile the halo exactly and name the
+//!   true owner of every slot.
+//! * **Progress** ([`check_progress`]): a round-ordered fixpoint
+//!   simulation of the blocking semantics — rank `i` completes round `t`
+//!   only when every peer it receives from has posted its round-`t` send
+//!   (i.e. has itself completed rounds `0..t`). Transports buffer sends,
+//!   so posting never blocks; a rank that the fixpoint leaves short of
+//!   `n_rounds` is deadlocked, and the diagnostic carries the wait-for
+//!   chain. The model is conservative for DLB's early posting (phase-2
+//!   `y_1` sends and async next-round sends go out *earlier* than the
+//!   model assumes), so a pass here implies progress on the real paths.
+//! * **Tag discipline** ([`check_tag_rounds`] over [`RoundSpec`]
+//!   sequences): within one sweep a `(peer, tag)` pair must be unique
+//!   between barriers, or a late message from round `t` could satisfy a
+//!   receive of round `t' > t`. The barrier-free async remainder drops
+//!   intermediate barriers ([`Communicator::advance_round`]) but must
+//!   still barrier the sweep's final round — otherwise the *next* sweep's
+//!   tag 0 could match this sweep's in-flight traffic.
+//!
+//! [`Communicator::advance_round`]: crate::exec::comm::Communicator::advance_round
+
+use crate::distsim::{DistMatrix, RankLocal};
+use crate::mpk::ca::CaExecPlan;
+
+use super::{Diagnostic, Rule};
+
+/// Per-rank facts checkable without the other ranks — the
+/// `debug_assert!` subset run inside the kernels.
+pub fn check_rank_local(rank: usize, r: &RankLocal) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let nl = r.n_local();
+
+    let mut seen_to = std::collections::BTreeSet::new();
+    for sp in &r.send {
+        if sp.to == rank {
+            out.push(Diagnostic::new(
+                Rule::CommSelfMessage,
+                Some(rank),
+                format!("send plan targets rank {rank} itself"),
+            ));
+        }
+        if !seen_to.insert(sp.to) {
+            out.push(Diagnostic::new(
+                Rule::CommDuplicatePlan,
+                Some(rank),
+                format!("two send plans target rank {}", sp.to),
+            ));
+        }
+        for &row in &sp.rows {
+            if row as usize >= nl {
+                out.push(Diagnostic::new(
+                    Rule::CommSendRowRange,
+                    Some(rank),
+                    format!("send to {} ships local row {row} >= n_local {nl}", sp.to),
+                ));
+                break;
+            }
+        }
+    }
+
+    let mut seen_from = std::collections::BTreeSet::new();
+    let mut next = 0usize;
+    for rp in &r.recv {
+        if rp.from == rank {
+            out.push(Diagnostic::new(
+                Rule::CommSelfMessage,
+                Some(rank),
+                format!("recv plan names rank {rank} itself as source"),
+            ));
+        }
+        if !seen_from.insert(rp.from) {
+            out.push(Diagnostic::new(
+                Rule::CommDuplicatePlan,
+                Some(rank),
+                format!("two recv plans name rank {} as source", rp.from),
+            ));
+        }
+        if rp.slots.start < next {
+            out.push(Diagnostic::new(
+                Rule::CommSlotOverlap,
+                Some(rank),
+                format!(
+                    "recv from {} claims slots [{}, {}) overlapping the previous plan's end {next}",
+                    rp.from, rp.slots.start, rp.slots.end
+                ),
+            ));
+        } else if rp.slots.start > next {
+            out.push(Diagnostic::new(
+                Rule::CommSlotGap,
+                Some(rank),
+                format!(
+                    "halo slots [{next}, {}) filled by no recv plan (next is from {})",
+                    rp.slots.start, rp.from
+                ),
+            ));
+        }
+        next = next.max(rp.slots.end);
+    }
+    if next != r.n_halo() {
+        out.push(Diagnostic::new(
+            Rule::CommSlotGap,
+            Some(rank),
+            format!("recv plans end at slot {next}, halo has {} slots", r.n_halo()),
+        ));
+    }
+    out
+}
+
+/// Cross-rank matching of the halo exchange plans (see module docs).
+pub fn check_dist(dist: &DistMatrix) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let nr = dist.n_ranks();
+    let mut peers_ok = true;
+    for r in &dist.ranks {
+        out.extend(check_rank_local(r.rank, r));
+        for sp in &r.send {
+            if sp.to >= nr {
+                peers_ok = false;
+                out.push(Diagnostic::new(
+                    Rule::CommPeerRange,
+                    Some(r.rank),
+                    format!("send plan targets rank {} of {nr}", sp.to),
+                ));
+            }
+        }
+        for rp in &r.recv {
+            if rp.from >= nr {
+                peers_ok = false;
+                out.push(Diagnostic::new(
+                    Rule::CommPeerRange,
+                    Some(r.rank),
+                    format!("recv plan names source rank {} of {nr}", rp.from),
+                ));
+            }
+        }
+    }
+    if !peers_ok {
+        return out; // matching below indexes ranks by peer id
+    }
+
+    for s in &dist.ranks {
+        for sp in &s.send {
+            let d = &dist.ranks[sp.to];
+            let Some(rp) = d.recv.iter().find(|rp| rp.from == s.rank) else {
+                out.push(Diagnostic::new(
+                    Rule::CommSendUnmatched,
+                    Some(s.rank),
+                    format!("send to {} has no recv plan at the destination", sp.to),
+                ));
+                continue;
+            };
+            if sp.rows.len() != rp.slots.len() {
+                out.push(Diagnostic::new(
+                    Rule::CommLenMismatch,
+                    None,
+                    format!(
+                        "{} -> {}: send ships {} values, recv expects {}",
+                        s.rank,
+                        sp.to,
+                        sp.rows.len(),
+                        rp.slots.len()
+                    ),
+                ));
+                continue;
+            }
+            for (i, (&row, slot)) in sp.rows.iter().zip(rp.slots.clone()).enumerate() {
+                // out-of-range rows/slots already carry their own diagnostic
+                let (Some(&sent), Some(&want)) =
+                    (s.owned.get(row as usize), d.halo_globals.get(slot))
+                else {
+                    break;
+                };
+                if sent != want {
+                    out.push(Diagnostic::new(
+                        Rule::CommPayloadMismatch,
+                        None,
+                        format!(
+                            "{} -> {} element {i}: sender ships global {sent} into a slot \
+                             expecting global {want}",
+                            s.rank, sp.to,
+                        ),
+                    ));
+                    break;
+                }
+            }
+        }
+        for rp in &s.recv {
+            if !dist.ranks[rp.from].send.iter().any(|sp| sp.to == s.rank) {
+                out.push(Diagnostic::new(
+                    Rule::CommRecvUnmatched,
+                    Some(s.rank),
+                    format!("recv from {} has no send plan at the source", rp.from),
+                ));
+            }
+            for slot in rp.slots.clone() {
+                let Some(&g) = s.halo_globals.get(slot) else {
+                    break; // slot range past the halo: already a CommSlotGap
+                };
+                if dist.owner_of[g] as usize != rp.from {
+                    out.push(Diagnostic::new(
+                        Rule::CommSlotOwner,
+                        Some(s.rank),
+                        format!(
+                            "halo slot {slot} holds global {g} owned by rank {}, but the recv \
+                             plan names {}",
+                            dist.owner_of[g], rp.from
+                        ),
+                    ));
+                    break;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Round-ordered progress simulation over a per-rank peer adjacency
+/// (`sends[i]` / `recvs[i]` = peers rank `i` sends to / receives from in
+/// *every* round — all three kernels reuse one plan set across rounds).
+/// Ranks left short of `n_rounds` at the fixpoint are deadlocked.
+pub fn check_progress(
+    sends: &[Vec<usize>],
+    recvs: &[Vec<usize>],
+    n_rounds: usize,
+) -> Vec<Diagnostic> {
+    let nr = sends.len();
+    assert_eq!(recvs.len(), nr);
+    let mut pos = vec![0usize; nr];
+    // The blocking peer of rank i at its current round, or None if i can
+    // advance: the first recv peer that has not posted the matching send.
+    let blocker = |i: usize, pos: &[usize]| -> Option<usize> {
+        recvs[i]
+            .iter()
+            .copied()
+            .find(|&j| j >= nr || !sends[j].contains(&i) || pos[j] < pos[i])
+    };
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for i in 0..nr {
+            while pos[i] < n_rounds && blocker(i, &pos).is_none() {
+                pos[i] += 1;
+                changed = true;
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for i in 0..nr {
+        if pos[i] >= n_rounds {
+            continue;
+        }
+        // Wait-for chain from i: follow blockers until repetition (a wait
+        // cycle) or a peer that simply never sends.
+        let mut chain = vec![i];
+        let mut cur = i;
+        loop {
+            match blocker(cur, &pos) {
+                Some(j) if j < nr && sends[j].contains(&cur) => {
+                    if chain.contains(&j) {
+                        chain.push(j);
+                        break;
+                    }
+                    chain.push(j);
+                    cur = j;
+                }
+                Some(j) => {
+                    chain.push(j);
+                    out.push(Diagnostic::new(
+                        Rule::CommDeadlock,
+                        Some(i),
+                        format!(
+                            "rank {i} blocks forever in round {} waiting on rank {j}, which \
+                             has no send plan for it (chain {chain:?})",
+                            pos[i]
+                        ),
+                    ));
+                    return out;
+                }
+                None => break, // pos advanced meanwhile; shouldn't happen at fixpoint
+            }
+        }
+        out.push(Diagnostic::new(
+            Rule::CommDeadlock,
+            Some(i),
+            format!("rank {i} stuck at round {} of {n_rounds}; wait-for chain {chain:?}", pos[i]),
+        ));
+        return out; // one chain explains the stall; avoid n_ranks duplicates
+    }
+    out
+}
+
+/// [`check_progress`] with the adjacency read off a [`DistMatrix`]'s halo
+/// plans (TRAD rounds, DLB phases 1 and 3).
+pub fn check_progress_dist(dist: &DistMatrix, n_rounds: usize) -> Vec<Diagnostic> {
+    let sends: Vec<Vec<usize>> =
+        dist.ranks.iter().map(|r| r.send.iter().map(|sp| sp.to).collect()).collect();
+    let recvs: Vec<Vec<usize>> =
+        dist.ranks.iter().map(|r| r.recv.iter().map(|rp| rp.from).collect()).collect();
+    check_progress(&sends, &recvs, n_rounds)
+}
+
+/// One communication round of a sweep, as the tag-discipline model sees
+/// it: which tag its messages carry and whether the round closes with a
+/// barrier (`end_round`) or barrier-free (`advance_round`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RoundSpec {
+    pub tag: u64,
+    pub barrier_after: bool,
+}
+
+/// TRAD's sweep: round `p ∈ 1..=p_m` exchanges tag `p − 1`; every
+/// exchange ends in `wait_halo`, which barriers.
+pub fn trad_rounds(p_m: usize) -> Vec<RoundSpec> {
+    (1..=p_m).map(|p| RoundSpec { tag: (p - 1) as u64, barrier_after: true }).collect()
+}
+
+/// CA's sweep: one extended exchange on tag 0, explicitly `end_round`ed.
+pub fn ca_rounds() -> Vec<RoundSpec> {
+    vec![RoundSpec { tag: 0, barrier_after: true }]
+}
+
+/// DLB's sweep: phase 1 on tag 0 (barriered), then remainder round
+/// `p ∈ 1..p_m` on tag `p`. The sync path barriers every round via
+/// `wait_halo`; the async path closes intermediate rounds with
+/// `advance_round` and barriers only the final round.
+pub fn dlb_rounds(p_m: usize, async_remainder: bool) -> Vec<RoundSpec> {
+    let mut rounds = vec![RoundSpec { tag: 0, barrier_after: true }];
+    for p in 1..p_m {
+        let last = p == p_m - 1;
+        rounds.push(RoundSpec { tag: p as u64, barrier_after: !async_remainder || last });
+    }
+    rounds
+}
+
+/// Cross-sweep tag safety: no tag repeats between barriers, and no tags
+/// may remain live when the sweep ends (the next sweep restarts at tag 0).
+pub fn check_tag_rounds(rounds: &[RoundSpec]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut live: Vec<u64> = Vec::new();
+    for (i, r) in rounds.iter().enumerate() {
+        if live.contains(&r.tag) {
+            out.push(Diagnostic::new(
+                Rule::CommTagReuse,
+                None,
+                format!("round {i} reuses tag {} with no barrier since its last use", r.tag),
+            ));
+        }
+        live.push(r.tag);
+        if r.barrier_after {
+            live.clear();
+        }
+    }
+    if !live.is_empty() {
+        out.push(Diagnostic::new(
+            Rule::CommNoFinalBarrier,
+            None,
+            format!(
+                "sweep ends with tags {live:?} unfenced; the next sweep's identical tags \
+                 could match this sweep's in-flight messages"
+            ),
+        ));
+    }
+    out
+}
+
+/// CA's extended-exchange plan: exactly-once peer matching, payload
+/// agreement (`local_of[gid] == row`, `owner_of[gid] == sender`), external
+/// classes covered by the receives, and single-round progress.
+pub fn check_ca_plans(dist: &DistMatrix, plan: &CaExecPlan) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let nr = dist.n_ranks();
+    if plan.sends.len() != nr || plan.recvs.len() != nr || plan.ext.len() != nr {
+        out.push(Diagnostic::new(
+            Rule::CommPeerRange,
+            None,
+            format!(
+                "plan covers {}/{}/{} ranks (sends/recvs/ext), dist has {nr}",
+                plan.sends.len(),
+                plan.recvs.len(),
+                plan.ext.len()
+            ),
+        ));
+        return out;
+    }
+
+    for i in 0..nr {
+        let mut seen = std::collections::BTreeSet::new();
+        for (peer, _) in &plan.sends[i] {
+            if *peer >= nr || *peer == i {
+                out.push(Diagnostic::new(
+                    if *peer == i { Rule::CommSelfMessage } else { Rule::CommPeerRange },
+                    Some(i),
+                    format!("CA send plan names peer {peer}"),
+                ));
+            } else if !seen.insert(*peer) {
+                out.push(Diagnostic::new(
+                    Rule::CommDuplicatePlan,
+                    Some(i),
+                    format!("two CA send plans target rank {peer}"),
+                ));
+            }
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for (peer, gids) in &plan.recvs[i] {
+            if *peer >= nr || *peer == i {
+                out.push(Diagnostic::new(
+                    if *peer == i { Rule::CommSelfMessage } else { Rule::CommPeerRange },
+                    Some(i),
+                    format!("CA recv plan names peer {peer}"),
+                ));
+                continue;
+            }
+            if !seen.insert(*peer) {
+                out.push(Diagnostic::new(
+                    Rule::CommDuplicatePlan,
+                    Some(i),
+                    format!("two CA recv plans name rank {peer} as source"),
+                ));
+            }
+            for &g in gids {
+                match dist.owner_of.get(g) {
+                    Some(&o) if o as usize == *peer => {}
+                    Some(&o) => {
+                        out.push(Diagnostic::new(
+                            Rule::CommSlotOwner,
+                            Some(i),
+                            format!("CA recv from {peer} lists global {g} owned by rank {o}"),
+                        ));
+                        break;
+                    }
+                    None => {
+                        out.push(Diagnostic::new(
+                            Rule::CommSlotOwner,
+                            Some(i),
+                            format!(
+                                "CA recv from {peer} lists global {g} >= n_global {}",
+                                dist.n_global
+                            ),
+                        ));
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    if !out.is_empty() {
+        return out;
+    }
+
+    for s in 0..nr {
+        for (d, rows) in &plan.sends[s] {
+            let Some((_, gids)) = plan.recvs[*d].iter().find(|(p, _)| *p == s) else {
+                out.push(Diagnostic::new(
+                    Rule::CommSendUnmatched,
+                    Some(s),
+                    format!("CA send to {d} has no recv plan at the destination"),
+                ));
+                continue;
+            };
+            if rows.len() != gids.len() {
+                out.push(Diagnostic::new(
+                    Rule::CommLenMismatch,
+                    None,
+                    format!(
+                        "CA {s} -> {d}: send ships {} values, recv expects {}",
+                        rows.len(),
+                        gids.len()
+                    ),
+                ));
+                continue;
+            }
+            for (i, (&row, &g)) in rows.iter().zip(gids).enumerate() {
+                if dist.local_of[g] != row {
+                    out.push(Diagnostic::new(
+                        Rule::CommPayloadMismatch,
+                        None,
+                        format!(
+                            "CA {s} -> {d} element {i}: send reads local row {row}, receiver \
+                             expects global {g} (local {})",
+                            dist.local_of[g]
+                        ),
+                    ));
+                    break;
+                }
+            }
+        }
+        for (peer, _) in &plan.recvs[s] {
+            if !plan.sends[*peer].iter().any(|(d, _)| *d == s) {
+                out.push(Diagnostic::new(
+                    Rule::CommRecvUnmatched,
+                    Some(s),
+                    format!("CA recv from {peer} has no send plan at the source"),
+                ));
+            }
+        }
+
+        // coverage: the receives must deliver the external classes exactly
+        let mut want: Vec<usize> = plan.ext[s].iter().flatten().copied().collect();
+        want.sort_unstable();
+        let mut got: Vec<usize> =
+            plan.recvs[s].iter().flat_map(|(_, gids)| gids.iter().copied()).collect();
+        got.sort_unstable();
+        if want != got {
+            out.push(Diagnostic::new(
+                Rule::CaExtCoverage,
+                Some(s),
+                format!(
+                    "external classes need {} values, recv plans deliver {} (sets differ)",
+                    want.len(),
+                    got.len()
+                ),
+            ));
+        }
+    }
+
+    let sends: Vec<Vec<usize>> =
+        plan.sends.iter().map(|v| v.iter().map(|&(d, _)| d).collect()).collect();
+    let recvs: Vec<Vec<usize>> =
+        plan.recvs.iter().map(|v| v.iter().map(|&(p, _)| p).collect()).collect();
+    out.extend(check_progress(&sends, &recvs, 1));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::partition::{partition, Method};
+
+    fn dist(np: usize) -> DistMatrix {
+        let a = gen::stencil_2d_5pt(10, 10);
+        let p = partition(&a, np, Method::Block);
+        DistMatrix::build(&a, &p)
+    }
+
+    #[test]
+    fn built_dist_passes() {
+        for np in [1, 2, 4] {
+            let d = dist(np);
+            let diags = check_dist(&d);
+            assert!(diags.is_empty(), "np={np}: {}", super::super::render(&diags));
+            assert!(check_progress_dist(&d, 4).is_empty());
+        }
+    }
+
+    #[test]
+    fn dropped_recv_is_unmatched_with_a_slot_gap() {
+        let mut d = dist(3);
+        let victim = d.ranks.iter().position(|r| !r.recv.is_empty()).unwrap();
+        d.ranks[victim].recv.remove(0);
+        let diags = check_dist(&d);
+        assert!(diags.iter().any(|x| x.rule == Rule::CommSendUnmatched));
+        assert!(diags.iter().any(|x| x.rule == Rule::CommSlotGap));
+    }
+
+    #[test]
+    fn dropped_send_deadlocks() {
+        let mut d = dist(2);
+        let victim = d.ranks.iter().position(|r| !r.send.is_empty()).unwrap();
+        d.ranks[victim].send.remove(0);
+        assert!(check_dist(&d).iter().any(|x| x.rule == Rule::CommRecvUnmatched));
+        let diags = check_progress_dist(&d, 1);
+        assert!(
+            diags.iter().any(|x| x.rule == Rule::CommDeadlock),
+            "{}",
+            super::super::render(&diags)
+        );
+    }
+
+    #[test]
+    fn tag_models_are_safe() {
+        for p_m in 1..=4 {
+            assert!(check_tag_rounds(&trad_rounds(p_m)).is_empty());
+            assert!(check_tag_rounds(&dlb_rounds(p_m, false)).is_empty());
+            assert!(check_tag_rounds(&dlb_rounds(p_m, true)).is_empty());
+        }
+        assert!(check_tag_rounds(&ca_rounds()).is_empty());
+    }
+
+    #[test]
+    fn tag_mutations_are_rejected() {
+        // reuse a tag across two barrier-free rounds
+        let mut rounds = dlb_rounds(4, true);
+        rounds[2].tag = rounds[1].tag;
+        let diags = check_tag_rounds(&rounds);
+        assert!(diags.iter().any(|x| x.rule == Rule::CommTagReuse));
+
+        // drop the sweep-final barrier
+        let mut rounds = dlb_rounds(3, true);
+        rounds.last_mut().unwrap().barrier_after = false;
+        let diags = check_tag_rounds(&rounds);
+        assert!(diags.iter().any(|x| x.rule == Rule::CommNoFinalBarrier));
+    }
+
+    #[test]
+    fn ca_plans_pass_and_reject_mutations() {
+        let a = gen::stencil_2d_5pt(10, 10);
+        let p = partition(&a, 3, Method::Block);
+        let d = DistMatrix::build(&a, &p);
+        let plan = crate::mpk::ca::ca_exec_plan(&a, &d, 3);
+        assert!(check_ca_plans(&d, &plan).is_empty());
+
+        let mut bad = crate::mpk::ca::ca_exec_plan(&a, &d, 3);
+        let victim = bad.recvs.iter().position(|v| !v.is_empty()).unwrap();
+        bad.recvs[victim].remove(0);
+        let diags = check_ca_plans(&d, &bad);
+        assert!(diags.iter().any(|x| x.rule == Rule::CommSendUnmatched));
+        assert!(diags.iter().any(|x| x.rule == Rule::CaExtCoverage));
+    }
+}

@@ -1,0 +1,386 @@
+//! Static race & communication-plan verification.
+//!
+//! The kernels' safety rests on *structural* claims: wavefront batches are
+//! pairwise independent (so [`crate::inner`]'s raw-pointer views never
+//! alias a concurrent write), every send plan meets exactly one matching
+//! recv plan (so the transports' `(from, tag)` matching delivers exactly
+//! once, deadlock-free), and DLB's async remainder split
+//! (`seg_rows`/`multi_rows`) partitions class `I_1` with each segment
+//! reading only its feeding peer's halo slots. All of these are decidable
+//! from the level structure and the plans alone — the same observation the
+//! paper's level-based dependency analysis (RACE's reachability rule)
+//! builds on — so this module checks them *before execution*, every time.
+//!
+//! Four analyzers, each returning [`Diagnostic`]s with stable rule IDs and
+//! a concrete counterexample (the conflicting steps / rows / peers):
+//!
+//! 1. [`schedule`] — schedule race detector: machine-checks the
+//!    hand-argued batching rules of [`crate::race::schedule`] (same-power
+//!    row-disjointness, Δp = 1 level-window separation, Δp = 2 `prev2`
+//!    row-disjointness) and that the batch concatenation is a valid capped
+//!    schedule.
+//! 2. [`alias`] — aliasing checker for inner splits: every
+//!    `InnerWork::{Range,Rows}` decomposition (`split_range`,
+//!    `contiguous_runs`, CA promote rounds) writes disjoint row sets per
+//!    worker before any raw-pointer view exists.
+//! 3. [`comm`] — communication-plan checker: exactly-once send/recv
+//!    matching across ranks, payload/byte agreement, halo-slot tiling, a
+//!    round-ordered progress simulation that detects deadlock, and the
+//!    cross-sweep tag discipline of the barrier-free async path.
+//! 4. [`partition`] — DLB partition checker: `seg_rows[j] ∪ multi_rows`
+//!    exactly partitions `class_ranges[0]` and each `seg_rows[j]` row
+//!    reads only halo slots owned by recv plan `j`.
+//!
+//! Entry points: [`Verifier::check_all`] (full DLB plan),
+//! [`Verifier::check_trad`] / [`Verifier::check_ca`], all wired into
+//! [`crate::engine::MpkEngine`] prepare time behind
+//! `MpkEngine::builder().verify_plans(true)` (default-on in debug builds)
+//! and the `dlb-mpk verify` CLI subcommand. Verification never runs on the
+//! sweep hot path.
+
+pub mod alias;
+pub mod comm;
+pub mod partition;
+pub mod schedule;
+
+use crate::distsim::DistMatrix;
+use crate::mpk::ca::CaExecPlan;
+use crate::mpk::dlb::DlbRankPlan;
+
+/// Stable rule identifiers — one per checked invariant. Negative tests
+/// (`rust/tests/verify_negative.rs`) assert on [`Rule::id`] strings, so
+/// these names are part of the crate's diagnostic contract: never renumber
+/// or reuse them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rule {
+    // -- schedule race detector -----------------------------------------
+    /// Group ranges do not tile `[0, n_local)` contiguously.
+    SchedGroupRanges,
+    /// A step advances a group by more than one power.
+    SchedPowerJump,
+    /// A step runs before a dependency group reached `power - 1`.
+    SchedDepUnmet,
+    /// A group's final power differs from its cap.
+    SchedIncomplete,
+    /// Batches flatten to a different step multiset than the schedule.
+    SchedBatchMismatch,
+    /// One batch contains the same group twice.
+    SchedBatchSameGroup,
+    /// Same-batch steps with `Δp ∈ {0, 2}` write/read overlapping rows.
+    SchedBatchRowOverlap,
+    /// Same-batch steps one power apart whose level spans are adjacent
+    /// (the writer intersects the reader's ±1 dependency window).
+    SchedBatchAdjLevels,
+    // -- inner-split aliasing checker -----------------------------------
+    /// A split emits overlapping chunks (two workers would write one row).
+    AliasSplitOverlap,
+    /// A split loses rows (chunks do not cover the input range).
+    AliasSplitGap,
+    /// `contiguous_runs` does not reproduce its input row list exactly.
+    AliasRunsMismatch,
+    /// CA promote-round row lists (owned ∪ live external classes) overlap.
+    AliasCaRowsOverlap,
+    // -- communication-plan checker -------------------------------------
+    /// A plan names the rank itself as peer.
+    CommSelfMessage,
+    /// A plan names a peer outside `[0, n_ranks)`.
+    CommPeerRange,
+    /// Two plans for the same (rank, peer) direction.
+    CommDuplicatePlan,
+    /// A send plan has no matching recv plan at the destination.
+    CommSendUnmatched,
+    /// A recv plan has no matching send plan at the source.
+    CommRecvUnmatched,
+    /// Matched send/recv plans disagree on element count.
+    CommLenMismatch,
+    /// Matched plans disagree on *which* global rows travel.
+    CommPayloadMismatch,
+    /// A send plan row index is outside the sender's local rows.
+    CommSendRowRange,
+    /// Two recv plans claim the same halo slot.
+    CommSlotOverlap,
+    /// Halo slots not covered by any recv plan.
+    CommSlotGap,
+    /// A recv plan's slots hold globals not owned by its source peer.
+    CommSlotOwner,
+    /// The round-ordered progress simulation stalls: some rank blocks
+    /// forever on a receive no peer ever posts (missing send or wait
+    /// cycle).
+    CommDeadlock,
+    /// A tag is reused within one sweep without an intervening barrier.
+    CommTagReuse,
+    /// The sweep's final round closes without a barrier, so the next
+    /// sweep's tag reuse could match this sweep's in-flight messages.
+    CommNoFinalBarrier,
+    // -- CA exchange-plan checker ---------------------------------------
+    /// The CA recv plans do not cover the external classes exactly once.
+    CaExtCoverage,
+    // -- DLB partition checker ------------------------------------------
+    /// `seg_rows` has a different peer count than the recv plans.
+    DlbSegCount,
+    /// A segment row list is not sorted ascending.
+    DlbSegUnsorted,
+    /// A row appears in two segments (or a segment and `multi_rows`).
+    DlbPartitionOverlap,
+    /// A class-`I_1` row appears in no segment and not in `multi_rows`.
+    DlbPartitionGap,
+    /// A segment/multi row lies outside `class_ranges[0]`.
+    DlbPartitionRange,
+    /// A `seg_rows[j]` row reads a halo slot owned by a different peer.
+    DlbSegForeignSlot,
+}
+
+impl Rule {
+    /// The stable diagnostic identifier (see the enum docs).
+    pub const fn id(self) -> &'static str {
+        match self {
+            Self::SchedGroupRanges => "SCHED_GROUP_RANGES",
+            Self::SchedPowerJump => "SCHED_POWER_JUMP",
+            Self::SchedDepUnmet => "SCHED_DEP_UNMET",
+            Self::SchedIncomplete => "SCHED_INCOMPLETE",
+            Self::SchedBatchMismatch => "SCHED_BATCH_STEP_MISMATCH",
+            Self::SchedBatchSameGroup => "SCHED_BATCH_SAME_GROUP",
+            Self::SchedBatchRowOverlap => "SCHED_BATCH_ROW_OVERLAP",
+            Self::SchedBatchAdjLevels => "SCHED_BATCH_ADJ_LEVELS",
+            Self::AliasSplitOverlap => "ALIAS_SPLIT_OVERLAP",
+            Self::AliasSplitGap => "ALIAS_SPLIT_GAP",
+            Self::AliasRunsMismatch => "ALIAS_RUNS_MISMATCH",
+            Self::AliasCaRowsOverlap => "ALIAS_CA_ROWS_OVERLAP",
+            Self::CommSelfMessage => "COMM_SELF_MESSAGE",
+            Self::CommPeerRange => "COMM_PEER_RANGE",
+            Self::CommDuplicatePlan => "COMM_DUPLICATE_PLAN",
+            Self::CommSendUnmatched => "COMM_SEND_UNMATCHED",
+            Self::CommRecvUnmatched => "COMM_RECV_UNMATCHED",
+            Self::CommLenMismatch => "COMM_LEN_MISMATCH",
+            Self::CommPayloadMismatch => "COMM_PAYLOAD_MISMATCH",
+            Self::CommSendRowRange => "COMM_SEND_ROW_RANGE",
+            Self::CommSlotOverlap => "COMM_SLOT_OVERLAP",
+            Self::CommSlotGap => "COMM_SLOT_GAP",
+            Self::CommSlotOwner => "COMM_SLOT_OWNER",
+            Self::CommDeadlock => "COMM_DEADLOCK",
+            Self::CommTagReuse => "COMM_TAG_REUSE",
+            Self::CommNoFinalBarrier => "COMM_NO_FINAL_BARRIER",
+            Self::CaExtCoverage => "CA_EXT_COVERAGE",
+            Self::DlbSegCount => "DLB_SEG_COUNT",
+            Self::DlbSegUnsorted => "DLB_SEG_UNSORTED",
+            Self::DlbPartitionOverlap => "DLB_PARTITION_OVERLAP",
+            Self::DlbPartitionGap => "DLB_PARTITION_GAP",
+            Self::DlbPartitionRange => "DLB_PARTITION_RANGE",
+            Self::DlbSegForeignSlot => "DLB_SEG_FOREIGN_SLOT",
+        }
+    }
+}
+
+/// One verification failure: rule + offending rank + counterexample text
+/// (the conflicting steps, rows, or peers).
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub rule: Rule,
+    /// Which rank's plan is at fault (`None` for cross-rank properties).
+    pub rank: Option<usize>,
+    pub detail: String,
+}
+
+impl Diagnostic {
+    pub(crate) fn new(rule: Rule, rank: Option<usize>, detail: String) -> Self {
+        Self { rule, rank, detail }
+    }
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.rank {
+            Some(r) => write!(f, "[{}] rank {r}: {}", self.rule.id(), self.detail),
+            None => write!(f, "[{}] {}", self.rule.id(), self.detail),
+        }
+    }
+}
+
+/// The outcome of one verification pass: how many analyzer checks ran and
+/// every diagnostic they produced.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    /// Number of analyzer passes executed (a passing report with
+    /// `checks == 0` means nothing was actually verified).
+    pub checks: usize,
+    pub diags: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn is_ok(&self) -> bool {
+        self.diags.is_empty()
+    }
+
+    /// Whether any diagnostic carries the given stable rule ID (what the
+    /// adversarial negative tests assert on).
+    pub fn has_rule(&self, id: &str) -> bool {
+        self.diags.iter().any(|d| d.rule.id() == id)
+    }
+
+    pub(crate) fn absorb(&mut self, diags: Vec<Diagnostic>) {
+        self.checks += 1;
+        self.diags.extend(diags);
+    }
+
+    /// `Ok(())` or an error listing every diagnostic.
+    pub fn into_result(self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.is_ok(), "plan verification failed:\n{self}");
+        Ok(())
+    }
+
+    /// Structured JSON (`{"ok":…,"checks":…,"diagnostics":[…]}`), parseable
+    /// by [`crate::util::json::Json::parse`]. Hand-built like the chrome
+    /// trace export — the crate carries no serializer.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(64 + self.diags.len() * 96);
+        s.push_str(&format!(
+            "{{\"ok\": {}, \"checks\": {}, \"diagnostics\": [",
+            self.is_ok(),
+            self.checks
+        ));
+        for (i, d) in self.diags.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            let rank = d.rank.map_or("null".to_string(), |r| r.to_string());
+            s.push_str(&format!(
+                "{{\"rule\": \"{}\", \"rank\": {rank}, \"detail\": \"{}\"}}",
+                d.rule.id(),
+                json_escape(&d.detail)
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+impl std::fmt::Display for Report {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for d in &self.diags {
+            writeln!(f, "  {d}")?;
+        }
+        write!(f, "  ({} diagnostics over {} checks)", self.diags.len(), self.checks)
+    }
+}
+
+/// Escape a string for embedding in a JSON literal.
+pub(crate) fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// The static analysis pass over schedules, rank plans, and inner work
+/// splits. Stateless apart from the configured inner-thread count (which
+/// decides the splits analyzer 2 must prove disjoint).
+#[derive(Clone, Copy, Debug)]
+pub struct Verifier {
+    /// Inner participants per rank whose work splits are checked. The
+    /// split functions are checked with at least 2 participants even when
+    /// the engine runs serially, so the decomposition logic itself is
+    /// always covered.
+    pub inner_threads: usize,
+}
+
+impl Default for Verifier {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Verifier {
+    pub fn new() -> Self {
+        Self { inner_threads: 1 }
+    }
+
+    pub fn with_inner_threads(k: usize) -> Self {
+        Self { inner_threads: k.max(1) }
+    }
+
+    fn split_k(&self) -> usize {
+        self.inner_threads.max(2)
+    }
+
+    /// Verify a full DLB plan: per-rank schedule races, inner-split
+    /// aliasing, the `seg_rows`/`multi_rows` partition, the cross-rank
+    /// communication plans, round progress, and the async tag discipline.
+    /// `plans` is [`crate::mpk::dlb::DlbPlan::ranks`]; `p_m` its block
+    /// size.
+    pub fn check_all(&self, dist: &DistMatrix, plans: &[DlbRankPlan], p_m: usize) -> Report {
+        let mut rep = Report::default();
+        rep.absorb(comm::check_dist(dist));
+        rep.absorb(comm::check_progress_dist(dist, p_m));
+        let async_remainder = plans.first().is_some_and(|pl| pl.async_remainder);
+        rep.absorb(comm::check_tag_rounds(&comm::dlb_rounds(p_m, async_remainder)));
+        for (rank, (r, pl)) in dist.ranks.iter().zip(plans).enumerate() {
+            rep.absorb(schedule::check_rank_schedule(rank, r, pl));
+            rep.absorb(alias::check_dlb_alias(rank, r, pl, self.split_k()));
+            rep.absorb(partition::check_rank_partition(rank, r, pl));
+        }
+        rep
+    }
+
+    /// Verify a TRAD session: cross-rank plans, `p_m` lockstep rounds of
+    /// progress, the per-round tag sequence, and the full-sweep row split.
+    pub fn check_trad(&self, dist: &DistMatrix, p_m: usize) -> Report {
+        let mut rep = Report::default();
+        rep.absorb(comm::check_dist(dist));
+        rep.absorb(comm::check_progress_dist(dist, p_m));
+        rep.absorb(comm::check_tag_rounds(&comm::trad_rounds(p_m)));
+        for (rank, r) in dist.ranks.iter().enumerate() {
+            rep.absorb(alias::check_split(rank, 0, r.n_local(), self.split_k()));
+        }
+        rep
+    }
+
+    /// Verify a CA session: the extended-exchange plan (exactly-once,
+    /// payload-exact, covering the external classes), its single tagged
+    /// round, and the promote-round row-list disjointness.
+    pub fn check_ca(&self, dist: &DistMatrix, plan: &CaExecPlan) -> Report {
+        let mut rep = Report::default();
+        rep.absorb(comm::check_ca_plans(dist, plan));
+        rep.absorb(comm::check_tag_rounds(&comm::ca_rounds()));
+        for (rank, r) in dist.ranks.iter().enumerate() {
+            rep.absorb(alias::check_ca_alias(
+                rank,
+                &r.owned,
+                &plan.ext[rank],
+                plan.p_m,
+                self.split_k(),
+            ));
+        }
+        rep
+    }
+}
+
+/// Cheap per-rank facts for `debug_assert!` hooks inside the kernels
+/// (TRAD/CA have no per-rank plan beyond the rank local): recv slots tile
+/// the halo, send rows are in range. Cross-rank matching needs all ranks
+/// and runs at engine prepare time instead.
+pub fn debug_check_rank(r: &crate::distsim::RankLocal) -> Vec<Diagnostic> {
+    comm::check_rank_local(r.rank, r)
+}
+
+/// Per-rank DLB facts for the `debug_assert!` hook in
+/// [`crate::mpk::dlb::dlb_rank`]: local comm layout, schedule/batches, and
+/// the async partition.
+pub fn debug_check_dlb_rank(r: &crate::distsim::RankLocal, pl: &DlbRankPlan) -> Vec<Diagnostic> {
+    let mut out = comm::check_rank_local(r.rank, r);
+    out.extend(schedule::check_rank_schedule(r.rank, r, pl));
+    out.extend(partition::check_rank_partition(r.rank, r, pl));
+    out
+}
+
+/// Render diagnostics for `debug_assert!` messages.
+pub fn render(diags: &[Diagnostic]) -> String {
+    diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("; ")
+}

@@ -1,0 +1,212 @@
+//! Analyzer 4 — DLB async-remainder partition checker.
+//!
+//! The async remainder's correctness argument has two structural legs
+//! (see [`crate::mpk::dlb`]): `seg_rows[j] ∪ multi_rows` must *exactly*
+//! partition class `I_1` (`class_ranges[0]`) — every boundary row advanced
+//! exactly once per round, in any completion order — and every
+//! `seg_rows[j]` row must read halo slots of recv plan `j` *only*, so the
+//! row really is final the moment peer `j`'s message lands. This analyzer
+//! proves both from the plan and the local matrix: a mark sweep over
+//! `class_ranges[0]` for the partition, and a halo-column scan against
+//! the slot → recv-plan map for segment purity.
+
+use crate::distsim::RankLocal;
+use crate::mpk::dlb::DlbRankPlan;
+
+use super::{Diagnostic, Rule};
+
+/// Verify one rank's `seg_rows`/`multi_rows` split (see module docs).
+pub fn check_rank_partition(rank: usize, r: &RankLocal, pl: &DlbRankPlan) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let nl = r.n_local();
+    let n_halo = r.n_halo();
+
+    if pl.seg_rows.len() != r.recv.len() {
+        out.push(Diagnostic::new(
+            Rule::DlbSegCount,
+            Some(rank),
+            format!(
+                "seg_rows has {} segments, the rank has {} recv plans",
+                pl.seg_rows.len(),
+                r.recv.len()
+            ),
+        ));
+        return out;
+    }
+
+    let (c_lo, c_hi) = pl.class_ranges.first().copied().unwrap_or((0, 0));
+    let in_class = |row: u32| (row as usize) >= c_lo && (row as usize) < c_hi;
+
+    for (j, rows) in pl.seg_rows.iter().enumerate() {
+        for w in rows.windows(2) {
+            if w[1] <= w[0] {
+                out.push(Diagnostic::new(
+                    Rule::DlbSegUnsorted,
+                    Some(rank),
+                    format!("seg_rows[{j}] not strictly ascending at {} then {}", w[0], w[1]),
+                ));
+                return out;
+            }
+        }
+        if let Some(&row) = rows.iter().find(|&&row| !in_class(row)) {
+            out.push(Diagnostic::new(
+                Rule::DlbPartitionRange,
+                Some(rank),
+                format!("seg_rows[{j}] row {row} outside class I_1 = [{c_lo}, {c_hi})"),
+            ));
+            return out;
+        }
+    }
+    if let Some(&row) = pl.multi_rows.iter().find(|&&row| !in_class(row)) {
+        out.push(Diagnostic::new(
+            Rule::DlbPartitionRange,
+            Some(rank),
+            format!("multi_rows row {row} outside class I_1 = [{c_lo}, {c_hi})"),
+        ));
+        return out;
+    }
+
+    // Exact partition of I_1: every row claimed exactly once.
+    let mut claimed_by: Vec<Option<usize>> = vec![None; c_hi - c_lo];
+    let lists =
+        pl.seg_rows.iter().enumerate().chain(std::iter::once((usize::MAX, &pl.multi_rows)));
+    for (j, rows) in lists {
+        let name = |j: usize| {
+            if j == usize::MAX { "multi_rows".to_string() } else { format!("seg_rows[{j}]") }
+        };
+        for &row in rows.iter() {
+            let slot = &mut claimed_by[row as usize - c_lo];
+            if let Some(prev) = *slot {
+                out.push(Diagnostic::new(
+                    Rule::DlbPartitionOverlap,
+                    Some(rank),
+                    format!("row {row} claimed by both {} and {}", name(prev), name(j)),
+                ));
+                return out;
+            }
+            *slot = Some(j);
+        }
+    }
+    if let Some(i) = claimed_by.iter().position(|c| c.is_none()) {
+        out.push(Diagnostic::new(
+            Rule::DlbPartitionGap,
+            Some(rank),
+            format!(
+                "class-I_1 row {} belongs to no segment and not to multi_rows — it would \
+                 never advance",
+                c_lo + i
+            ),
+        ));
+        return out;
+    }
+
+    // Segment purity: a seg_rows[j] row may read halo slots of recv plan j
+    // only (reading another peer's slot before that message lands races
+    // with the transport's in-place halo write).
+    let mut slot_owner = vec![usize::MAX; n_halo];
+    for (j, rp) in r.recv.iter().enumerate() {
+        for s in rp.slots.clone() {
+            if s < n_halo {
+                slot_owner[s] = j;
+            }
+        }
+    }
+    for (j, rows) in pl.seg_rows.iter().enumerate() {
+        for &row in rows.iter() {
+            for &c in r.a.row_cols(row as usize) {
+                let c = c as usize;
+                if c >= nl && slot_owner[c - nl] != j {
+                    out.push(Diagnostic::new(
+                        Rule::DlbSegForeignSlot,
+                        Some(rank),
+                        format!(
+                            "seg_rows[{j}] row {row} reads halo slot {} of recv plan {} — \
+                             it may only advance after that peer's message too",
+                            c - nl,
+                            slot_owner[c - nl]
+                        ),
+                    ));
+                    return out;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distsim::DistMatrix;
+    use crate::matrix::gen;
+    use crate::mpk::dlb;
+    use crate::partition::{partition, Method};
+
+    fn plans(np: usize, p_m: usize) -> (DistMatrix, dlb::DlbPlan) {
+        let a = gen::stencil_2d_5pt(12, 12);
+        let part = partition(&a, np, Method::Block);
+        let dist = DistMatrix::build(&a, &part);
+        let plan = dlb::plan(&dist, p_m, &dlb::DlbOptions::default());
+        ((*plan.dist).clone(), plan)
+    }
+
+    #[test]
+    fn real_partitions_pass() {
+        for (np, p_m) in [(1, 2), (2, 2), (3, 4), (2, 1)] {
+            let (dist, plan) = plans(np, p_m);
+            for (rank, (r, pl)) in dist.ranks.iter().zip(&plan.ranks).enumerate() {
+                let diags = check_rank_partition(rank, r, pl);
+                assert!(diags.is_empty(), "np={np} p_m={p_m} rank {rank}: {}",
+                    super::super::render(&diags));
+            }
+        }
+    }
+
+    #[test]
+    fn moved_row_is_rejected() {
+        let (dist, mut plan) = plans(3, 3);
+        // Move one row from a non-empty segment to a different peer's
+        // segment: its halo reads still point at the original peer.
+        let rank = plan
+            .ranks
+            .iter()
+            .position(|pl| {
+                pl.seg_rows.len() >= 2 && pl.seg_rows.iter().any(|s| !s.is_empty())
+            })
+            .expect("a rank with >= 2 peers and a non-empty segment");
+        let pl = &mut plan.ranks[rank];
+        let from = pl.seg_rows.iter().position(|s| !s.is_empty()).unwrap();
+        let to = (from + 1) % pl.seg_rows.len();
+        let row = pl.seg_rows[from].remove(0);
+        pl.seg_rows[to].push(row);
+        pl.seg_rows[to].sort_unstable();
+        let diags = check_rank_partition(rank, &dist.ranks[rank], pl);
+        assert!(
+            diags.iter().any(|d| d.rule == Rule::DlbSegForeignSlot),
+            "{}",
+            super::super::render(&diags)
+        );
+    }
+
+    #[test]
+    fn dropped_row_is_a_gap_and_duplicate_is_an_overlap() {
+        let (dist, mut plan) = plans(2, 3);
+        let rank = plan
+            .ranks
+            .iter()
+            .position(|pl| pl.seg_rows.iter().any(|s| !s.is_empty()))
+            .unwrap();
+        {
+            let pl = &mut plan.ranks[rank];
+            let seg = pl.seg_rows.iter_mut().find(|s| !s.is_empty()).unwrap();
+            let row = seg.remove(0);
+            let diags = check_rank_partition(rank, &dist.ranks[rank], pl);
+            assert!(diags.iter().any(|d| d.rule == Rule::DlbPartitionGap));
+            seg.insert(0, row);
+            pl.multi_rows.push(row);
+            pl.multi_rows.sort_unstable();
+        }
+        let diags = check_rank_partition(rank, &dist.ranks[rank], &plan.ranks[rank]);
+        assert!(diags.iter().any(|d| d.rule == Rule::DlbPartitionOverlap));
+    }
+}

@@ -1,0 +1,339 @@
+//! Analyzer 1 — schedule race detector.
+//!
+//! Machine-checks the batching argument of [`crate::race::schedule`]: the
+//! phase-2 wavefront schedule is a valid capped schedule, its
+//! `parallel_batches` flatten back to the same step multiset *and* to a
+//! valid order, and every pair of steps sharing a batch is independent
+//! under the three hand-argued rules (same-power row-disjointness, Δp = 1
+//! level-window separation, Δp = 2 `prev2` row-disjointness). Each
+//! violation names the rule, the two conflicting steps, and the
+//! overlapping rows.
+//!
+//! Level spans are reconstructed from the plan's row `ranges` via
+//! [`crate::graph::Levels::level_of_row`], so a span never reports an
+//! empty level it does not actually own — reconstruction can only shrink
+//! a span, which weakens the dependency window in the safe direction (no
+//! false alarms; a real adjacent-level conflict always involves non-empty
+//! levels).
+
+use crate::distsim::RankLocal;
+use crate::graph::Levels;
+use crate::mpk::dlb::DlbRankPlan;
+use crate::race::schedule::Step;
+
+use super::{Diagnostic, Rule};
+
+/// Verify one rank's phase-2 schedule and batches (see module docs).
+pub fn check_rank_schedule(rank: usize, r: &RankLocal, pl: &DlbRankPlan) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let nl = r.n_local();
+    let n_groups = pl.ranges.len();
+    if n_groups == 0 {
+        if !pl.schedule.is_empty() || pl.batches.iter().any(|b| !b.is_empty()) {
+            out.push(Diagnostic::new(
+                Rule::SchedBatchMismatch,
+                Some(rank),
+                "steps scheduled over zero groups".into(),
+            ));
+        }
+        return out;
+    }
+
+    // Group ranges must tile [0, nl) contiguously — every other check
+    // (row disjointness across groups, span reconstruction) builds on it.
+    let mut prev_hi = 0usize;
+    for (g, &(lo, hi)) in pl.ranges.iter().enumerate() {
+        if lo != prev_hi || hi < lo {
+            out.push(Diagnostic::new(
+                Rule::SchedGroupRanges,
+                Some(rank),
+                format!("group {g} range [{lo}, {hi}) does not continue from {prev_hi}"),
+            ));
+            return out;
+        }
+        prev_hi = hi;
+    }
+    if prev_hi != nl {
+        out.push(Diagnostic::new(
+            Rule::SchedGroupRanges,
+            Some(rank),
+            format!("group ranges end at {prev_hi}, expected n_local = {nl}"),
+        ));
+        return out;
+    }
+
+    let spans = reconstruct_spans(&pl.levels, &pl.ranges);
+    let n_levels = pl.levels.n_levels();
+
+    out.extend(check_order(rank, "schedule", &pl.schedule, &spans, n_levels, &pl.caps));
+
+    // Batches: same multiset as the schedule, valid when concatenated,
+    // pairwise independent within each batch.
+    let flat: Vec<Step> = pl.batches.iter().flatten().copied().collect();
+    let key = |s: &Step| (s.group, s.power);
+    let mut a: Vec<Step> = pl.schedule.clone();
+    let mut b = flat.clone();
+    a.sort_unstable_by_key(key);
+    b.sort_unstable_by_key(key);
+    if a != b {
+        out.push(Diagnostic::new(
+            Rule::SchedBatchMismatch,
+            Some(rank),
+            format!(
+                "batches flatten to {} steps, schedule has {} (different multiset)",
+                flat.len(),
+                pl.schedule.len()
+            ),
+        ));
+    } else {
+        out.extend(check_order(rank, "batch concatenation", &flat, &spans, n_levels, &pl.caps));
+    }
+    for (bi, batch) in pl.batches.iter().enumerate() {
+        for (i, &x) in batch.iter().enumerate() {
+            for &y in &batch[i + 1..] {
+                if let Some(d) = dependent(rank, bi, x, y, &spans, &pl.ranges, &pl.levels) {
+                    out.push(d);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Per-group level spans `[lo, hi)` recovered from the row ranges.
+fn reconstruct_spans(levels: &Levels, ranges: &[(usize, usize)]) -> Vec<(usize, usize)> {
+    ranges
+        .iter()
+        .map(|&(lo, hi)| {
+            if hi <= lo {
+                (0, 0)
+            } else {
+                (levels.level_of_row(lo), levels.level_of_row(hi - 1) + 1)
+            }
+        })
+        .collect()
+}
+
+/// The `validate_schedule` algorithm of [`crate::race::schedule`],
+/// generalized to per-group caps and diagnostic output: every step
+/// advances its group by exactly one power, never before every group
+/// covering its levels ± 1 reached `power - 1`, and each group finishes
+/// at its cap.
+fn check_order(
+    rank: usize,
+    what: &str,
+    steps: &[Step],
+    spans: &[(usize, usize)],
+    n_levels: usize,
+    caps: &[usize],
+) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let n_groups = spans.len();
+    let mut gl_lo = vec![usize::MAX; n_levels];
+    let mut gl_hi = vec![0usize; n_levels];
+    for (g, &(lo, hi)) in spans.iter().enumerate() {
+        for l in lo..hi {
+            gl_lo[l] = gl_lo[l].min(g);
+            gl_hi[l] = gl_hi[l].max(g);
+        }
+    }
+    let mut pow = vec![0usize; n_groups];
+    for (i, s) in steps.iter().enumerate() {
+        if s.group >= n_groups {
+            out.push(Diagnostic::new(
+                Rule::SchedPowerJump,
+                Some(rank),
+                format!("{what} step {i}: group {} out of range ({n_groups} groups)", s.group),
+            ));
+            continue;
+        }
+        if s.power != pow[s.group] + 1 {
+            out.push(Diagnostic::new(
+                Rule::SchedPowerJump,
+                Some(rank),
+                format!(
+                    "{what} step {i}: group {} jumps from power {} to {}",
+                    s.group, pow[s.group], s.power
+                ),
+            ));
+        }
+        let (lo, hi) = spans[s.group];
+        let dep_lo = lo.saturating_sub(1);
+        let dep_hi = (hi + 1).min(n_levels);
+        for l in dep_lo..dep_hi {
+            if gl_lo[l] == usize::MAX {
+                continue; // empty level: no group to depend on
+            }
+            for h in gl_lo[l]..=gl_hi[l] {
+                if h != s.group && pow[h] + 1 < s.power {
+                    out.push(Diagnostic::new(
+                        Rule::SchedDepUnmet,
+                        Some(rank),
+                        format!(
+                            "{what} step {i}: (g{}, p{}) runs while dependency group {h} \
+                             (level {l}) is at power {} < {}",
+                            s.group,
+                            s.power,
+                            pow[h],
+                            s.power - 1
+                        ),
+                    ));
+                }
+            }
+        }
+        pow[s.group] = s.power;
+    }
+    for (g, (&p, &cap)) in pow.iter().zip(caps).enumerate() {
+        if p != cap {
+            out.push(Diagnostic::new(
+                Rule::SchedIncomplete,
+                Some(rank),
+                format!("{what}: group {g} finishes at power {p}, cap is {cap}"),
+            ));
+        }
+    }
+    out
+}
+
+/// Pairwise independence of two same-batch steps — `None` if independent,
+/// otherwise the diagnostic naming the violated rule and the overlap.
+fn dependent(
+    rank: usize,
+    batch: usize,
+    x: Step,
+    y: Step,
+    spans: &[(usize, usize)],
+    ranges: &[(usize, usize)],
+    levels: &Levels,
+) -> Option<Diagnostic> {
+    if x.group == y.group {
+        return Some(Diagnostic::new(
+            Rule::SchedBatchSameGroup,
+            Some(rank),
+            format!(
+                "batch {batch}: (g{}, p{}) and (g{}, p{}) touch the same group",
+                x.group, x.power, y.group, y.power
+            ),
+        ));
+    }
+    match x.power.abs_diff(y.power) {
+        // Same write buffer (Δp = 0), or the higher step's prev-2 read is
+        // the lower step's write buffer (Δp = 2): safe iff row-disjoint.
+        0 | 2 => {
+            let (alo, ahi) = ranges[x.group];
+            let (blo, bhi) = ranges[y.group];
+            let olo = alo.max(blo);
+            let ohi = ahi.min(bhi);
+            (olo < ohi).then(|| {
+                Diagnostic::new(
+                    Rule::SchedBatchRowOverlap,
+                    Some(rank),
+                    format!(
+                        "batch {batch}: (g{}, p{}) and (g{}, p{}) share rows [{olo}, {ohi})",
+                        x.group, x.power, y.group, y.power
+                    ),
+                )
+            })
+        }
+        // Δp = 1: the higher-power step reads levels span ± 1 of the
+        // lower-power step's freshly written buffer.
+        1 => {
+            let (rd, wr) = if x.power > y.power { (x, y) } else { (y, x) };
+            let (rlo, rhi) = spans[rd.group];
+            let (wlo, whi) = spans[wr.group];
+            if whi < rlo || wlo > rhi {
+                return None;
+            }
+            // Counterexample rows: the reader's dependency window clipped
+            // to the writer's range.
+            let n_levels = levels.n_levels();
+            let win_lo = levels.level_ptr[rlo.saturating_sub(1).min(n_levels)];
+            let win_hi = levels.level_ptr[(rhi + 1).min(n_levels)];
+            let (wr_lo, wr_hi) = ranges[wr.group];
+            let olo = win_lo.max(wr_lo);
+            let ohi = win_hi.min(wr_hi);
+            Some(Diagnostic::new(
+                Rule::SchedBatchAdjLevels,
+                Some(rank),
+                format!(
+                    "batch {batch}: reader (g{}, p{}) levels [{rlo}, {rhi}) overlaps writer \
+                     (g{}, p{}) levels [{wlo}, {whi}); conflicting rows [{olo}, {ohi})",
+                    rd.group, rd.power, wr.group, wr.power
+                ),
+            ))
+        }
+        // Δp ≥ 3: different buffers in the three-term window; the only
+        // cross-buffer read (prev-2) is two powers down, handled above.
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distsim::DistMatrix;
+    use crate::matrix::gen;
+    use crate::mpk::dlb;
+
+    fn plan(np: usize, p_m: usize) -> (DistMatrix, dlb::DlbPlan) {
+        let a = gen::stencil_2d_5pt(12, 12);
+        let part = crate::partition::partition(&a, np, crate::partition::Method::Block);
+        let dist = DistMatrix::build(&a, &part);
+        let plan = dlb::plan(&dist, p_m, &dlb::DlbOptions::default());
+        ((*plan.dist).clone(), plan)
+    }
+
+    #[test]
+    fn real_plans_pass() {
+        for (np, p_m) in [(1, 1), (2, 2), (3, 4)] {
+            let (dist, plan) = plan(np, p_m);
+            for (rank, (r, pl)) in dist.ranks.iter().zip(&plan.ranks).enumerate() {
+                let diags = check_rank_schedule(rank, r, pl);
+                assert!(diags.is_empty(), "rank {rank}: {}", super::super::render(&diags));
+            }
+        }
+    }
+
+    #[test]
+    fn merged_batches_are_rejected() {
+        let (dist, mut plan) = plan(2, 4);
+        // Merge the first two non-empty adjacent batches of some rank:
+        // consecutive fronts are dependent by construction.
+        let (rank, pl) = plan
+            .ranks
+            .iter_mut()
+            .enumerate()
+            .find(|(_, pl)| pl.batches.len() >= 2)
+            .expect("a rank with >= 2 batches");
+        let merged = pl.batches.remove(1);
+        pl.batches[0].extend(merged);
+        let diags = check_rank_schedule(rank, &dist.ranks[rank], pl);
+        assert!(
+            diags.iter().any(|d| matches!(
+                d.rule,
+                Rule::SchedBatchAdjLevels | Rule::SchedBatchRowOverlap | Rule::SchedBatchSameGroup
+            )),
+            "expected a batch-independence diagnostic, got: {}",
+            super::super::render(&diags)
+        );
+    }
+
+    #[test]
+    fn swapped_schedule_steps_are_rejected() {
+        let (dist, mut plan) = plan(2, 2);
+        let (rank, pl) = plan
+            .ranks
+            .iter_mut()
+            .enumerate()
+            .find(|(_, pl)| pl.schedule.len() >= 2)
+            .expect("a rank with >= 2 steps");
+        let last = pl.schedule.len() - 1;
+        pl.schedule.swap(0, last);
+        let diags = check_rank_schedule(rank, &dist.ranks[rank], pl);
+        assert!(
+            diags.iter().any(|d| matches!(d.rule, Rule::SchedDepUnmet | Rule::SchedPowerJump)),
+            "expected an order diagnostic, got: {}",
+            super::super::render(&diags)
+        );
+    }
+}

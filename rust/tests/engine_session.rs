@@ -49,6 +49,7 @@ fn propagator_threads_pool_matches_sim_bitwise_over_three_steps() {
             backend: BackendSpec::Native,
             trace: false,
             inner_threads: 1,
+            ..EngineConfig::default()
         },
     };
     let mut sim = ChebyshevPropagator::new(&h, &dist, mk(ExecutorKind::Sim)).unwrap();
@@ -172,6 +173,7 @@ fn pcg_routes_all_spmvs_through_engine_backend() {
         })),
         trace: false,
         inner_threads: 1,
+        ..EngineConfig::default()
     };
     let mut pre = ChebyshevPreconditioner::new(&dist, lmin, lmax, 4, &cfg).unwrap();
     let b = vec![1.0; a.n_rows()];

@@ -1,0 +1,175 @@
+//! Adversarial tests for the static verifier (`dlb_mpk::verify`).
+//!
+//! Positive direction: every configuration the executor-equivalence suite
+//! runs (TRAD/CA/DLB × rank counts × p_m × async remainder × inner splits)
+//! verifies clean. Negative direction: hand-mutated plans — merged
+//! dependent batches, dropped send/recv plans, a row moved between
+//! segment peers, a reused tag — are each rejected with the documented
+//! stable rule ID, never a panic.
+
+use dlb_mpk::distsim::DistMatrix;
+use dlb_mpk::matrix::{gen, CsrMatrix};
+use dlb_mpk::mpk::{ca, dlb};
+use dlb_mpk::partition::{partition, Method};
+use dlb_mpk::verify::{comm, Verifier};
+
+fn dist(np: usize) -> (CsrMatrix, DistMatrix) {
+    let a = gen::stencil_2d_5pt(16, 16);
+    let part = partition(&a, np, Method::Block);
+    let d = DistMatrix::build(&a, &part);
+    (a, d)
+}
+
+/// DLB plan over its (permuted) dist — mutations work on owned copies.
+fn dlb_setup(np: usize, p_m: usize, async_remainder: bool) -> (DistMatrix, dlb::DlbPlan) {
+    let (_, d) = dist(np);
+    let opts = dlb::DlbOptions { async_remainder, ..dlb::DlbOptions::default() };
+    let plan = dlb::plan(&d, p_m, &opts);
+    ((*plan.dist).clone(), plan)
+}
+
+#[test]
+fn exec_equivalence_configurations_verify_clean() {
+    for np in [1usize, 2, 4] {
+        for p_m in [1usize, 2, 4] {
+            for k in [1usize, 2] {
+                let v = Verifier::with_inner_threads(k);
+                let (a, d) = dist(np);
+                let rep = v.check_trad(&d, p_m);
+                assert!(rep.is_ok(), "trad np={np} p_m={p_m} k={k}:\n{rep}");
+                assert!(rep.checks > 0, "trad report ran no checks");
+                let rep = v.check_ca(&d, &ca::ca_exec_plan(&a, &d, p_m));
+                assert!(rep.is_ok(), "ca np={np} p_m={p_m} k={k}:\n{rep}");
+                for async_remainder in [false, true] {
+                    let (pd, plan) = dlb_setup(np, p_m, async_remainder);
+                    let rep = v.check_all(&pd, &plan.ranks, p_m);
+                    assert!(
+                        rep.is_ok(),
+                        "dlb np={np} p_m={p_m} k={k} async={async_remainder}:\n{rep}"
+                    );
+                    assert!(rep.checks > 0, "dlb report ran no checks");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn merged_dependent_batches_are_rejected() {
+    let (d, mut plan) = dlb_setup(2, 4, false);
+    let pl = plan
+        .ranks
+        .iter_mut()
+        .find(|pl| pl.batches.len() >= 2)
+        .expect("a rank with >= 2 batches");
+    // Consecutive wavefront fronts are dependent by construction; merging
+    // them puts dependent steps in one "parallel" batch.
+    let merged = pl.batches.remove(1);
+    pl.batches[0].extend(merged);
+    let rep = Verifier::new().check_all(&d, &plan.ranks, 4);
+    assert!(
+        rep.has_rule("SCHED_BATCH_ADJ_LEVELS")
+            || rep.has_rule("SCHED_BATCH_ROW_OVERLAP")
+            || rep.has_rule("SCHED_BATCH_SAME_GROUP"),
+        "expected a batch-independence rule, got:\n{rep}"
+    );
+}
+
+#[test]
+fn swapped_schedule_steps_are_rejected() {
+    let (d, mut plan) = dlb_setup(2, 3, false);
+    let pl = plan
+        .ranks
+        .iter_mut()
+        .find(|pl| pl.schedule.len() >= 2)
+        .expect("a rank with >= 2 steps");
+    let last = pl.schedule.len() - 1;
+    pl.schedule.swap(0, last);
+    let rep = Verifier::new().check_all(&d, &plan.ranks, 3);
+    assert!(
+        rep.has_rule("SCHED_DEP_UNMET") || rep.has_rule("SCHED_POWER_JUMP"),
+        "expected an order rule, got:\n{rep}"
+    );
+}
+
+#[test]
+fn dropped_recv_plan_is_rejected() {
+    let (mut d, plan) = dlb_setup(3, 2, false);
+    let rank = d.ranks.iter().position(|r| !r.recv.is_empty()).unwrap();
+    d.ranks[rank].recv.remove(0);
+    let rep = Verifier::new().check_all(&d, &plan.ranks, 2);
+    assert!(rep.has_rule("COMM_SEND_UNMATCHED"), "{rep}");
+    assert!(rep.has_rule("COMM_SLOT_GAP"), "{rep}");
+}
+
+#[test]
+fn dropped_send_plan_deadlocks() {
+    let (_, mut d) = dist(2);
+    let rank = d.ranks.iter().position(|r| !r.send.is_empty()).unwrap();
+    d.ranks[rank].send.remove(0);
+    let rep = Verifier::new().check_trad(&d, 3);
+    assert!(rep.has_rule("COMM_RECV_UNMATCHED"), "{rep}");
+    assert!(rep.has_rule("COMM_DEADLOCK"), "{rep}");
+}
+
+#[test]
+fn corrupted_send_length_is_rejected() {
+    let (_, mut d) = dist(2);
+    let sp = d
+        .ranks
+        .iter_mut()
+        .flat_map(|r| r.send.iter_mut())
+        .find(|s| !s.rows.is_empty())
+        .unwrap();
+    sp.rows.pop();
+    let rep = Verifier::new().check_trad(&d, 2);
+    assert!(rep.has_rule("COMM_LEN_MISMATCH"), "{rep}");
+}
+
+#[test]
+fn moved_segment_row_is_rejected() {
+    let (d, mut plan) = dlb_setup(3, 3, true);
+    let rank = plan
+        .ranks
+        .iter()
+        .position(|pl| pl.seg_rows.len() >= 2 && pl.seg_rows.iter().any(|s| !s.is_empty()))
+        .expect("a rank with >= 2 peers and a non-empty segment");
+    let pl = &mut plan.ranks[rank];
+    let from = pl.seg_rows.iter().position(|s| !s.is_empty()).unwrap();
+    let to = (from + 1) % pl.seg_rows.len();
+    // The row's halo reads still point at peer `from`, so under peer
+    // `to`'s segment it would advance before its inputs arrive.
+    let row = pl.seg_rows[from].remove(0);
+    pl.seg_rows[to].push(row);
+    pl.seg_rows[to].sort_unstable();
+    let rep = Verifier::new().check_all(&d, &plan.ranks, 3);
+    assert!(rep.has_rule("DLB_SEG_FOREIGN_SLOT"), "{rep}");
+}
+
+#[test]
+fn cross_sweep_tag_reuse_is_rejected() {
+    // The modeled async tag discipline is safe as generated...
+    assert!(comm::check_tag_rounds(&comm::dlb_rounds(4, true)).is_empty());
+    // ...reusing a live tag is not...
+    let mut rounds = comm::dlb_rounds(4, true);
+    rounds[2].tag = rounds[1].tag;
+    let diags = comm::check_tag_rounds(&rounds);
+    assert!(diags.iter().any(|dg| dg.rule.id() == "COMM_TAG_REUSE"));
+    // ...and dropping the sweep-final barrier lets this sweep's in-flight
+    // messages match the next sweep's identical tags.
+    let mut rounds = comm::dlb_rounds(4, true);
+    rounds.last_mut().unwrap().barrier_after = false;
+    let diags = comm::check_tag_rounds(&rounds);
+    assert!(diags.iter().any(|dg| dg.rule.id() == "COMM_NO_FINAL_BARRIER"));
+}
+
+#[test]
+fn dropped_ca_recv_is_rejected() {
+    let (a, d) = dist(3);
+    let mut plan = ca::ca_exec_plan(&a, &d, 3);
+    let rank = plan.recvs.iter().position(|r| !r.is_empty()).unwrap();
+    plan.recvs[rank].remove(0);
+    let rep = Verifier::new().check_ca(&d, &plan);
+    assert!(rep.has_rule("COMM_SEND_UNMATCHED"), "{rep}");
+    assert!(rep.has_rule("CA_EXT_COVERAGE"), "{rep}");
+}
