@@ -29,9 +29,13 @@
 //!   their short final-block plans instead of rebuilding them every step;
 //! * reusable **workspaces** for the sequential executor;
 //! * for the threads executor, a **persistent rank pool**
-//!   ([`pool::RankPool`]): `n_ranks` long-lived rank threads parked on job
+//!   (`pool::RankPool`): `n_ranks` long-lived rank threads parked on job
 //!   channels, so a propagator running thousands of sweeps pays thread and
-//!   communicator setup exactly once instead of per call.
+//!   communicator setup exactly once instead of per call;
+//! * for the processes executor, this rank's **socket endpoint**
+//!   ([`crate::exec::SockComm`]) plus its inner pool — the engine runs
+//!   SPMD, one engine per launched rank process (see
+//!   `docs/ARCHITECTURE.md`).
 //!
 //! [`MpkEngine::sweep`] / [`MpkEngine::sweep_len`] is the one entry point
 //! subsuming `mpk::run`, `exec::run`, the `*_threaded` drivers, and the
@@ -40,25 +44,31 @@
 //! (cross-validated in `rust/tests/exec_equivalence.rs` and
 //! `rust/tests/engine_session.rs`).
 //!
-//! This is also the seam future transports plug into with zero app
-//! changes: an MPI-backed [`crate::exec::Communicator`] or a within-rank
-//! wavefront thread pool slot in behind the same builder knobs.
+//! This is also the seam transports plug into with zero app changes: the
+//! multi-process socket transport ([`crate::exec::SockComm`]) slots in as
+//! `ExecutorKind::Processes` behind the same builder knobs, and an
+//! MPI-backed [`crate::exec::Communicator`] would follow the identical
+//! path. Under the processes executor every launched rank process builds
+//! the same engine from the same inputs (SPMD); `sweep` runs only this
+//! rank's kernel, then an allgather over the socket control plane gives
+//! every process the full bitwise-identical [`SweepResult`].
 
 pub mod pool;
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::distsim::DistMatrix;
+use crate::distsim::{CommStats, DistMatrix};
 use crate::exec::executor::assemble;
-use crate::exec::ExecutorKind;
+use crate::exec::sock::{ctrl_tag, RankEnv, SockComm, CTRL_GATHER, CTRL_TRACE};
+use crate::exec::{Communicator, ExecutorKind, RankRun};
 use crate::inner::InnerExec;
 use crate::matrix::CsrMatrix;
 use crate::mpk::ca::{self, CaExecPlan, CaOverheads, CaPlan};
 use crate::mpk::dlb::{self, DlbOptions, DlbPlan, DlbPre, Recurrence, Workspace};
-use crate::mpk::trad::trad_recurrence_traced;
+use crate::mpk::trad::{self, trad_recurrence_traced};
 use crate::mpk::{MpkResult, NativeBackend, SpmvBackend};
-use crate::trace::{Metrics, TraceSession};
+use crate::trace::{wire, Metrics, TraceSession};
 
 use pool::{Job, RankPool};
 pub use pool::PoolStats;
@@ -241,6 +251,17 @@ struct CaSession {
     exec: Arc<CaExecPlan>,
 }
 
+/// This rank's endpoint under the processes executor: the socket
+/// communicator, a dedicated kernel backend, the rank's inner pool, and a
+/// per-sweep generation counter that keeps control-plane tags
+/// (gather/trace) unique across sweeps.
+struct ProcExec {
+    comm: SockComm,
+    backend: Box<dyn SpmvBackend + Send>,
+    inner: InnerExec,
+    gen: u64,
+}
+
 enum VariantState {
     Trad,
     Dlb {
@@ -266,6 +287,9 @@ pub struct MpkEngine {
     executor: ExecutorKind,
     state: VariantState,
     pool: Option<RankPool>,
+    /// This rank's socket endpoint under the processes executor (`None`
+    /// otherwise). SPMD: each launched process holds exactly one.
+    proc: Option<ProcExec>,
     /// Configured inner threads per rank (1 = serial per-rank compute).
     inner_threads: usize,
     /// Per-rank inner pools for the *sequential* executor (empty when
@@ -370,7 +394,7 @@ impl MpkEngine {
             report.into_result()?;
         }
         let trace = if cfg.trace { Some(TraceSession::new(dist_io.n_ranks())) } else { None };
-        let (pool, inners) = match cfg.executor {
+        let (pool, proc, inners) = match cfg.executor {
             ExecutorKind::Sim => {
                 let inners = if inner_threads >= 2 {
                     (0..dist_io.n_ranks())
@@ -379,12 +403,38 @@ impl MpkEngine {
                 } else {
                     Vec::new()
                 };
-                (None, inners)
+                (None, None, inners)
             }
             ExecutorKind::Threads { .. } => {
                 let pool =
                     RankPool::spawn(dist_io.n_ranks(), &cfg.backend, trace.as_ref(), inner_threads);
-                (Some(pool), Vec::new())
+                (Some(pool), None, Vec::new())
+            }
+            ExecutorKind::Processes { .. } => {
+                let env = RankEnv::from_env().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "the processes executor is SPMD: run this command under \
+                         `dlb-mpk launch --np {} -- ...` (or set DLB_MPK_RANK / \
+                         DLB_MPK_WORLD / DLB_MPK_SOCK_DIR yourself)",
+                        dist_io.n_ranks()
+                    )
+                })?;
+                anyhow::ensure!(
+                    env.world == dist_io.n_ranks(),
+                    "launched world size {} does not match the matrix's {} ranks",
+                    env.world,
+                    dist_io.n_ranks()
+                );
+                let mut comm = SockComm::from_env_for(&env, crate::exec::next_epoch())?;
+                if let Some(ts) = &trace {
+                    comm.set_tracer(ts.recorder(env.rank));
+                }
+                let inner = InnerExec::new(inner_threads, env.rank, &cfg.backend, trace.as_ref());
+                (
+                    None,
+                    Some(ProcExec { comm, backend: cfg.backend.make(), inner, gen: 0 }),
+                    Vec::new(),
+                )
             }
         };
 
@@ -395,6 +445,7 @@ impl MpkEngine {
             executor: cfg.executor,
             state,
             pool,
+            proc,
             inner_threads,
             inners,
             trace,
@@ -433,6 +484,8 @@ impl MpkEngine {
         self.sweeps += 1;
         if self.pool.is_some() {
             self.sweep_pool(p_m, x0, x_m1, rec)
+        } else if self.proc.is_some() {
+            self.sweep_proc(p_m, x0, x_m1, rec)
         } else {
             self.sweep_sim(p_m, x0, x_m1, rec)
         }
@@ -535,6 +588,153 @@ impl MpkEngine {
 
         let outs = self.pool.as_mut().expect("threads executor has a pool").sweep(jobs);
         assemble(&dist, p_m, outs)
+    }
+
+    /// SPMD sweep under the processes executor: run *this* rank's kernel
+    /// against the socket communicator, then allgather every rank's
+    /// `(RankRun, CommStats)` over the control plane so each process
+    /// assembles the identical global [`SweepResult`] — the same
+    /// rank-ascending merge as [`assemble`] under the other executors, so
+    /// results are bitwise identical across all three. Ends by shipping
+    /// ranks' trace buffers to rank 0 when tracing (a collective, so it
+    /// must happen inside the sweep, not at export time).
+    fn sweep_proc(
+        &mut self,
+        p_m: usize,
+        x0: &[f64],
+        x_m1: Option<&[f64]>,
+        rec: Recurrence,
+    ) -> SweepResult {
+        let dist = self.dist.clone();
+        let n = dist.n_ranks();
+        // Resolve the tail plan before borrowing the endpoint (both need
+        // `&mut self`); every process builds the same plan from the same
+        // inputs, so plan caches stay in lockstep without communication.
+        enum Kernel {
+            Trad,
+            Dlb(Arc<DlbPlan>),
+            Ca(Arc<CsrMatrix>, Arc<CaSession>),
+        }
+        let kernel = if matches!(self.state, VariantState::Trad) {
+            Kernel::Trad
+        } else if matches!(self.state, VariantState::Dlb { .. }) {
+            Kernel::Dlb(self.dlb_plan_for(p_m))
+        } else {
+            let sess = self.ca_session_for(p_m);
+            let a = match &self.state {
+                VariantState::Ca { a, .. } => a.clone(),
+                _ => unreachable!(),
+            };
+            Kernel::Ca(a, sess)
+        };
+        let xs = dist.scatter(x0);
+        let xm1s = x_m1.map(|v| dist.scatter(v));
+
+        let proc = self.proc.as_mut().expect("processes executor has an endpoint");
+        proc.gen += 1;
+        let i = proc.comm.rank();
+        let xm1 = xm1s.as_ref().map(|v| v[i].as_slice());
+        let before = proc.comm.stats().clone();
+        let run = match &kernel {
+            Kernel::Trad => trad::trad_rank(
+                &dist.ranks[i],
+                &xs[i],
+                xm1,
+                p_m,
+                rec,
+                &mut proc.comm,
+                proc.backend.as_mut(),
+                &mut proc.inner,
+            ),
+            Kernel::Dlb(plan) => dlb::dlb_rank(
+                &plan.dist.ranks[i],
+                &plan.ranks[i],
+                plan.p_m,
+                &xs[i],
+                xm1,
+                rec,
+                &mut proc.comm,
+                proc.backend.as_mut(),
+                &mut proc.inner,
+            ),
+            Kernel::Ca(a, sess) => ca::ca_rank(
+                a,
+                &dist.ranks[i],
+                &sess.exec.sends[i],
+                &sess.exec.recvs[i],
+                &sess.exec.ext[i],
+                &xs[i],
+                p_m,
+                &mut proc.comm,
+                &mut proc.inner,
+            ),
+        };
+        let delta = proc.comm.stats().delta_since(&before);
+
+        // Allgather: every rank ships its (run, delta) to every peer with a
+        // generation-tagged control frame (invisible to CommStats), then
+        // receives each peer's. The kernel's final end_round barrier has
+        // already synchronized everyone, so frames can't cross sweeps even
+        // before the generation tag makes that structurally impossible.
+        let tag = ctrl_tag(CTRL_GATHER, proc.gen);
+        let mine = encode_rank_out(&run, &delta, p_m, dist.ranks[i].owned.len());
+        for to in (0..n).filter(|&t| t != i) {
+            proc.comm.send_ctrl(to, tag, mine.clone());
+        }
+        let mut outs: Vec<(RankRun, CommStats)> = Vec::with_capacity(n);
+        for from in 0..n {
+            if from == i {
+                outs.push((
+                    RankRun { ys: run.ys.clone(), flop_nnz: run.flop_nnz },
+                    delta.clone(),
+                ));
+            } else {
+                let payload = proc.comm.recv_ctrl(from, tag);
+                outs.push(decode_rank_out(&payload, p_m, dist.ranks[from].owned.len()));
+            }
+        }
+        let result = assemble(&dist, p_m, outs);
+        self.harvest_proc();
+        result
+    }
+
+    /// Collective trace harvest under the processes executor: ranks `> 0`
+    /// encode their drained main + inner-lane streams
+    /// ([`wire::encode_streams`]) and ship them to rank 0, which absorbs
+    /// everything into its [`TraceSession`]. No-op unless tracing. Runs at
+    /// the end of every `sweep_proc` — every process executes it, which is
+    /// what makes the exchange safe to block on.
+    fn harvest_proc(&mut self) {
+        let Some(ts) = self.trace.as_mut() else {
+            return;
+        };
+        let proc = self.proc.as_mut().expect("processes executor has an endpoint");
+        let i = proc.comm.rank();
+        let n = proc.comm.n_ranks();
+        let main = proc.comm.take_trace_events();
+        let lanes = proc.inner.harvest();
+        let tag = ctrl_tag(CTRL_TRACE, proc.gen);
+        if i == 0 {
+            ts.absorb(0, main);
+            for (lane, ev) in lanes {
+                if !ev.is_empty() {
+                    ts.absorb_lane(0, lane, ev);
+                }
+            }
+            for from in 1..n {
+                let payload = proc.comm.recv_ctrl(from, tag);
+                let (m, ls) = wire::decode_streams(&payload);
+                ts.absorb(from, m);
+                for (lane, ev) in ls {
+                    if !ev.is_empty() {
+                        ts.absorb_lane(from, lane, ev);
+                    }
+                }
+            }
+        } else {
+            let payload = wire::encode_streams(&main, &lanes);
+            proc.comm.send_ctrl(0, tag, payload);
+        }
     }
 
     /// Cached DLB plan for a sweep length, building (and counting) on miss.
@@ -718,6 +918,60 @@ impl MpkEngine {
             _ => None,
         }
     }
+}
+
+/// Encode one rank's sweep output for the processes-executor allgather:
+/// `[flop_nnz][messages][bytes][rounds][max_message_bytes][wait_len]
+/// [wait_ns...]` as `u64` bit patterns riding in `f64`s (lossless — pure
+/// bit transport, same trick as [`wire`]), then the owned prefix
+/// (`n_owned` entries) of each power vector `ys[1..=p_m]` verbatim. Halo
+/// tails are scratch (see [`RankRun`]) and never cross the wire.
+fn encode_rank_out(run: &RankRun, delta: &CommStats, p_m: usize, n_owned: usize) -> Vec<f64> {
+    let mut out = Vec::with_capacity(6 + delta.wait_ns.len() + p_m * n_owned);
+    out.push(f64::from_bits(run.flop_nnz as u64));
+    out.push(f64::from_bits(delta.messages as u64));
+    out.push(f64::from_bits(delta.bytes as u64));
+    out.push(f64::from_bits(delta.rounds as u64));
+    out.push(f64::from_bits(delta.max_message_bytes as u64));
+    out.push(f64::from_bits(delta.wait_ns.len() as u64));
+    out.extend(delta.wait_ns.iter().map(|&w| f64::from_bits(w)));
+    for p in 1..=p_m {
+        out.extend_from_slice(&run.ys[p][..n_owned]);
+    }
+    out
+}
+
+/// Decode a peer's [`encode_rank_out`] payload. `n_owned` is the peer's
+/// owned-row count from the (SPMD-identical) partition — exactly what the
+/// sender shipped per power vector, asserted by the exact split of the
+/// trailing values into `p_m` vectors of `n_owned` entries each (all
+/// [`assemble`] ever reads).
+fn decode_rank_out(payload: &[f64], p_m: usize, n_owned: usize) -> (RankRun, CommStats) {
+    let flop_nnz = payload[0].to_bits() as usize;
+    let messages = payload[1].to_bits() as usize;
+    let bytes = payload[2].to_bits() as usize;
+    let rounds = payload[3].to_bits() as usize;
+    let max_message_bytes = payload[4].to_bits() as usize;
+    let wait_len = payload[5].to_bits() as usize;
+    let mut pos = 6;
+    let wait_ns: Vec<u64> = payload[pos..pos + wait_len].iter().map(|w| w.to_bits()).collect();
+    pos += wait_len;
+    let rest = &payload[pos..];
+    assert!(
+        p_m >= 1 && rest.len() % p_m == 0,
+        "rank-out payload: {} trailing values do not split into {p_m} power vectors",
+        rest.len()
+    );
+    let per = rest.len() / p_m;
+    assert_eq!(per, n_owned, "peer shipped {per} values per power, partition owns {n_owned}");
+    let mut ys = vec![Vec::new()]; // ys[0] (the input) is never read by assemble
+    for p in 0..p_m {
+        ys.push(rest[p * per..(p + 1) * per].to_vec());
+    }
+    (
+        RankRun { ys, flop_nnz },
+        CommStats { messages, bytes, rounds, max_message_bytes, wait_ns },
+    )
 }
 
 /// The sim-executor inner pools as the kernels' optional seam: `None` when

@@ -1,7 +1,9 @@
-//! The halo-exchange contract ([`Communicator`]) and its two transports:
-//! [`SimComm`] (sequential lockstep mailboxes — today's counting simulator)
-//! and [`ThreadComm`] (real `std::sync::mpsc` channels, one OS thread per
-//! rank).
+//! The halo-exchange contract ([`Communicator`]) and its in-process
+//! transports: [`SimComm`] (sequential lockstep mailboxes — today's
+//! counting simulator) and [`ThreadComm`] (real `std::sync::mpsc`
+//! channels, one OS thread per rank). The multi-process socket transport
+//! lives in [`super::sock`]; the full transport contract a new
+//! implementation must satisfy is written down in `docs/COMMUNICATOR.md`.
 //!
 //! The trait mirrors the nonblocking MPI set the paper's kernels are
 //! written against: `MPI_Isend` ([`Communicator::send`]), a matching
@@ -12,7 +14,8 @@
 //! ([`Communicator::end_round`], `MPI_Waitall` + barrier;
 //! [`Communicator::advance_round`] is the barrier-free variant the async
 //! remainder uses on intermediate rounds). On top of the primitives sit
-//! provided halo helpers that follow each rank's [`SendPlan`]/[`RecvPlan`]:
+//! provided halo helpers that follow each rank's
+//! [`crate::distsim::SendPlan`]/[`crate::distsim::RecvPlan`]:
 //! [`Communicator::post_halo_sends`] and [`Communicator::wait_halo`].
 //! Kernels that overlap communication with computation (DLB phase 3) call
 //! the post/wait halves separately — or, with
@@ -38,6 +41,111 @@ use crate::distsim::{CommStats, RankLocal};
 use crate::trace::{RankRecorder, Span};
 
 /// Point-to-point halo communication endpoint of one rank.
+///
+/// This trait **is** the transport contract: a new implementation that
+/// honors the rules below runs every kernel in this crate (TRAD/CA/DLB,
+/// inner threads, async remainder) unmodified — see `docs/COMMUNICATOR.md`
+/// for the prose version with the MPI correspondences spelled out.
+///
+/// ## Contract
+///
+/// 1. **Tag discipline.** Kernels address messages by `(from, tag)` where
+///    `tag` is a small per-sweep round number. Within one sweep a given
+///    `(from, to, tag)` triple is sent **at most once**, and the sweep's
+///    final [`Communicator::end_round`] completes only after every posted
+///    message was received — so tags may be reused by the next sweep
+///    without ambiguity (transports may assert the no-duplicate rule).
+/// 2. **Exactly-once delivery.** Every send is matched by exactly one
+///    completed receive of the same `(from, tag)`; arrivals the receiver
+///    has not asked for yet are buffered (an eager-protocol
+///    unexpected-message queue), never dropped or reordered into a
+///    different key.
+/// 3. **Nonblocking sends.** [`Communicator::send`] copies the payload out
+///    and returns immediately (buffered `MPI_Isend`); it must never wait
+///    for the matching receive (kernels post all sends of a round before
+///    receiving).
+/// 4. **Receiver-side accounting.** Exactly the successful completion of a
+///    data receive bumps `messages`/`bytes`/`max_message_bytes` (use
+///    `account_recv`); [`Communicator::try_recv`] misses and any
+///    transport-internal traffic (barriers, harvests) account nothing.
+///    Every round close appends one entry to `wait_ns` and bumps `rounds`.
+///    This is what keeps per-rank stats bit-identical across transports.
+/// 5. **Deterministic tie-break.** [`Communicator::recv_any`] completes
+///    the lowest request index among the already-available messages, so
+///    deterministic transports replay identically.
+/// 6. **Failure beats deadlock.** If a peer dies mid-run, blocked
+///    operations must fail loudly (panic/poison/EOF error) rather than
+///    hang — every transport here cascades the failure to all peers.
+///
+/// ## Minimal transport sketch
+///
+/// A toy two-rank mailbox transport showing the minimum a conforming
+/// implementation provides (`try_recv`/`recv_any`/`advance_round` have
+/// safe blocking defaults):
+///
+/// ```
+/// use std::collections::HashMap;
+/// use std::sync::{Arc, Mutex};
+/// use dlb_mpk::distsim::CommStats;
+/// use dlb_mpk::exec::Communicator;
+/// use dlb_mpk::trace::RankRecorder;
+///
+/// /// Mailbox shared by both endpoints, keyed `(from, to, tag)`.
+/// type Mailbox = Arc<Mutex<HashMap<(usize, usize, u64), Vec<f64>>>>;
+///
+/// struct ToyComm {
+///     rank: usize,
+///     n: usize,
+///     mail: Mailbox,
+///     stats: CommStats,
+///     tracer: RankRecorder,
+/// }
+///
+/// impl Communicator for ToyComm {
+///     fn rank(&self) -> usize { self.rank }
+///     fn n_ranks(&self) -> usize { self.n }
+///     fn tracer(&mut self) -> &mut RankRecorder { &mut self.tracer }
+///
+///     fn send(&mut self, to: usize, tag: u64, payload: Vec<f64>) {
+///         let prev = self.mail.lock().unwrap().insert((self.rank, to, tag), payload);
+///         assert!(prev.is_none(), "tag discipline: one send per (from, to, tag)");
+///     }
+///
+///     fn recv(&mut self, from: usize, tag: u64) -> Vec<f64> {
+///         // A real transport blocks here; the toy requires the send to
+///         // be posted already (like SimComm under a lockstep executor).
+///         let p = self.mail.lock().unwrap().remove(&(from, self.rank, tag))
+///             .expect("message posted");
+///         self.stats.messages += 1; // receiver-side accounting
+///         self.stats.bytes += p.len() * 8;
+///         self.stats.max_message_bytes = self.stats.max_message_bytes.max(p.len() * 8);
+///         p
+///     }
+///
+///     fn end_round(&mut self) {
+///         self.stats.rounds += 1;     // a real transport synchronizes ranks here
+///         self.stats.wait_ns.push(0); // keep the per-round wait series aligned
+///     }
+///
+///     fn stats(&self) -> &CommStats { &self.stats }
+/// }
+///
+/// let mail = Mailbox::default();
+/// let mk = |rank| ToyComm {
+///     rank,
+///     n: 2,
+///     mail: mail.clone(),
+///     stats: CommStats::default(),
+///     tracer: RankRecorder::disabled(),
+/// };
+/// let (mut a, mut b) = (mk(0), mk(1));
+/// a.send(1, 0, vec![2.5]);
+/// assert_eq!(b.recv(0, 0), vec![2.5]);
+/// a.end_round();
+/// b.end_round();
+/// assert_eq!(b.stats().messages, 1);
+/// assert_eq!(b.stats().rounds, 1);
+/// ```
 pub trait Communicator: Send {
     fn rank(&self) -> usize;
     fn n_ranks(&self) -> usize;
@@ -104,7 +212,7 @@ pub trait Communicator: Send {
     fn stats(&self) -> &CommStats;
 
     /// Post this rank's halo sends of `x` for round `tag` (one message per
-    /// non-empty [`SendPlan`]).
+    /// non-empty [`crate::distsim::SendPlan`]).
     fn post_halo_sends(&mut self, r: &RankLocal, tag: u64, x: &[f64]) {
         for sp in &r.send {
             let payload: Vec<f64> = sp.rows.iter().map(|&row| x[row as usize]).collect();
@@ -112,8 +220,8 @@ pub trait Communicator: Send {
         }
     }
 
-    /// Receive every [`RecvPlan`] of round `tag` into the halo tail of `x`,
-    /// then close the round.
+    /// Receive every [`crate::distsim::RecvPlan`] of round `tag` into the
+    /// halo tail of `x`, then close the round.
     fn wait_halo(&mut self, r: &RankLocal, tag: u64, x: &mut [f64]) {
         let nl = r.n_local();
         for rp in &r.recv {
@@ -131,7 +239,11 @@ pub trait Communicator: Send {
     }
 }
 
-fn account_recv(stats: &mut CommStats, len: usize) {
+/// Receiver-side accounting shared by every transport: one message, its
+/// payload bytes, and the running max (see the module-level *Accounting*
+/// rules — calling this anywhere but on a successful receive breaks the
+/// cross-transport stat equality the tests assert).
+pub(crate) fn account_recv(stats: &mut CommStats, len: usize) {
     stats.messages += 1;
     let bytes = len * std::mem::size_of::<f64>();
     stats.bytes += bytes;
@@ -140,7 +252,7 @@ fn account_recv(stats: &mut CommStats, len: usize) {
 
 /// Payload bytes as the `u32` a [`Span`] carries (halo messages are far
 /// below 4 GiB; saturate rather than wrap if one ever is not).
-fn span_bytes(len: usize) -> u32 {
+pub(crate) fn span_bytes(len: usize) -> u32 {
     (len * std::mem::size_of::<f64>()).min(u32::MAX as usize) as u32
 }
 

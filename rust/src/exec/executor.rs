@@ -25,34 +25,48 @@ pub enum ExecutorKind {
     /// a nonzero `n` *sets* the rank count (`threads(8)` = run 8 ranks on
     /// 8 threads, overriding `--ranks`) — see [`ExecutorKind::ranks`].
     Threads { n: usize },
+    /// One OS *process* per rank over Unix-domain sockets
+    /// ([`super::SockComm`]). The engine builds the endpoint for **this**
+    /// process's rank from the `DLB_MPK_RANK`/`DLB_MPK_WORLD` env protocol
+    /// (set by `dlb-mpk launch --np N`); `n` follows the same zero-is-auto
+    /// rule as [`ExecutorKind::Threads`], validated against the launched
+    /// world size.
+    Processes { n: usize },
 }
 
 impl ExecutorKind {
-    /// Parse `"sim"`, `"threads"`, or `"threads(N)"`.
+    /// Parse `"sim"`, `"threads"`/`"threads(N)"`, or
+    /// `"processes"`/`"processes(N)"`.
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "sim" => Some(Self::Sim),
             "threads" => Some(Self::Threads { n: 0 }),
+            "processes" => Some(Self::Processes { n: 0 }),
             _ => {
-                let inner = s.strip_prefix("threads(")?.strip_suffix(')')?;
-                Some(Self::Threads { n: inner.parse().ok()? })
+                if let Some(inner) = s.strip_prefix("threads(").and_then(|r| r.strip_suffix(')')) {
+                    return Some(Self::Threads { n: inner.parse().ok()? });
+                }
+                let inner = s.strip_prefix("processes(")?.strip_suffix(')')?;
+                Some(Self::Processes { n: inner.parse().ok()? })
             }
         }
     }
 
-    /// Short label for reports (`sim` / `thr`).
+    /// Short label for reports (`sim` / `thr` / `proc`).
     pub fn label(&self) -> &'static str {
         match self {
             Self::Sim => "sim",
             Self::Threads { .. } => "thr",
+            Self::Processes { .. } => "proc",
         }
     }
 
-    /// Effective rank count: `threads(n)` with nonzero `n` overrides the
-    /// configured default (one thread per rank either way).
+    /// Effective rank count: `threads(n)`/`processes(n)` with nonzero `n`
+    /// overrides the configured default (one thread/process per rank
+    /// either way).
     pub fn ranks(&self, default: usize) -> usize {
         match self {
-            Self::Threads { n } if *n > 0 => *n,
+            Self::Threads { n } | Self::Processes { n } if *n > 0 => *n,
             _ => default,
         }
     }
@@ -68,11 +82,16 @@ impl ExecutorKind {
     /// zero-rank run). Only an explicit `threads(n)`, which *sets* the
     /// rank count, can disagree with a prebuilt matrix.
     pub fn validate(&self, n_ranks: usize) -> anyhow::Result<()> {
-        if let Self::Threads { n } = self {
-            anyhow::ensure!(
+        match self {
+            Self::Threads { n } => anyhow::ensure!(
                 *n == 0 || *n == n_ranks,
                 "executor threads({n}) does not match the matrix's {n_ranks} ranks"
-            );
+            ),
+            Self::Processes { n } => anyhow::ensure!(
+                *n == 0 || *n == n_ranks,
+                "executor processes({n}) does not match the matrix's {n_ranks} ranks"
+            ),
+            Self::Sim => {}
         }
         Ok(())
     }
@@ -84,6 +103,8 @@ impl std::fmt::Display for ExecutorKind {
             Self::Sim => write!(f, "sim"),
             Self::Threads { n: 0 } => write!(f, "threads"),
             Self::Threads { n } => write!(f, "threads({n})"),
+            Self::Processes { n: 0 } => write!(f, "processes"),
+            Self::Processes { n } => write!(f, "processes({n})"),
         }
     }
 }
@@ -248,6 +269,10 @@ pub fn run(
                 dlb_threaded(&plan, x, None, Recurrence::Power)
             }
         },
+        ExecutorKind::Processes { .. } => panic!(
+            "the processes executor is SPMD — construct an MpkEngine inside a \
+             `dlb-mpk launch`-spawned rank process instead of calling exec::run"
+        ),
     }
 }
 
@@ -263,14 +288,23 @@ mod tests {
         assert_eq!(ExecutorKind::parse("sim"), Some(ExecutorKind::Sim));
         assert_eq!(ExecutorKind::parse("threads"), Some(ExecutorKind::Threads { n: 0 }));
         assert_eq!(ExecutorKind::parse("threads(4)"), Some(ExecutorKind::Threads { n: 4 }));
+        assert_eq!(ExecutorKind::parse("processes"), Some(ExecutorKind::Processes { n: 0 }));
+        assert_eq!(ExecutorKind::parse("processes(2)"), Some(ExecutorKind::Processes { n: 2 }));
         assert_eq!(ExecutorKind::parse("mpi"), None);
         assert_eq!(ExecutorKind::parse("threads(x)"), None);
+        assert_eq!(ExecutorKind::parse("processes(x)"), None);
         assert_eq!(format!("{}", ExecutorKind::Threads { n: 4 }), "threads(4)");
+        assert_eq!(format!("{}", ExecutorKind::Processes { n: 0 }), "processes");
+        assert_eq!(format!("{}", ExecutorKind::Processes { n: 2 }), "processes(2)");
+        assert_eq!(ExecutorKind::Processes { n: 2 }.label(), "proc");
         assert!(ExecutorKind::Threads { n: 3 }.validate(4).is_err());
         assert!(ExecutorKind::Threads { n: 0 }.validate(4).is_ok());
+        assert!(ExecutorKind::Processes { n: 3 }.validate(4).is_err());
+        assert!(ExecutorKind::Processes { n: 0 }.validate(4).is_ok());
         // nonzero n overrides the configured rank count
         assert_eq!(ExecutorKind::Threads { n: 3 }.ranks(8), 3);
         assert_eq!(ExecutorKind::Threads { n: 0 }.ranks(8), 8);
+        assert_eq!(ExecutorKind::Processes { n: 3 }.ranks(8), 3);
         assert_eq!(ExecutorKind::Sim.ranks(8), 8);
     }
 

@@ -3,7 +3,7 @@
 //! The [`crate::distsim`] layer defines what a rank owns and what must move
 //! between ranks; the [`crate::mpk`] kernels are written as **single-rank
 //! functions** against the [`Communicator`] halo-exchange contract
-//! (`trad_rank`, `dlb_rank`, `ca_rank`). This module supplies the two ways
+//! (`trad_rank`, `dlb_rank`, `ca_rank`). This module supplies three ways
 //! to execute them:
 //!
 //! * **Sim** ([`SimComm`] + [`lockstep_halo_exchange`]) — all ranks advance
@@ -17,10 +17,16 @@
 //!   *measured* parallel wall-clock. DLB's remainder-round sends are posted
 //!   as soon as their payload rows are final, overlapping communication
 //!   with the cache-blocked wavefront (paper §5).
+//! * **Processes** ([`SockComm`]) — every rank is a separate OS *process*
+//!   exchanging framed messages over Unix-domain sockets; the stand-in
+//!   for (and template of) a real MPI transport. Launched SPMD-style via
+//!   `dlb-mpk launch --np N -- <cmd>` or any launcher that sets the
+//!   `DLB_MPK_RANK`/`DLB_MPK_WORLD` env protocol ([`RankEnv`]).
 //!
-//! Both executors produce bitwise-identical `powers` and identical merged
+//! All executors produce bitwise-identical `powers` and identical merged
 //! [`crate::distsim::CommStats`] (cross-validated in
-//! `rust/tests/exec_equivalence.rs`); only wall-clock differs.
+//! `rust/tests/exec_equivalence.rs` and `rust/tests/sock_proc.rs`); only
+//! wall-clock differs.
 //!
 //! The **primary public entry point** over these executors is
 //! [`crate::engine::MpkEngine`] — a prepare-once/apply-many session that
@@ -36,11 +42,13 @@
 
 pub mod comm;
 pub mod executor;
+pub mod sock;
 
 pub use comm::{
     lockstep_halo_exchange, sim_comms, thread_comms, Communicator, SimComm, ThreadComm,
 };
 pub use executor::{ca_threaded, dlb_threaded, run, trad_threaded, ExecutorKind};
+pub use sock::{next_epoch, sock_comms, RankEnv, SockComm};
 
 /// What a single-rank kernel produces: the local power vectors plus the
 /// rank's share of the flop count. `ys[p]` is the local vector of power

@@ -43,6 +43,38 @@
 //! their own [`SpmvBackend`] instance and, when tracing, a lane
 //! [`RankRecorder`] whose `inner.task(g,p)` spans export as separate
 //! chrome-trace tids (`rank * LANE_STRIDE + lane`).
+//!
+//! # Why the `unsafe impl Send` is sound
+//!
+//! This module contains the crate's only `unsafe` code: `SharedBuf` /
+//! `SharedBufMut` are `(ptr, len)` views of the power buffers, declared
+//! `Send` so batch tasks can carry them to worker threads. The borrow
+//! checker cannot verify them, so the argument is spelled out here and
+//! relied on everywhere:
+//!
+//! 1. **Lifetime** — views are built inside `run_batch`/`run_split_*`
+//!    from live `&[f64]`/`&mut [f64]` borrows, and those calls **block**
+//!    until every worker acks its last task. No view survives the call
+//!    that created it, so no pointer outlives the buffer it points into.
+//! 2. **Aliasing across threads** — two tasks of one batch never
+//!    write the same element and never read what a same-batch task
+//!    writes. That is exactly the [`crate::race::parallel_batches`]
+//!    independence rule (proved in its docs) for wavefront batches, and
+//!    row-range/run disjointness for the flat splits.
+//! 3. **Not just hand-waving** — rule 2 is machine-checked *before
+//!    execution* by [`crate::verify`]: analyzer 1 re-derives batch
+//!    independence from the level structure (`SCHED_BATCH_*` rules) and
+//!    analyzer 2 proves every split decomposition disjoint and complete
+//!    (`ALIAS_*` rules). Engines verify by default in debug builds
+//!    ([`crate::engine::EngineConfig::verify_plans`]).
+//! 4. **Publication** — workers park on `mpsc` channels; the channel
+//!    send/recv pair is the happens-before edge that publishes buffer
+//!    writes to the next batch's readers, and the final acks publish
+//!    everything back to the rank thread before `run_batch` returns.
+//!
+//! Each `unsafe impl`/`unsafe fn` below carries the item-local version of
+//! this argument; `#![warn(clippy::undocumented_unsafe_blocks)]` keeps it
+//! that way.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;

@@ -23,8 +23,10 @@
 //! * [`distsim`] — simulated-MPI runtime: rank-local matrices, halo plans,
 //!   byte-accurate communication accounting, comm cost model.
 //! * [`exec`] — rank executors: the `Communicator` halo-exchange contract
-//!   with sequential (`SimComm`) and multi-threaded (`ThreadComm`, one OS
-//!   thread per rank over mpsc channels) transports, and the threaded
+//!   (`docs/COMMUNICATOR.md`) with sequential (`SimComm`), multi-threaded
+//!   (`ThreadComm`, one OS thread per rank over mpsc channels), and
+//!   multi-process (`SockComm`, one OS process per rank over Unix-domain
+//!   sockets, launched via `dlb-mpk launch`) transports, plus the threaded
 //!   drivers measuring real parallel wall-clock.
 //! * [`engine`] — **the public execution API**: `MpkEngine`, a
 //!   prepare-once/apply-many session owning the variant plan, tail-plan

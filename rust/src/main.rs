@@ -7,11 +7,16 @@
 //!   suite      list the Table-4 synthetic benchmark suite
 //!   bandwidth  measure the load-only bandwidth ladder (Fig. 7)
 //!   anderson   Chebyshev propagation demo on the Anderson model
+//!   launch     spawn N rank processes running one command SPMD (the
+//!              multi-process socket transport's launcher)
+//!   sweep      one engine sweep, dumped as executor-independent JSON
+//!              (bit-exact hex doubles — the cross-executor test oracle)
 //!
 //! Examples:
 //!   dlb-mpk run --matrix banded:400000,12,2000 --ranks 4 --pm 6 --cache-mib 8
 //!   dlb-mpk run --matrix suite:Serena-s,0.5 --ranks 2 --pm 4
 //!   dlb-mpk anderson --l 32 --w 1.0 --steps 5
+//!   dlb-mpk launch --np 2 -- anderson --l 16 --executor processes
 //!   dlb-mpk bandwidth --max-mib 512
 
 use anyhow::{bail, Context, Result};
@@ -39,6 +44,11 @@ fn real_main() -> Result<()> {
     if cmd == "trace-check" {
         return cmd_trace_check(&args[1..]);
     }
+    // launch takes the child command line after `--`, which Flags::parse
+    // would also reject
+    if cmd == "launch" {
+        return cmd_launch(&args[1..]);
+    }
     let flags = Flags::parse(&args[1..])?;
     match cmd.as_str() {
         "run" => cmd_run(&flags),
@@ -47,6 +57,7 @@ fn real_main() -> Result<()> {
         "suite" => cmd_suite(&flags),
         "bandwidth" => cmd_bandwidth(&flags),
         "anderson" => cmd_anderson(&flags),
+        "sweep" => cmd_sweep(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -68,12 +79,22 @@ fn include_str_usage() -> &'static str {
        run        TRAD vs DLB performance on one matrix\n\
        ca         CA-MPK baseline overheads\n\
        verify     static race & communication-plan check of the TRAD, CA,\n\
-                  and DLB plans for one configuration; prints a JSON report\n\
-                  and exits nonzero on any diagnostic\n\
+                  and DLB plans for one configuration; prints a JSON report;\n\
+                  --rule ID filters to one rule (see docs/VERIFY.md); exits\n\
+                  0 clean, 1 on usage errors, 2 on diagnostics\n\
        suite      print the Table-4 synthetic suite\n\
        bandwidth  load-only bandwidth ladder (Fig. 7)\n\
        anderson   Chebyshev/Anderson propagation demo (Fig. 11)\n\
        trace-check PATH [--min-ranks N]   validate a chrome trace JSON\n\
+       launch --np N [--sock-dir D] [--timeout-ms T] -- <cmd> [flags]\n\
+                  spawn N copies of this binary running `<cmd>` SPMD, one\n\
+                  OS process per rank, wired up over Unix-domain sockets\n\
+                  (sets DLB_MPK_RANK/WORLD/SOCK_DIR; rank 0 keeps stdout);\n\
+                  the command should pass --executor processes\n\
+       sweep      run one engine sweep and dump powers + counters as JSON\n\
+                  with hex-encoded doubles; the dump is byte-identical\n\
+                  across executors (--variant trad|ca|dlb, --out PATH,\n\
+                  --die-rank R to simulate a rank failure)\n\
      \n\
      COMMON FLAGS:\n\
        --matrix SPEC    stencil2d:NX,NY | stencil3d:NX,NY,NZ |\n\
@@ -83,9 +104,11 @@ fn include_str_usage() -> &'static str {
        --pm P           power p_m (default 4)\n\
        --cache-mib C    DLB cache budget (default 16)\n\
        --partitioner M  block | greedy | bisect (default bisect)\n\
-       --executor E     sim | threads | threads(N)  (default sim; threads =\n\
-                        one OS thread per rank, measured wall-clock;\n\
-                        threads(N) runs N ranks/threads, overriding --ranks)\n\
+       --executor E     sim | threads[(N)] | processes[(N)]  (default sim;\n\
+                        threads = one OS thread per rank, measured\n\
+                        wall-clock; processes = one OS process per rank\n\
+                        over Unix sockets, run under `dlb-mpk launch`;\n\
+                        the (N) forms override --ranks)\n\
        --inner-threads K  within-rank worker threads (default 1 = serial;\n\
                         K >= 2 row-splits each rank's compute across K\n\
                         participants, bitwise identical to serial)\n\
@@ -195,7 +218,7 @@ fn config(flags: &Flags) -> Result<RunConfig> {
     let partitioner = Method::parse(flags.get("partitioner").unwrap_or("bisect"))
         .context("--partitioner must be block|greedy|bisect")?;
     let executor = ExecutorKind::parse(flags.get("executor").unwrap_or("sim"))
-        .context("--executor must be sim|threads|threads(N)")?;
+        .context("--executor must be sim|threads[(N)]|processes[(N)]")?;
     Ok(RunConfig {
         matrix,
         n_ranks: flags.usize("ranks", 1)?,
@@ -248,36 +271,60 @@ fn cmd_verify(flags: &Flags) -> Result<()> {
     use dlb_mpk::distsim::DistMatrix;
     use dlb_mpk::mpk::{ca, dlb};
     use dlb_mpk::partition::partition;
-    use dlb_mpk::verify::Verifier;
+    use dlb_mpk::verify::{Rule, Verifier};
 
+    // Exit codes are machine-readable (docs/VERIFY.md): 0 = clean,
+    // 1 = usage/build errors (via real_main), 2 = diagnostics found.
+    let rule = flags
+        .get("rule")
+        .map(|id| {
+            Rule::parse(id).with_context(|| {
+                format!("unknown rule ID {id:?} (see docs/VERIFY.md for the {} IDs)", Rule::ALL.len())
+            })
+        })
+        .transpose()?;
     let cfg = config(flags)?;
     let a = cfg.matrix.build()?;
     let part = partition(&a, cfg.n_ranks, cfg.partitioner);
     let dist = DistMatrix::build(&a, &part);
     let v = Verifier::with_inner_threads(cfg.inner_threads);
 
-    let trad = v.check_trad(&dist, cfg.p_m);
+    let mut trad = v.check_trad(&dist, cfg.p_m);
     let ca_plan = ca::ca_exec_plan(&a, &dist, cfg.p_m);
-    let ca_rep = v.check_ca(&dist, &ca_plan);
+    let mut ca_rep = v.check_ca(&dist, &ca_plan);
     let opts = dlb::DlbOptions {
         cache_bytes: cfg.cache_bytes,
         s_m: cfg.s_m,
         async_remainder: cfg.async_remainder,
     };
     let plan = dlb::plan(&dist, cfg.p_m, &opts);
-    let dlb_rep = v.check_all(&plan.dist, &plan.ranks, cfg.p_m);
+    let mut dlb_rep = v.check_all(&plan.dist, &plan.ranks, cfg.p_m);
 
+    let rule_field = match rule {
+        Some(r) => {
+            trad.retain_rule(r);
+            ca_rep.retain_rule(r);
+            dlb_rep.retain_rule(r);
+            format!("\"{}\"", r.id())
+        }
+        None => "null".to_string(),
+    };
     let ok = trad.is_ok() && ca_rep.is_ok() && dlb_rep.is_ok();
     println!(
-        "{{\"ok\": {ok}, \"ranks\": {}, \"pm\": {}, \"variants\": {{\"trad\": {}, \"ca\": {}, \
-         \"dlb\": {}}}}}",
+        "{{\"ok\": {ok}, \"ranks\": {}, \"pm\": {}, \"rule\": {rule_field}, \"variants\": \
+         {{\"trad\": {}, \"ca\": {}, \"dlb\": {}}}}}",
         dist.n_ranks(),
         cfg.p_m,
         trad.to_json(),
         ca_rep.to_json(),
         dlb_rep.to_json(),
     );
-    anyhow::ensure!(ok, "static verification found diagnostics (see JSON above)");
+    if !ok {
+        // Not a bail: diagnostics are the *output*, reported above, and the
+        // distinct exit code lets scripts tell "plan is unsafe" (2) apart
+        // from "I was invoked wrong" (1).
+        std::process::exit(2);
+    }
     Ok(())
 }
 
@@ -324,12 +371,17 @@ fn cmd_anderson(flags: &Flags) -> Result<()> {
     let steps = flags.usize("steps", 5)?;
     let trace_out = flags.get("trace-out").map(str::to_string);
     let executor = ExecutorKind::parse(flags.get("executor").unwrap_or("sim"))
-        .context("--executor must be sim|threads|threads(N)")?;
+        .context("--executor must be sim|threads[(N)]|processes[(N)]")?;
     let ranks = executor.ranks(flags.usize("ranks", 1)?);
     let inner_threads = flags.usize("inner-threads", 1)?.max(1);
+    // Under the processes executor every launched rank runs this whole
+    // function SPMD; only rank 0 talks to the terminal / filesystem.
+    let rank0 = dlb_mpk::exec::RankEnv::from_env().map_or(true, |e| e.rank == 0);
     let acfg = AndersonConfig { lx: l, ly: l, lz: l, w, t: 1.0, t_perp: 1.0, seed: 42 };
     let h = anderson(&acfg);
-    println!("anderson {}^3: {} sites, {} nnz", l, h.n_rows(), h.nnz());
+    if rank0 {
+        println!("anderson {}^3: {} sites, {} nnz", l, h.n_rows(), h.nnz());
+    }
     let part = partition(&h, ranks, Method::RecursiveBisect);
     let dist = DistMatrix::build(&h, &part);
     let p_m = flags.usize("pm", 8)?;
@@ -350,31 +402,37 @@ fn cmd_anderson(flags: &Flags) -> Result<()> {
         },
     };
     let mut prop = ChebyshevPropagator::new(&h, &dist, ccfg)?;
-    println!(
-        "chebyshev: {} terms per step, block p_m = {p_m}, executor {executor} ({ranks} ranks, \
-         {inner_threads} inner thread(s)/rank)",
-        prop.n_terms
-    );
+    if rank0 {
+        println!(
+            "chebyshev: {} terms per step, block p_m = {p_m}, executor {executor} ({ranks} \
+             ranks, {inner_threads} inner thread(s)/rank)",
+            prop.n_terms
+        );
+    }
     let mut psi = wave_packet(&acfg, l as f64 / 8.0, [std::f64::consts::FRAC_PI_2, 0.0, 0.0]);
     for s in 0..steps {
         psi = prop.step(&psi);
         let com = center_of_mass(&acfg, &psi.density());
-        println!(
-            "step {:>3}: norm² = {:.12}  ⟨x⟩ = {:+.3}  ⟨y⟩ = {:+.3}  ⟨z⟩ = {:+.3}",
-            s + 1,
-            psi.norm2(),
-            com[0],
-            com[1],
-            com[2]
-        );
+        if rank0 {
+            println!(
+                "step {:>3}: norm² = {:.12}  ⟨x⟩ = {:+.3}  ⟨y⟩ = {:+.3}  ⟨z⟩ = {:+.3}",
+                s + 1,
+                psi.norm2(),
+                com[0],
+                com[1],
+                com[2]
+            );
+        }
     }
     if let Some(pool) = prop.engine().pool_stats() {
-        println!(
-            "(rank pool: {} threads spawned once, {} sweeps dispatched)",
-            pool.threads, pool.sweeps
-        );
+        if rank0 {
+            println!(
+                "(rank pool: {} threads spawned once, {} sweeps dispatched)",
+                pool.threads, pool.sweeps
+            );
+        }
     }
-    if let Some(path) = trace_out {
+    if let Some(path) = trace_out.filter(|_| rank0) {
         let json = prop
             .engine_mut()
             .chrome_trace_json()
@@ -427,5 +485,176 @@ fn cmd_trace_check(args: &[String]) -> Result<()> {
         check.n_ranks(),
         check.spans_per_rank.values().collect::<Vec<_>>()
     );
+    Ok(())
+}
+
+/// `dlb-mpk launch --np N [--sock-dir D] [--timeout-ms T] -- <cmd> ...`:
+/// spawn N copies of this binary running `<cmd>` SPMD, one per rank, with
+/// the `DLB_MPK_*` rendezvous environment set. Rank 0 keeps stdout (all
+/// ranks keep stderr, so panics surface); the launcher waits for every
+/// rank and fails reporting the first non-zero exit.
+fn cmd_launch(args: &[String]) -> Result<()> {
+    const USAGE: &str =
+        "usage: dlb-mpk launch --np N [--sock-dir DIR] [--timeout-ms T] -- <command> [flags]";
+    let mut np: Option<usize> = None;
+    let mut sock_dir: Option<String> = None;
+    let mut timeout_ms: Option<u64> = None;
+    let mut i = 0;
+    let child_args = loop {
+        let Some(a) = args.get(i) else { bail!("{USAGE}") };
+        match a.as_str() {
+            "--np" => {
+                let v = args.get(i + 1).context("--np needs a value")?;
+                np = Some(v.parse().context("--np")?);
+                i += 2;
+            }
+            "--sock-dir" => {
+                sock_dir = Some(args.get(i + 1).context("--sock-dir needs a value")?.clone());
+                i += 2;
+            }
+            "--timeout-ms" => {
+                let v = args.get(i + 1).context("--timeout-ms needs a value")?;
+                timeout_ms = Some(v.parse().context("--timeout-ms")?);
+                i += 2;
+            }
+            "--" => break &args[i + 1..],
+            other => bail!("launch: unexpected argument {other:?} before `--`\n{USAGE}"),
+        }
+    };
+    let np = np.with_context(|| format!("launch needs --np N\n{USAGE}"))?;
+    anyhow::ensure!(np >= 1, "--np must be >= 1");
+    anyhow::ensure!(!child_args.is_empty(), "launch: nothing to run after `--`\n{USAGE}");
+
+    let exe = std::env::current_exe().context("resolving the dlb-mpk executable")?;
+    let (dir, created) = match sock_dir {
+        Some(d) => (std::path::PathBuf::from(d), false),
+        None => {
+            let nonce = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map_or(0, |d| d.as_nanos() as u64);
+            let d = std::env::temp_dir()
+                .join(format!("dlb-mpk-launch-{}-{nonce:x}", std::process::id()));
+            (d, true)
+        }
+    };
+    std::fs::create_dir_all(&dir).with_context(|| format!("creating {}", dir.display()))?;
+
+    let mut children = Vec::with_capacity(np);
+    for r in 0..np {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.args(child_args)
+            .env("DLB_MPK_RANK", r.to_string())
+            .env("DLB_MPK_WORLD", np.to_string())
+            .env("DLB_MPK_SOCK_DIR", &dir);
+        if let Some(t) = timeout_ms {
+            cmd.env("DLB_MPK_TIMEOUT_MS", t.to_string());
+        }
+        if r != 0 {
+            cmd.stdout(std::process::Stdio::null());
+        }
+        children.push(cmd.spawn().with_context(|| format!("spawning rank {r}"))?);
+    }
+    let mut first_failure: Option<(usize, String)> = None;
+    for (r, mut child) in children.into_iter().enumerate() {
+        let status = child.wait().with_context(|| format!("waiting for rank {r}"))?;
+        if !status.success() && first_failure.is_none() {
+            first_failure = Some((r, status.to_string()));
+        }
+    }
+    if created {
+        let _ = std::fs::remove_dir_all(&dir); // ranks already unlinked their sockets
+    }
+    if let Some((r, status)) = first_failure {
+        bail!("rank {r} failed: {status}");
+    }
+    Ok(())
+}
+
+/// `dlb-mpk sweep`: one engine sweep over a deterministic input, dumped as
+/// JSON with every double hex-encoded (`f64::to_bits`). The dump excludes
+/// everything executor-dependent (wall-clock, `wait_ns`, the executor
+/// label), so sim / threads / processes runs of the same configuration
+/// produce **byte-identical** files — the oracle `rust/tests/sock_proc.rs`
+/// diffs. Under the processes executor only rank 0 writes/prints;
+/// `--die-rank R` makes rank R exit(3) right after engine construction,
+/// for the rank-failure (no-hang) tests.
+fn cmd_sweep(flags: &Flags) -> Result<()> {
+    use dlb_mpk::distsim::DistMatrix;
+    use dlb_mpk::engine::{BackendSpec, EngineConfig, MpkEngine, Variant};
+    use dlb_mpk::exec::RankEnv;
+    use dlb_mpk::mpk::dlb::{DlbOptions, Recurrence};
+    use dlb_mpk::partition::partition;
+
+    let cfg = config(flags)?;
+    let variant = match flags.get("variant").unwrap_or("dlb") {
+        "trad" => Variant::Trad,
+        "ca" => Variant::Ca,
+        "dlb" => Variant::Dlb(DlbOptions {
+            cache_bytes: cfg.cache_bytes,
+            s_m: cfg.s_m,
+            async_remainder: cfg.async_remainder,
+        }),
+        other => bail!("--variant must be trad|ca|dlb, got {other:?}"),
+    };
+    let a = cfg.matrix.build()?;
+    let ranks = cfg.executor.ranks(cfg.n_ranks);
+    let part = partition(&a, ranks, cfg.partitioner);
+    let dist = DistMatrix::build(&a, &part);
+    let eng_cfg = EngineConfig {
+        variant,
+        executor: cfg.executor,
+        backend: BackendSpec::Native,
+        trace: false,
+        inner_threads: cfg.inner_threads,
+        ..EngineConfig::default()
+    };
+    let mut eng = MpkEngine::from_config(&dist, cfg.p_m, &eng_cfg)?;
+    if let Some(die) = flags.get("die-rank") {
+        let die: usize = die.parse().context("--die-rank")?;
+        if RankEnv::from_env().is_some_and(|e| e.rank == die) {
+            // Simulated rank failure after the rendezvous: peers must
+            // detect the EOF and fail cleanly instead of hanging.
+            std::process::exit(3);
+        }
+    }
+    let x: Vec<f64> = (0..dist.n_global).map(|i| ((i % 17) as f64 - 8.0) / 9.0).collect();
+    let out = eng.sweep(&x, None, Recurrence::Power);
+
+    let mut json = String::new();
+    json.push_str(&format!(
+        "{{\"matrix\": \"{}\", \"ranks\": {ranks}, \"pm\": {}, \"variant\": \"{}\", \
+         \"flop_nnz\": {}, \"comm\": {{\"messages\": {}, \"bytes\": {}, \"rounds\": {}, \
+         \"max_message_bytes\": {}}}, \"powers\": [",
+        flags.get("matrix").unwrap_or("stencil2d:256,256"),
+        cfg.p_m,
+        variant.label(),
+        out.flop_nnz,
+        out.comm.messages,
+        out.comm.bytes,
+        out.comm.rounds,
+        out.comm.max_message_bytes,
+    ));
+    for (p, pw) in out.powers.iter().enumerate() {
+        if p > 0 {
+            json.push_str(", ");
+        }
+        json.push('[');
+        for (j, v) in pw.iter().enumerate() {
+            if j > 0 {
+                json.push(',');
+            }
+            json.push_str(&format!("\"{:016x}\"", v.to_bits()));
+        }
+        json.push(']');
+    }
+    json.push_str("]}\n");
+
+    let rank0 = RankEnv::from_env().map_or(true, |e| e.rank == 0);
+    if rank0 {
+        match flags.get("out") {
+            Some(path) => std::fs::write(path, &json).with_context(|| format!("writing {path}"))?,
+            None => print!("{json}"),
+        }
+    }
     Ok(())
 }

@@ -24,14 +24,18 @@
 //!   their rank's metric totals.
 //!
 //! Recorders travel inside the transports ([`crate::exec::comm::SimComm`],
-//! [`crate::exec::comm::ThreadComm`]) via [`crate::exec::Communicator::tracer`],
-//! so kernels and transports share one per-rank buffer — and any future
-//! transport (MPI) inherits the instrumentation seam for free.
+//! [`crate::exec::comm::ThreadComm`], [`crate::exec::SockComm`]) via
+//! [`crate::exec::Communicator::tracer`], so kernels and transports share
+//! one per-rank buffer — and any future transport (MPI) inherits the
+//! instrumentation seam for free. In a multi-**process** run the peer
+//! ranks' buffers are harvested over the socket at sweep end via the
+//! [`wire`] codec and absorbed into rank 0's session.
 //!
 //! [`CommStats`]: crate::distsim::CommStats
 
 pub mod chrome;
 pub mod metrics;
+pub mod wire;
 
 pub use chrome::{validate_chrome_trace, TraceCheck};
 pub use metrics::{Metrics, PeerFlow, RankMetrics};

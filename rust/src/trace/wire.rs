@@ -1,0 +1,270 @@
+//! Wire codec for trace events — how the multi-process transport
+//! ([`crate::exec::SockComm`]) harvests per-rank timelines.
+//!
+//! In a `processes` run each rank's [`super::RankRecorder`] lives in its
+//! own OS process, so at sweep end ranks `> 0` ship their drained event
+//! buffers (main stream + inner-pool lane streams) to rank 0 over the
+//! socket control plane, and rank 0 absorbs them into its
+//! [`super::TraceSession`]. The socket payload type is `Vec<f64>`, so
+//! events encode as fixed four-slot records whose `u64` bit patterns ride
+//! inside `f64`s (`f64::from_bits`/`to_bits` — pure bit transport, never
+//! arithmetic, so every pattern survives).
+//!
+//! Record layout per event: `[t_ns][code][a<<32|b][c-or-value]` where
+//! `code` is the [`super::Span`] discriminant (`1..=13`), `0` for an
+//! `End`, or `1000 + i` for a counter sample of the `i`-th name in the
+//! closed counter vocabulary ([`COUNTER_NAMES`] — counters carry
+//! `&'static str` names, so the wire sends a table index, not bytes).
+//! Streams are framed as `[n_streams]` then per stream
+//! `[lane][n_events][records...]`; the main stream is lane 0.
+//!
+//! Caveat (documented follow-up in ROADMAP): each process timestamps
+//! against its own session epoch, so cross-rank time alignment is not
+//! meaningful in a merged multi-process trace — per-rank span durations
+//! and balance (what `dlb-mpk trace-check` validates) are.
+
+use super::{Event, EventKind, Span};
+
+/// The closed vocabulary of counter names that may appear on the wire —
+/// exactly the `&'static str`s the kernels pass to
+/// [`super::RankRecorder::counter`]. Extend this table when adding a
+/// counter (the encoder panics on an unknown name, so a miss fails tests
+/// immediately rather than corrupting a trace).
+pub const COUNTER_NAMES: [&str; 2] = ["flop_nnz", "dlb.outstanding"];
+
+const CODE_END: u64 = 0;
+const CODE_COUNTER_BASE: u64 = 1000;
+
+#[inline]
+fn lift(x: u64) -> f64 {
+    f64::from_bits(x)
+}
+
+#[inline]
+fn sink(x: f64) -> u64 {
+    x.to_bits()
+}
+
+fn pack(a: u32, b: u32) -> u64 {
+    ((a as u64) << 32) | b as u64
+}
+
+fn unpack(ab: u64) -> (u32, u32) {
+    ((ab >> 32) as u32, ab as u32)
+}
+
+fn encode_event(out: &mut Vec<f64>, ev: &Event) {
+    let (code, ab, c): (u64, u64, u64) = match ev.kind {
+        EventKind::Begin(span) => match span {
+            Span::TradSpmv { power } => (1, pack(power, 0), 0),
+            Span::DlbWavefront { group, power } => (2, pack(group, power), 0),
+            Span::DlbRemainder { round, class } => (3, pack(round, class), 0),
+            Span::DlbSegment { round, class, peer } => (4, pack(round, class), peer as u64),
+            Span::CaExchange => (5, 0, 0),
+            Span::CaPromote { power } => (6, pack(power, 0), 0),
+            Span::CommSend { to, bytes } => (7, pack(to, bytes), 0),
+            Span::CommRecv { from, bytes } => (8, pack(from, bytes), 0),
+            Span::CommProbe { from } => (9, pack(from, 0), 0),
+            Span::CommWait { round } => (10, pack(round, 0), 0),
+            Span::JobDispatch => (11, 0, 0),
+            Span::JobPark => (12, 0, 0),
+            Span::InnerTask { group, power } => (13, pack(group, power), 0),
+        },
+        EventKind::End => (CODE_END, 0, 0),
+        EventKind::Counter { name, value } => {
+            let idx = COUNTER_NAMES
+                .iter()
+                .position(|&n| n == name)
+                .unwrap_or_else(|| panic!("counter {name:?} missing from trace::wire::COUNTER_NAMES"));
+            (CODE_COUNTER_BASE + idx as u64, 0, value.to_bits())
+        }
+    };
+    out.push(lift(ev.t_ns));
+    out.push(lift(code));
+    out.push(lift(ab));
+    out.push(lift(c));
+}
+
+fn decode_event(rec: &[f64]) -> Event {
+    let t_ns = sink(rec[0]);
+    let code = sink(rec[1]);
+    let ab = sink(rec[2]);
+    let c = sink(rec[3]);
+    let (a, b) = unpack(ab);
+    let kind = match code {
+        CODE_END => EventKind::End,
+        1 => EventKind::Begin(Span::TradSpmv { power: a }),
+        2 => EventKind::Begin(Span::DlbWavefront { group: a, power: b }),
+        3 => EventKind::Begin(Span::DlbRemainder { round: a, class: b }),
+        4 => EventKind::Begin(Span::DlbSegment { round: a, class: b, peer: c as u32 }),
+        5 => EventKind::Begin(Span::CaExchange),
+        6 => EventKind::Begin(Span::CaPromote { power: a }),
+        7 => EventKind::Begin(Span::CommSend { to: a, bytes: b }),
+        8 => EventKind::Begin(Span::CommRecv { from: a, bytes: b }),
+        9 => EventKind::Begin(Span::CommProbe { from: a }),
+        10 => EventKind::Begin(Span::CommWait { round: a }),
+        11 => EventKind::Begin(Span::JobDispatch),
+        12 => EventKind::Begin(Span::JobPark),
+        13 => EventKind::Begin(Span::InnerTask { group: a, power: b }),
+        i if i >= CODE_COUNTER_BASE => {
+            let idx = (i - CODE_COUNTER_BASE) as usize;
+            assert!(idx < COUNTER_NAMES.len(), "unknown counter index {idx} on the wire");
+            EventKind::Counter { name: COUNTER_NAMES[idx], value: f64::from_bits(c) }
+        }
+        other => panic!("unknown trace event code {other} on the wire"),
+    };
+    Event { t_ns, kind }
+}
+
+/// Encode one rank's drained streams — the main (lane-0) buffer plus any
+/// inner-pool `(lane, events)` buffers — into one socket payload.
+pub fn encode_streams(main: &[Event], lanes: &[(usize, Vec<Event>)]) -> Vec<f64> {
+    let n_events: usize = main.len() + lanes.iter().map(|(_, e)| e.len()).sum::<usize>();
+    let mut out = Vec::with_capacity(1 + (1 + lanes.len()) * 2 + n_events * 4);
+    out.push(lift(1 + lanes.len() as u64));
+    out.push(lift(0)); // main stream = lane 0
+    out.push(lift(main.len() as u64));
+    for ev in main {
+        encode_event(&mut out, ev);
+    }
+    for (lane, events) in lanes {
+        out.push(lift(*lane as u64));
+        out.push(lift(events.len() as u64));
+        for ev in events {
+            encode_event(&mut out, ev);
+        }
+    }
+    out
+}
+
+/// Decode a payload produced by [`encode_streams`] back into
+/// `(main_events, lane_streams)`. Panics on a malformed payload — the
+/// frames arrive over [`crate::exec::SockComm`]'s validated wire, so a
+/// decode failure is a codec bug, not an I/O condition.
+pub fn decode_streams(payload: &[f64]) -> (Vec<Event>, Vec<(usize, Vec<Event>)>) {
+    let mut pos = 0;
+    let mut take = |n: usize| {
+        let s = &payload[pos..pos + n];
+        pos += n;
+        s
+    };
+    let n_streams = sink(take(1)[0]) as usize;
+    let mut main = Vec::new();
+    let mut lanes = Vec::new();
+    for s in 0..n_streams {
+        let lane = sink(take(1)[0]) as usize;
+        let n_events = sink(take(1)[0]) as usize;
+        let mut events = Vec::with_capacity(n_events);
+        for _ in 0..n_events {
+            events.push(decode_event(take(4)));
+        }
+        if s == 0 {
+            assert_eq!(lane, 0, "first stream must be the main (lane-0) stream");
+            main = events;
+        } else {
+            lanes.push((lane, events));
+        }
+    }
+    assert_eq!(pos, payload.len(), "trailing bytes in trace payload");
+    (main, lanes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_kinds() -> Vec<Event> {
+        let spans = [
+            Span::TradSpmv { power: 3 },
+            Span::DlbWavefront { group: 7, power: 2 },
+            Span::DlbRemainder { round: 1, class: 2 },
+            Span::DlbSegment { round: 2, class: 1, peer: 5 },
+            Span::CaExchange,
+            Span::CaPromote { power: 4 },
+            Span::CommSend { to: 3, bytes: 4096 },
+            Span::CommRecv { from: 1, bytes: u32::MAX },
+            Span::CommProbe { from: 2 },
+            Span::CommWait { round: 9 },
+            Span::JobDispatch,
+            Span::JobPark,
+            Span::InnerTask { group: 11, power: 6 },
+        ];
+        let mut evs = Vec::new();
+        for (i, s) in spans.iter().enumerate() {
+            evs.push(Event { t_ns: i as u64 * 1_000, kind: EventKind::Begin(*s) });
+            evs.push(Event { t_ns: i as u64 * 1_000 + 500, kind: EventKind::End });
+        }
+        evs.push(Event { t_ns: 42, kind: EventKind::Counter { name: "flop_nnz", value: 123.5 } });
+        evs.push(Event {
+            t_ns: u64::MAX, // extreme timestamp bit pattern survives the f64 ride
+            kind: EventKind::Counter { name: "dlb.outstanding", value: -0.0 },
+        });
+        evs
+    }
+
+    fn assert_events_eq(a: &[Event], b: &[Event]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.t_ns, y.t_ns);
+            match (&x.kind, &y.kind) {
+                (EventKind::Begin(s1), EventKind::Begin(s2)) => assert_eq!(s1, s2),
+                (EventKind::End, EventKind::End) => {}
+                (
+                    EventKind::Counter { name: n1, value: v1 },
+                    EventKind::Counter { name: n2, value: v2 },
+                ) => {
+                    assert_eq!(n1, n2);
+                    assert_eq!(v1.to_bits(), v2.to_bits(), "counter value must be bit-preserved");
+                }
+                (k1, k2) => panic!("kind mismatch: {k1:?} vs {k2:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn every_event_kind_roundtrips() {
+        let evs = all_kinds();
+        let wire = encode_streams(&evs, &[]);
+        let (main, lanes) = decode_streams(&wire);
+        assert_events_eq(&evs, &main);
+        assert!(lanes.is_empty());
+    }
+
+    #[test]
+    fn lane_streams_roundtrip() {
+        let main = vec![Event { t_ns: 1, kind: EventKind::Begin(Span::CaExchange) }];
+        let l1 = vec![
+            Event { t_ns: 2, kind: EventKind::Begin(Span::InnerTask { group: 0, power: 1 }) },
+            Event { t_ns: 3, kind: EventKind::End },
+        ];
+        let l3: Vec<Event> = Vec::new();
+        let wire = encode_streams(&main, &[(1, l1.clone()), (3, l3.clone())]);
+        let (m, lanes) = decode_streams(&wire);
+        assert_events_eq(&main, &m);
+        assert_eq!(lanes.len(), 2);
+        assert_eq!(lanes[0].0, 1);
+        assert_events_eq(&l1, &lanes[0].1);
+        assert_eq!(lanes[1].0, 3);
+        assert!(lanes[1].1.is_empty());
+    }
+
+    #[test]
+    fn empty_harvest_roundtrips() {
+        let wire = encode_streams(&[], &[]);
+        let (m, lanes) = decode_streams(&wire);
+        assert!(m.is_empty());
+        assert!(lanes.is_empty());
+    }
+
+    #[test]
+    fn counter_vocabulary_is_closed() {
+        // Every production counter name must be in the table — grep for
+        // `.counter(` when this fails.
+        for name in COUNTER_NAMES {
+            let ev = Event { t_ns: 0, kind: EventKind::Counter { name, value: 1.0 } };
+            let wire = encode_streams(&[ev], &[]);
+            let (m, _) = decode_streams(&wire);
+            assert!(matches!(m[0].kind, EventKind::Counter { name: n, .. } if n == name));
+        }
+    }
+}

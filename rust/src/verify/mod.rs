@@ -37,6 +37,19 @@
 //! `MpkEngine::builder().verify_plans(true)` (default-on in debug builds)
 //! and the `dlb-mpk verify` CLI subcommand. Verification never runs on the
 //! sweep hot path.
+//!
+//! # Rule IDs are a contract
+//!
+//! Every [`Diagnostic`] carries a [`Rule`] whose [`Rule::id`] string
+//! (`SCHED_BATCH_ROW_OVERLAP`, `COMM_DEADLOCK`, …) is **stable**: CI greps
+//! them, the negative tests assert on them, and external tooling may key
+//! on them — never renumber, rename, or reuse one. The closed vocabulary
+//! is [`Rule::ALL`] (33 rules), documented one-by-one with failure
+//! exemplars in `docs/VERIFY.md`. `dlb-mpk verify --rule <ID>` filters a
+//! report to a single rule ([`Report::retain_rule`]) and the subcommand
+//! exits with a machine-readable code: `0` clean, `1` usage/build error
+//! (e.g. an unknown rule ID), `2` diagnostics found (the JSON report on
+//! stdout lists them).
 
 pub mod alias;
 pub mod comm;
@@ -131,6 +144,53 @@ pub enum Rule {
 }
 
 impl Rule {
+    /// Every rule, in declaration order — the closed diagnostic vocabulary
+    /// (listed with prose in `docs/VERIFY.md`). `dlb-mpk verify --rule ID`
+    /// validates against this table, and the unit tests assert that the
+    /// [`Rule::id`]/[`Rule::parse`] pair is a bijection over it.
+    pub const ALL: [Rule; 33] = [
+        Self::SchedGroupRanges,
+        Self::SchedPowerJump,
+        Self::SchedDepUnmet,
+        Self::SchedIncomplete,
+        Self::SchedBatchMismatch,
+        Self::SchedBatchSameGroup,
+        Self::SchedBatchRowOverlap,
+        Self::SchedBatchAdjLevels,
+        Self::AliasSplitOverlap,
+        Self::AliasSplitGap,
+        Self::AliasRunsMismatch,
+        Self::AliasCaRowsOverlap,
+        Self::CommSelfMessage,
+        Self::CommPeerRange,
+        Self::CommDuplicatePlan,
+        Self::CommSendUnmatched,
+        Self::CommRecvUnmatched,
+        Self::CommLenMismatch,
+        Self::CommPayloadMismatch,
+        Self::CommSendRowRange,
+        Self::CommSlotOverlap,
+        Self::CommSlotGap,
+        Self::CommSlotOwner,
+        Self::CommDeadlock,
+        Self::CommTagReuse,
+        Self::CommNoFinalBarrier,
+        Self::CaExtCoverage,
+        Self::DlbSegCount,
+        Self::DlbSegUnsorted,
+        Self::DlbPartitionOverlap,
+        Self::DlbPartitionGap,
+        Self::DlbPartitionRange,
+        Self::DlbSegForeignSlot,
+    ];
+
+    /// Look up a rule by its stable ID (`"COMM_DEADLOCK"` →
+    /// [`Rule::CommDeadlock`]); `None` for an unknown ID. Inverse of
+    /// [`Rule::id`].
+    pub fn parse(id: &str) -> Option<Rule> {
+        Self::ALL.into_iter().find(|r| r.id() == id)
+    }
+
     /// The stable diagnostic identifier (see the enum docs).
     pub const fn id(self) -> &'static str {
         match self {
@@ -215,6 +275,13 @@ impl Report {
     /// adversarial negative tests assert on).
     pub fn has_rule(&self, id: &str) -> bool {
         self.diags.iter().any(|d| d.rule.id() == id)
+    }
+
+    /// Keep only diagnostics of one rule (the `dlb-mpk verify --rule ID`
+    /// filter). `checks` is left as-is: the analyzers still ran; the caller
+    /// chose to look at one invariant.
+    pub fn retain_rule(&mut self, rule: Rule) {
+        self.diags.retain(|d| d.rule == rule);
     }
 
     pub(crate) fn absorb(&mut self, diags: Vec<Diagnostic>) {
@@ -383,4 +450,37 @@ pub fn debug_check_dlb_rank(r: &crate::distsim::RankLocal, pl: &DlbRankPlan) -> 
 /// Render diagnostics for `debug_assert!` messages.
 pub fn render(diags: &[Diagnostic]) -> String {
     diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("; ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_ids_are_a_bijection_over_all() {
+        let mut seen = std::collections::BTreeSet::new();
+        for r in Rule::ALL {
+            assert!(seen.insert(r.id()), "duplicate rule ID {}", r.id());
+            assert_eq!(Rule::parse(r.id()), Some(r), "parse must invert id for {}", r.id());
+        }
+        assert_eq!(seen.len(), Rule::ALL.len());
+        assert_eq!(Rule::parse("NOT_A_RULE"), None);
+        assert_eq!(Rule::parse("comm_deadlock"), None, "IDs are case-sensitive");
+    }
+
+    #[test]
+    fn retain_rule_filters_diagnostics_only() {
+        let mut rep = Report::default();
+        rep.absorb(vec![
+            Diagnostic::new(Rule::CommDeadlock, Some(1), "stall".into()),
+            Diagnostic::new(Rule::SchedPowerJump, None, "jump".into()),
+            Diagnostic::new(Rule::CommDeadlock, Some(2), "stall".into()),
+        ]);
+        rep.retain_rule(Rule::CommDeadlock);
+        assert_eq!(rep.diags.len(), 2);
+        assert!(rep.diags.iter().all(|d| d.rule == Rule::CommDeadlock));
+        assert_eq!(rep.checks, 1, "retain_rule must not rewrite the check count");
+        rep.retain_rule(Rule::AliasSplitGap);
+        assert!(rep.is_ok(), "filtering to an untriggered rule empties the report");
+    }
 }

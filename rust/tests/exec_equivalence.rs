@@ -1,19 +1,23 @@
 //! Executor cross-validation: the threaded executor (one OS thread per
-//! rank, real channel halo exchange) must be *bitwise* identical to the
+//! rank, real channel halo exchange) and the socket transport (`SockComm`,
+//! real Unix-domain socket frames) must be *bitwise* identical to the
 //! sequential lockstep simulator — same `powers`, same merged `CommStats`,
-//! same flop counts — for all three MPK variants, across rank counts and
-//! matrix structures. Plus a seeded-random ("proptest-style", see
-//! proptest_invariants.rs) sweep checking the threaded halo exchange
-//! delivers every `SendPlan` row exactly once.
+//! same flop counts — for all three MPK variants, across rank counts,
+//! matrix structures, inner-pool widths, and remainder modes. Plus a
+//! seeded-random ("proptest-style", see proptest_invariants.rs) sweep
+//! checking the threaded halo exchange delivers every `SendPlan` row
+//! exactly once.
 
 use dlb_mpk::distsim::{merge_rank_stats, CommStats, DistMatrix};
-use dlb_mpk::engine::{MpkEngine, Variant};
-use dlb_mpk::exec::{self, sim_comms, thread_comms, Communicator, ExecutorKind};
+use dlb_mpk::engine::{BackendSpec, MpkEngine, Variant};
+use dlb_mpk::exec::{self, sim_comms, sock_comms, thread_comms, Communicator, ExecutorKind, RankRun};
+use dlb_mpk::inner::InnerExec;
 use dlb_mpk::matrix::{gen, CsrMatrix};
 use dlb_mpk::mpk::dlb::{self, DlbOptions, Recurrence};
-use dlb_mpk::mpk::{ca, trad_mpk, NativeBackend, SpmvBackend};
+use dlb_mpk::mpk::{ca, trad, trad_mpk, NativeBackend, SpmvBackend};
 use dlb_mpk::partition::{partition, Method};
 use dlb_mpk::util::rng::Rng;
+use std::time::Duration;
 
 const RANKS: [usize; 4] = [1, 2, 4, 7];
 
@@ -451,4 +455,201 @@ fn remainder_segment_permutations_are_bitwise_identical() {
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// SockComm: the process-per-rank socket transport, exercised in-process.
+// `sock_comms` builds one connected endpoint per rank over real Unix-domain
+// sockets in a temp dir; each rank then runs the same kernel functions the
+// multi-process engine path runs. Results must be bitwise identical to the
+// lockstep simulator. (True multi-process coverage — separate address
+// spaces, launcher, rank death — lives in sock_proc.rs.)
+// ---------------------------------------------------------------------------
+
+/// Run `f(rank, comm)` per rank over a real socket mesh, one thread per
+/// endpoint, in a unique temp dir removed afterwards.
+fn sock_ranks<F>(n: usize, f: F) -> Vec<(RankRun, CommStats)>
+where
+    F: Fn(usize, dlb_mpk::exec::SockComm) -> (RankRun, CommStats) + Sync,
+{
+    static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "dlb-mpk-eqsock-{}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let comms = sock_comms(&dir, n, Duration::from_secs(20)).expect("socket rendezvous");
+    let f = &f;
+    let outs = std::thread::scope(|s| {
+        let joins: Vec<_> = comms
+            .into_iter()
+            .enumerate()
+            .map(|(i, c)| s.spawn(move || f(i, c)))
+            .collect();
+        joins
+            .into_iter()
+            .map(|j| j.join().expect("rank thread panicked"))
+            .collect()
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+    outs
+}
+
+/// The deterministic rank-ascending merge (mirrors the executors'
+/// crate-internal `assemble`).
+fn merge_outs(
+    d: &DistMatrix,
+    p_m: usize,
+    outs: &[(RankRun, CommStats)],
+) -> (Vec<Vec<f64>>, CommStats, usize) {
+    let per_rank: Vec<CommStats> = outs.iter().map(|(_, s)| s.clone()).collect();
+    let comm = merge_rank_stats(&per_rank);
+    let flop_nnz = outs.iter().map(|(run, _)| run.flop_nnz).sum();
+    let mut powers = vec![vec![0.0; d.n_global]; p_m];
+    for (r, (run, _)) in d.ranks.iter().zip(outs) {
+        for (pw, ys) in powers.iter_mut().zip(run.ys.iter().skip(1)) {
+            for (l, &g) in r.owned.iter().enumerate() {
+                pw[g] = ys[l];
+            }
+        }
+    }
+    (powers, comm, flop_nnz)
+}
+
+/// TRAD / CA / DLB (sync and async remainder) × inner pools of 1 and 2
+/// threads over the socket transport: bitwise-identical powers, identical
+/// merged `CommStats`, identical flop counts vs the sequential simulator.
+#[test]
+fn sim_and_sockets_agree_for_all_variants() {
+    let a = gen::stencil_2d_5pt(13, 11);
+    let x = test_vector(a.n_rows());
+    let p_m = 3;
+    for np in [2usize, 4] {
+        let part = partition(&a, np, Method::Block);
+        let d = DistMatrix::build(&a, &part);
+        let xs = d.scatter(&x);
+        // Sync-remainder DLB is the baseline for both remainder modes (the
+        // async pipeline's bitwise claim, cf. async_remainder_matches_sync).
+        let dlb_base = {
+            let opts = DlbOptions { cache_bytes: 8 << 10, s_m: 50, async_remainder: false };
+            dlb::execute(&dlb::plan(&d, p_m, &opts), &x, &mut NativeBackend)
+        };
+        for inner_k in [1usize, 2] {
+            // TRAD
+            let sim = trad_mpk(&d, &x, p_m, &mut NativeBackend);
+            let outs = sock_ranks(np, |i, mut c| {
+                let mut backend = NativeBackend;
+                let mut inner = InnerExec::new(inner_k, i, &BackendSpec::Native, None);
+                let run = trad::trad_rank(
+                    &d.ranks[i],
+                    &xs[i],
+                    None,
+                    p_m,
+                    Recurrence::Power,
+                    &mut c,
+                    &mut backend,
+                    &mut inner,
+                );
+                let st = c.stats().clone();
+                (run, st)
+            });
+            let (powers, comm, flop) = merge_outs(&d, p_m, &outs);
+            let tag = format!("sock trad np={np} inner={inner_k}");
+            assert_bitwise(&sim.powers, &powers, &tag);
+            assert_eq!(sim.comm, comm, "{tag} stats");
+            assert_eq!(sim.flop_nnz, flop, "{tag} flops");
+
+            // DLB, sync and async remainder
+            for async_rem in [false, true] {
+                let opts =
+                    DlbOptions { cache_bytes: 8 << 10, s_m: 50, async_remainder: async_rem };
+                let plan = dlb::plan(&d, p_m, &opts);
+                let outs = sock_ranks(np, |i, mut c| {
+                    let mut backend = NativeBackend;
+                    let mut inner = InnerExec::new(inner_k, i, &BackendSpec::Native, None);
+                    let run = dlb::dlb_rank(
+                        &d.ranks[i],
+                        &plan.ranks[i],
+                        p_m,
+                        &xs[i],
+                        None,
+                        Recurrence::Power,
+                        &mut c,
+                        &mut backend,
+                        &mut inner,
+                    );
+                    let st = c.stats().clone();
+                    (run, st)
+                });
+                let (powers, comm, flop) = merge_outs(&d, p_m, &outs);
+                let tag = format!("sock dlb np={np} inner={inner_k} async={async_rem}");
+                assert_bitwise(&dlb_base.powers, &powers, &tag);
+                assert_eq!(dlb_base.comm, comm, "{tag} stats");
+                assert_eq!(dlb_base.flop_nnz, flop, "{tag} flops");
+            }
+
+            // CA
+            let sim = ca::ca_mpk_with(&a, &d, &x, p_m);
+            let plan = ca::ca_exec_plan(&a, &d, p_m);
+            let outs = sock_ranks(np, |i, mut c| {
+                let mut inner = InnerExec::new(inner_k, i, &BackendSpec::Native, None);
+                let run = ca::ca_rank(
+                    &a,
+                    &d.ranks[i],
+                    &plan.sends[i],
+                    &plan.recvs[i],
+                    &plan.ext[i],
+                    &xs[i],
+                    p_m,
+                    &mut c,
+                    &mut inner,
+                );
+                let st = c.stats().clone();
+                (run, st)
+            });
+            let (powers, comm, flop) = merge_outs(&d, p_m, &outs);
+            let tag = format!("sock ca np={np} inner={inner_k}");
+            assert_bitwise(&sim.result.powers, &powers, &tag);
+            assert_eq!(sim.result.comm, comm, "{tag} stats");
+            assert_eq!(sim.result.flop_nnz, flop, "{tag} flops");
+        }
+    }
+}
+
+/// Chebyshev recurrence (`x_m1 = Some`) over sockets: the three-term
+/// update must also be transport-invariant.
+#[test]
+fn sim_and_sockets_agree_on_chebyshev() {
+    use dlb_mpk::mpk::trad::trad_recurrence;
+    let a = gen::stencil_2d_5pt(12, 9);
+    let n = a.n_rows();
+    let x = test_vector(n);
+    let xm1: Vec<f64> = (0..n).map(|i| ((i * 13 % 29) as f64) / 29.0).collect();
+    let np = 3;
+    let part = partition(&a, np, Method::Block);
+    let d = DistMatrix::build(&a, &part);
+    let xs = d.scatter(&x);
+    let xm1s = d.scatter(&xm1);
+    let p_m = 3;
+    let sim = trad_recurrence(&d, &x, Some(&xm1), p_m, Recurrence::Chebyshev, &mut NativeBackend);
+    let outs = sock_ranks(np, |i, mut c| {
+        let mut backend = NativeBackend;
+        let mut inner = InnerExec::serial();
+        let run = trad::trad_rank(
+            &d.ranks[i],
+            &xs[i],
+            Some(&xm1s[i]),
+            p_m,
+            Recurrence::Chebyshev,
+            &mut c,
+            &mut backend,
+            &mut inner,
+        );
+        let st = c.stats().clone();
+        (run, st)
+    });
+    let (powers, comm, _) = merge_outs(&d, p_m, &outs);
+    assert_bitwise(&sim.powers, &powers, "sock cheb trad");
+    assert_eq!(sim.comm, comm, "sock cheb trad stats");
 }

@@ -1,0 +1,105 @@
+//! Multi-process oracle for the SockComm transport: drives the real
+//! `dlb-mpk` binary through the `launch` subcommand (separate OS process
+//! per rank, Unix-domain socket halo exchange) and byte-compares `sweep`
+//! dumps against a sequential-simulator run of the identical
+//! configuration — the dump format deliberately excludes everything
+//! executor-dependent, so the files must be **byte-identical**. Also
+//! proves the failure-beats-deadlock rule: a rank dying mid-run makes the
+//! whole launch fail fast instead of hanging the surviving peers.
+
+use std::path::PathBuf;
+use std::process::Command;
+use std::time::{Duration, Instant};
+
+const MATRIX: &str = "stencil2d:24,20";
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_dlb-mpk")
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("dlb-mpk-sockproc-{}-{name}", std::process::id()))
+}
+
+/// Run the binary, asserting success and surfacing its output on failure.
+fn run_ok(args: &[&str]) {
+    let out = Command::new(bin()).args(args).output().expect("spawn dlb-mpk");
+    assert!(
+        out.status.success(),
+        "dlb-mpk {args:?} failed ({}):\n--- stdout ---\n{}\n--- stderr ---\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr),
+    );
+}
+
+/// TRAD / CA / DLB (plus inner-threaded and async-remainder DLB shapes)
+/// under `launch --np 2`: the processes-executor dump must match the sim
+/// dump byte for byte (powers are hex-encoded f64 bit patterns, so this
+/// is a bitwise claim about every value of every power).
+#[test]
+fn process_sweeps_are_byte_identical_to_sim() {
+    let cases: [(&str, &[&str]); 5] = [
+        ("trad", &[]),
+        ("ca", &[]),
+        ("dlb", &[]),
+        ("dlb", &["--inner-threads", "2"]),
+        ("dlb", &["--async-remainder"]),
+    ];
+    for (i, (variant, extra)) in cases.iter().enumerate() {
+        let sim_out = tmp(&format!("sim-{i}.json"));
+        let proc_out = tmp(&format!("proc-{i}.json"));
+        let common = ["sweep", "--matrix", MATRIX, "--ranks", "2", "--pm", "3", "--variant", variant];
+
+        let mut sim_args: Vec<&str> = common.to_vec();
+        sim_args.extend(*extra);
+        sim_args.extend(["--executor", "sim", "--out", sim_out.to_str().unwrap()]);
+        run_ok(&sim_args);
+
+        let mut proc_args: Vec<&str> = vec!["launch", "--np", "2", "--"];
+        proc_args.extend(common);
+        proc_args.extend(*extra);
+        proc_args.extend(["--executor", "processes", "--out", proc_out.to_str().unwrap()]);
+        run_ok(&proc_args);
+
+        let sim = std::fs::read(&sim_out).expect("sim dump written");
+        let proc = std::fs::read(&proc_out).expect("process dump written (by rank 0)");
+        assert!(!sim.is_empty(), "case {i} ({variant} {extra:?}): empty sim dump");
+        assert_eq!(
+            sim, proc,
+            "case {i} ({variant} {extra:?}): sim and processes dumps differ"
+        );
+        let _ = std::fs::remove_file(&sim_out);
+        let _ = std::fs::remove_file(&proc_out);
+    }
+}
+
+/// Rank failure must not deadlock the world: `--die-rank 1` makes rank 1
+/// exit(3) after the socket rendezvous, so rank 0 is left blocking on its
+/// halo recv. The EOF (or, at worst, the per-operation timeout) must turn
+/// that into a loud launch failure, quickly.
+#[test]
+fn dead_rank_fails_fast_without_hanging() {
+    let out_path = tmp("die.json");
+    let start = Instant::now();
+    let out = Command::new(bin())
+        .args([
+            "launch", "--np", "2", "--timeout-ms", "3000", "--",
+            "sweep", "--matrix", MATRIX, "--ranks", "2", "--pm", "3",
+            "--executor", "processes", "--die-rank", "1",
+            "--out", out_path.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn dlb-mpk launch");
+    let elapsed = start.elapsed();
+    assert!(
+        !out.status.success(),
+        "launch with a dead rank must fail, got success:\n{}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    assert!(
+        elapsed < Duration::from_secs(20),
+        "dead rank took {elapsed:?} to surface — that is a hang, not a failure"
+    );
+    let _ = std::fs::remove_file(&out_path);
+}
